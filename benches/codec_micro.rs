@@ -1,0 +1,91 @@
+//! Codec microbenchmarks: Golomb encode/decode throughput, eq.-5 analytic
+//! vs measured bits/position across sparsity levels, and the L3 perf
+//! target (DESIGN.md §8: >= 100 Mbit/s Golomb encode on one core).
+//!
+//!     cargo bench --bench codec_micro
+
+use std::time::Instant;
+
+use sbc::codec::bitio::{BitReader, BitWriter};
+use sbc::codec::golomb;
+use sbc::metrics::render_table;
+use sbc::util::rng::Rng;
+
+fn random_positions(n: usize, p: f64, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..n).filter(|_| rng.next_f64() < p).map(|i| i as u32).collect()
+}
+
+fn main() {
+    println!("== Golomb codec: eq. 5 analytic vs measured ==\n");
+    let n = 4_000_000;
+    let mut rows = Vec::new();
+    for &p in &[0.0005, 0.001, 0.005, 0.01, 0.05] {
+        let positions = random_positions(n, p, 17);
+        let b = golomb::optimal_b(p);
+        let mut w = BitWriter::with_capacity(n / 64);
+        golomb::encode_positions(&mut w, &positions, b);
+        let (bytes, bits) = w.finish();
+        let measured = bits as f64 / positions.len() as f64;
+        let analytic = golomb::expected_bits_per_position(p);
+
+        // throughput
+        let t0 = Instant::now();
+        let reps = 5;
+        for _ in 0..reps {
+            let mut w = BitWriter::with_capacity(n / 64);
+            golomb::encode_positions(&mut w, &positions, b);
+            std::hint::black_box(&w);
+        }
+        let enc_s = t0.elapsed().as_secs_f64() / reps as f64;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let mut r = BitReader::new(&bytes, bits);
+            let got = golomb::decode_positions(&mut r, positions.len(), b).unwrap();
+            std::hint::black_box(&got);
+        }
+        let dec_s = t0.elapsed().as_secs_f64() / reps as f64;
+        rows.push(vec![
+            format!("{p}"),
+            format!("{b}"),
+            format!("{analytic:.2}"),
+            format!("{measured:.2}"),
+            format!("{:.0}", bits as f64 / enc_s / 1e6),
+            format!("{:.0}", bits as f64 / dec_s / 1e6),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &["p", "b*", "bits/pos eq.5", "measured", "enc Mbit/s", "dec Mbit/s"],
+            &rows
+        )
+    );
+    println!("(L3 perf target: encode >= 100 Mbit/s single-core — DESIGN.md §8)");
+
+    println!("\n== top-k selection strategies (1M elements, k = 10k) ==\n");
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = (0..1_000_000).map(|_| rng.normal() * rng.next_f32().powi(4)).collect();
+    let k = 10_000;
+    let mut rows = Vec::new();
+    let time_it = |f: &mut dyn FnMut() -> usize| {
+        let t0 = Instant::now();
+        let mut kept = 0;
+        for _ in 0..3 {
+            kept = f();
+        }
+        (t0.elapsed().as_secs_f64() / 3.0 * 1e3, kept)
+    };
+    let (t_exact, k_exact) = time_it(&mut || sbc::compression::topk::topk_exact(&x, k).len());
+    let (t_hist, k_hist) = time_it(&mut || {
+        let (tp, tn, _) = sbc::compression::topk::hist_thresholds(&x, k as u32);
+        x.iter().filter(|&&v| (v > 0.0 && v >= tp) || (v < 0.0 && -v >= tn)).count()
+    });
+    let mut srng = Rng::new(6);
+    let (t_samp, k_samp) =
+        time_it(&mut || sbc::compression::topk::topk_sampled(&x, k, 10_000, &mut srng).len());
+    rows.push(vec!["exact quickselect".into(), format!("{t_exact:.1}"), format!("{k_exact}")]);
+    rows.push(vec!["bit-pattern hist".into(), format!("{t_hist:.1}"), format!("{k_hist}")]);
+    rows.push(vec!["sampled (DGC)".into(), format!("{t_samp:.1}"), format!("{k_samp}")]);
+    println!("{}", render_table(&["strategy", "ms", "kept"], &rows));
+}

@@ -1,0 +1,71 @@
+//! Paper Fig. 3 (and Fig. 9's grid): validation error over the 2-D space
+//! of temporal sparsity (communication delay n) × gradient sparsity (p),
+//! at a fixed iteration budget. The paper's observation: error is roughly
+//! constant along the off-diagonals (constant total sparsity n/p product),
+//! forming a triangular feasible region.
+//!
+//! Runs on the native backend (hundreds of full trainings).
+//!
+//!     cargo bench --bench fig3_sparsity_grid
+//!     env: SBC_BENCH_SCALE, SBC_FIG3_SEEDS (default 2)
+
+use sbc::compression::registry::{Method, MethodConfig, SelectionCfg};
+use sbc::coordinator::schedule::LrSchedule;
+use sbc::coordinator::trainer::{TrainConfig, Trainer};
+use sbc::sgd::NativeMlpBackend;
+use sbc::util::scaled;
+use std::fmt::Write as _;
+
+fn main() {
+    let delays = [1usize, 3, 10, 30, 100];
+    let ps = [1.0f64, 0.1, 0.01, 0.001, 0.0003];
+    let iterations = scaled(300, 200);
+    let seeds: u64 =
+        std::env::var("SBC_FIG3_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(2);
+
+    println!("== Fig. 3: error over temporal (rows) x gradient (cols) sparsity ==");
+    println!("   iterations {iterations}, {seeds} seeds, native digits backend\n");
+
+    let mut csv = String::from("delay,p,total_sparsity,error\n");
+    println!(
+        "{:>8} | {}",
+        "delay\\p",
+        ps.iter().map(|p| format!("{:>8}", p)).collect::<Vec<_>>().join(" ")
+    );
+    println!("{}", "-".repeat(10 + ps.len() * 9));
+    for &delay in &delays {
+        let mut cells = Vec::new();
+        for &p in &ps {
+            let mut err_sum = 0.0f64;
+            for seed in 0..seeds {
+                let method = if p >= 1.0 {
+                    MethodConfig::fedavg(delay).method
+                } else {
+                    Method::Sbc { p, selection: SelectionCfg::Exact }
+                };
+                let mut mc = MethodConfig::of(method, delay);
+                mc.delay = delay;
+                let mut cfg = TrainConfig::new(
+                    "digits16",
+                    mc,
+                    iterations,
+                    LrSchedule::step(0.1, 0.1, vec![iterations / 2]),
+                );
+                cfg.seed = 42 + seed;
+                cfg.eval_every_rounds = 1_000_000;
+                cfg.eval_batches = 8;
+                let mut backend = NativeMlpBackend::digits_small(cfg.clients, cfg.seed);
+                let r = Trainer::new(&mut backend, cfg).run();
+                err_sum += 1.0 - r.log.final_metric as f64;
+            }
+            let err = err_sum / seeds as f64;
+            let _ = writeln!(csv, "{delay},{p},{},{err:.4}", p / delay as f64);
+            cells.push(format!("{:>8.3}", err));
+        }
+        println!("{:>8} | {}", delay, cells.join(" "));
+    }
+    std::fs::create_dir_all("results").unwrap();
+    std::fs::write("results/fig3_grid.csv", csv).unwrap();
+    println!("\nwrote results/fig3_grid.csv");
+    println!("(paper shape: near-constant error along off-diagonals; the top-left\n triangle — low total sparsity — is the feasible region)");
+}

@@ -1,0 +1,77 @@
+//! L3 hot-path profile: per-stage cost of one coordinator round at
+//! paper-scale parameter counts (compress -> encode -> decode -> densify
+//! -> aggregate), the numbers behind EXPERIMENTS.md §Perf.
+//!
+//!     cargo bench --bench hotpath
+
+use std::time::Instant;
+
+use sbc::codec::message::{self, PosCodec};
+use sbc::compression::registry::MethodConfig;
+use sbc::coordinator::aggregation::{aggregate, AggRule};
+use sbc::metrics::render_table;
+use sbc::model::TensorLayout;
+use sbc::util::rng::Rng;
+
+fn main() {
+    println!("== coordinator hot path: per-stage cost per client round ==\n");
+    let mut rows = Vec::new();
+    for &n in &[266_610usize, 1_304_552, 9_968_000] {
+        let mut rng = Rng::new(9);
+        let delta: Vec<f32> = (0..n).map(|_| rng.normal() * rng.next_f32().powi(4)).collect();
+        let layout = TensorLayout::flat(n);
+        let mut compressor = MethodConfig::sbc2().build(0);
+
+        let reps = if n > 5_000_000 { 3 } else { 10 };
+        let time = |f: &mut dyn FnMut()| {
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                f();
+            }
+            t0.elapsed().as_secs_f64() / reps as f64 * 1e3
+        };
+
+        let mut msg = None;
+        let t_compress = time(&mut || {
+            msg = Some(compressor.compress(&delta, &layout, 0));
+        });
+        let msg = msg.unwrap();
+        let mut enc = None;
+        let t_encode = time(&mut || {
+            enc = Some(message::encode(&msg, PosCodec::Golomb));
+        });
+        let (bytes, bits) = enc.unwrap();
+        let mut dec = None;
+        let t_decode = time(&mut || {
+            dec = Some(message::decode(&bytes, bits).unwrap());
+        });
+        let decoded = dec.unwrap();
+        let mut dense = None;
+        let t_densify = time(&mut || {
+            dense = Some(decoded.to_dense(&layout, 1.0));
+        });
+        let d = dense.unwrap();
+        let updates = vec![d.clone(), d.clone(), d.clone(), d];
+        let t_agg = time(&mut || {
+            std::hint::black_box(aggregate(&updates, AggRule::Mean));
+        });
+
+        rows.push(vec![
+            format!("{:.1}M", n as f64 / 1e6),
+            format!("{t_compress:.2}"),
+            format!("{t_encode:.2}"),
+            format!("{t_decode:.2}"),
+            format!("{t_densify:.2}"),
+            format!("{t_agg:.2}"),
+            format!("{:.2}", t_compress + t_encode + t_decode + t_densify + t_agg / 4.0),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &["params", "compress ms", "encode ms", "decode ms", "densify ms", "agg(4) ms", "total/client ms"],
+            &rows
+        )
+    );
+    println!("\n(target: coordinator overhead < 10% of a training step — steps run\n 100-1000 ms at these scales on this host, so total/client must stay <~20 ms)");
+}

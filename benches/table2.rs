@@ -1,0 +1,75 @@
+//! Paper Table II — final accuracy/perplexity + measured compression for
+//! {Baseline, Gradient Dropping, FedAvg, SBC(1), SBC(2), SBC(3)} across
+//! the benchmark models, through the full PJRT stack.
+//!
+//! Iteration budgets are sandbox-scaled (DESIGN.md §2); multiply with
+//! SBC_BENCH_SCALE for longer runs. Results are appended to
+//! results/table2.csv.
+//!
+//!     cargo bench --bench table2
+//!     SBC_BENCH_SCALE=5 SBC_TABLE2_MODELS=lenet,cifarcnn cargo bench --bench table2
+
+use sbc::config::presets;
+use sbc::coordinator::trainer::Trainer;
+use sbc::metrics::render_table;
+use sbc::model::manifest::Manifest;
+use sbc::model::Task;
+use sbc::runtime::PjrtBackend;
+use sbc::util::scaled;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let models: Vec<String> = std::env::var("SBC_TABLE2_MODELS")
+        .unwrap_or_else(|_| "lenet,cifarcnn,charlm,wordlm".into())
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    // sandbox budgets (paper budgets: lenet 2000, cifar 60000, lms 16-60k);
+    // delay-100 methods run at least one full round of 100 local iterations
+    let budget = |m: &str| match m {
+        "lenet" => scaled(120, 100),
+        "cifarcnn" => scaled(100, 100),
+        "charlm" => scaled(100, 100),
+        "wordlm" => scaled(60, 60),
+        _ => scaled(100, 100),
+    };
+
+    println!("== Table II: final metric + measured compression (PJRT stack) ==");
+    println!("   budgets: {:?}\n", models.iter().map(|m| (m.as_str(), budget(m))).collect::<Vec<_>>());
+
+    let mut rows = Vec::new();
+    for model in &models {
+        let spec = manifest.model(model)?;
+        let is_lm = spec.task == Task::Lm;
+        let iterations = budget(model);
+        // compile the model's graphs once; reuse across all six methods
+        let mut backend = PjrtBackend::load(&manifest, model, 4, 42)?;
+        for method in presets::table2_methods() {
+            let label = method.label();
+            let mut cfg = presets::preset(model, method);
+            cfg.iterations = iterations;
+            cfg.eval_every_rounds = 1_000_000; // final eval only
+            cfg.eval_batches = 4;
+            let r = Trainer::new(&mut backend, cfg).run();
+            eprintln!(
+                "  {model:9} {label:22} metric {:8.4} compression x{:<9.0} ({:.0}s)",
+                r.log.final_metric, r.log.compression, r.log.wall_s
+            );
+            rows.push(vec![
+                model.clone(),
+                label,
+                if is_lm { "ppl".into() } else { "acc".into() },
+                format!("{:.4}", r.log.final_metric),
+                format!("x{:.0}", r.log.compression),
+                format!("{:.3}", r.comm.upstream_bits as f64 / 8e6 / 4.0),
+            ]);
+            r.log.append_csv("results/table2.csv")?;
+        }
+    }
+    println!(
+        "\n{}",
+        render_table(&["model", "method", "metric", "final", "compression", "up MB/client"], &rows)
+    );
+    println!("(paper shape: all methods within ~1% of baseline accuracy; compression\n ordering GD < SBC(1) < SBC(2) < SBC(3), with SBC(3) in the x10^4 band)");
+    Ok(())
+}

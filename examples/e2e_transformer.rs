@@ -1,0 +1,74 @@
+//! End-to-end validation driver (DESIGN.md §5 row E2E): a multi-million-
+//! parameter decoder-only transformer (TinyGPT, ~10M params) trained for a
+//! few hundred distributed steps on the Shakespeare-style character corpus
+//! with SBC compression, through the full stack:
+//!
+//!   Pallas kernels  -> lowered into ->  JAX train-step HLO
+//!   Rust coordinator -> PJRT executes the HLO, compresses updates with
+//!   SBC, Golomb-encodes them onto the (simulated) wire, aggregates.
+//!
+//! The loss curve is printed and written to results/e2e_transformer.csv —
+//! the record referenced by EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example e2e_transformer
+//!     env: SBC_E2E_ITERS (default 300), SBC_E2E_MODEL (default tinygpt)
+
+use sbc::compression::registry::MethodConfig;
+use sbc::coordinator::schedule::LrSchedule;
+use sbc::coordinator::trainer::{TrainConfig, Trainer};
+use sbc::model::manifest::Manifest;
+use sbc::runtime::PjrtBackend;
+use sbc::util::timer::TIMERS;
+
+fn main() -> anyhow::Result<()> {
+    let iterations: usize =
+        std::env::var("SBC_E2E_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let model = std::env::var("SBC_E2E_MODEL").unwrap_or_else(|_| "tinygpt".into());
+    let manifest = Manifest::load("artifacts")?;
+
+    let method = MethodConfig::sbc2(); // delay 10, p = 1%
+    let mut cfg = TrainConfig::new(&model, method, iterations, LrSchedule::constant(3e-4));
+    cfg.eval_every_rounds = 2;
+    cfg.eval_batches = 2;
+    cfg.verbose = true;
+
+    let mut backend = PjrtBackend::load(&manifest, &model, cfg.clients, cfg.seed)?;
+    println!(
+        "== e2e: {} ({:.1}M params) x {} clients x {} iterations, {} ==",
+        model,
+        backend.spec.n_params as f64 / 1e6,
+        cfg.clients,
+        iterations,
+        cfg.method.label()
+    );
+
+    let r = Trainer::new(&mut backend, cfg.clone()).run();
+
+    std::fs::create_dir_all("results")?;
+    let csv = "results/e2e_transformer.csv";
+    let _ = std::fs::remove_file(csv);
+    r.log.append_csv(csv)?;
+
+    let first = r.log.points.first().unwrap();
+    let last = r.log.points.last().unwrap();
+    println!("\nloss curve: {} points written to {csv}", r.log.points.len());
+    println!(
+        "train loss {:.3} -> {:.3} | eval ppl {:.1} -> {:.1} | compression x{:.0} | upstream {:.2} MB/client | wall {:.0}s",
+        first.train_loss,
+        last.train_loss,
+        first.metric,
+        last.metric,
+        r.log.compression,
+        last.client_up_bits as f64 / 8e6,
+        r.log.wall_s
+    );
+    eprint!("{}", TIMERS.report());
+    assert!(
+        last.train_loss < first.train_loss,
+        "transformer failed to learn: {} -> {}",
+        first.train_loss,
+        last.train_loss
+    );
+    println!("E2E OK — all three layers compose.");
+    Ok(())
+}

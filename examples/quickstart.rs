@@ -1,0 +1,49 @@
+//! Quickstart: train a small model distributedly with and without Sparse
+//! Binary Compression, and compare accuracy + measured communication.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the pure-Rust backend so it runs in seconds with no artifacts;
+//! see `examples/federated_edge.rs` for the PJRT (AOT-artifact) path.
+
+use sbc::compression::registry::MethodConfig;
+use sbc::coordinator::schedule::LrSchedule;
+use sbc::coordinator::trainer::{TrainConfig, Trainer};
+use sbc::metrics::render_table;
+use sbc::sgd::NativeMlpBackend;
+
+fn main() {
+    println!("== SBC quickstart: 4-client DSGD on a synthetic digits task ==\n");
+    let methods = vec![
+        MethodConfig::baseline(),
+        MethodConfig::fedavg(100),
+        MethodConfig::gradient_dropping(),
+        MethodConfig::sbc1(),
+        MethodConfig::sbc2(),
+        MethodConfig::sbc3(),
+    ];
+
+    let iterations = 400;
+    let mut rows = Vec::new();
+    for method in methods {
+        let label = method.label();
+        let mut cfg =
+            TrainConfig::new("digits16", method, iterations, LrSchedule::constant(0.1));
+        cfg.eval_every_rounds = 1_000_000; // final eval only
+        cfg.eval_batches = 8;
+        let mut backend = NativeMlpBackend::digits_small(cfg.clients, cfg.seed);
+        let r = Trainer::new(&mut backend, cfg).run();
+        rows.push(vec![
+            label,
+            format!("{:.3}", r.log.final_metric),
+            format!("x{:.0}", r.log.compression),
+            format!("{:.4}", r.comm.upstream_bits as f64 / 8e6 / 4.0),
+            format!("{:.2}", r.log.wall_s),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(&["method", "accuracy", "compression", "upstream MB/client", "wall s"], &rows)
+    );
+    println!("(paper: SBC trades temporal vs gradient sparsity; all methods should\n reach similar accuracy while SBC cuts upstream bits by 3-4 orders)");
+}

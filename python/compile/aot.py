@@ -1,0 +1,88 @@
+"""AOT exporter: lower every model's graphs to HLO text + manifest.json.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Usage:  cd python && python -m compile.aot --outdir ../artifacts
+Env:    SBC_AOT_MODELS=mlp,lenet  overrides the exported model set.
+
+Python runs only here, at build time; the Rust binary is self-contained
+once ``artifacts/`` exists.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import build_graphs
+from .models import DEFAULT_EXPORT, REGISTRY
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_model(model, outdir: str) -> dict:
+    entry = {
+        "n_params": model.n_params,
+        "opt_size": model.opt_size,
+        "optimizer": model.optimizer,
+        "task": model.task,
+        "x_shape": list(model.x_shape),
+        "x_dtype": model.x_dtype,
+        "y_shape": list(model.y_shape),
+        "y_dtype": model.y_dtype,
+        "meta": model.meta,
+        "tensors": [{"name": t.name, "shape": list(t.shape)} for t in model.params],
+        "graphs": {},
+    }
+    for gname, (fn, args) in build_graphs(model).items():
+        t0 = time.time()
+        fname = f"{model.name}.{gname}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        text = to_hlo_text(fn, args)
+        with open(path, "w") as f:
+            f.write(text)
+        entry["graphs"][gname] = fname
+        print(
+            f"  {fname:34s} {len(text)/1e6:7.2f} MB  ({time.time()-t0:5.1f}s)",
+            flush=True,
+        )
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--models", default=os.environ.get("SBC_AOT_MODELS", ""))
+    args = ap.parse_args()
+
+    names = [n for n in args.models.split(",") if n] or DEFAULT_EXPORT
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest = {"format": 1, "models": {}}
+    for name in names:
+        model = REGISTRY[name]
+        print(f"[aot] {name}: {model.n_params/1e6:.2f}M params", flush=True)
+        manifest["models"][name] = export_model(model, args.outdir)
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote manifest with {len(names)} models to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

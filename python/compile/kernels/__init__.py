@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the SBC compression hot-spot.
+
+Public surface:
+  sbc.sbc_compress_pallas   — composed 4-pass compression
+  ref.sbc_compress_exact    — sort-based semantic oracle (Alg. 2)
+  ref.sbc_compress_hist     — pure-jnp histogram oracle (kernel math)
+"""
+from . import binarize, ref, sbc, topk_hist  # noqa: F401

@@ -1,0 +1,89 @@
+"""Pallas kernels, pass 3+4 of SBC compression: side statistics and the
+elementwise binarization (paper Algorithm 2, lines 3-8).
+
+Pass 3 reduces (sum+, n+, sum-, n-) over the elements that survive each
+side's magnitude threshold; the side decision (mu+ vs mu-) is a 4-element
+jnp epilogue in the composing graph (see ``sbc.py``).  Pass 4 writes the
+dense binarized update ``±mu * mask`` in one tiled elementwise sweep.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .topk_hist import BLOCK
+
+
+def _stats_kernel(x_ref, t_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]
+    tpos = t_ref[0]
+    tneg = t_ref[1]
+    pos_mask = (x > 0) & (x >= tpos)
+    neg_mask = (x < 0) & (-x >= tneg)
+    spos = jnp.sum(jnp.where(pos_mask, x, 0.0))
+    npos = jnp.sum(pos_mask.astype(jnp.float32))
+    sneg = jnp.sum(jnp.where(neg_mask, -x, 0.0))
+    nneg = jnp.sum(neg_mask.astype(jnp.float32))
+    out_ref[...] += jnp.stack([spos, npos, sneg, nneg])
+
+
+def side_stats_pallas(x: jnp.ndarray, tpos: jnp.ndarray, tneg: jnp.ndarray):
+    """(4,) f32: (sum+, n+, sum-, n-) over threshold survivors."""
+    n = x.shape[0]
+    assert n % BLOCK == 0, "pad with pad_flat first"
+    t = jnp.stack([jnp.reshape(tpos, ()), jnp.reshape(tneg, ())])
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((4,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((4,), jnp.float32),
+        interpret=True,
+    )(x, t)
+
+
+def _apply_kernel(x_ref, smu_ref, out_ref):
+    x = x_ref[...]
+    t = smu_ref[0]
+    mu = smu_ref[1]
+    side_pos = smu_ref[2] > 0.5
+    pos_out = jnp.where((x > 0) & (x >= t), mu, 0.0)
+    neg_out = jnp.where((x < 0) & (-x >= t), -mu, 0.0)
+    out_ref[...] = jnp.where(side_pos, pos_out, neg_out)
+
+
+def apply_binarize_pallas(x, t, mu, side_pos):
+    """Dense binarized update: mu on the surviving side, 0 elsewhere."""
+    n = x.shape[0]
+    assert n % BLOCK == 0, "pad with pad_flat first"
+    smu = jnp.stack(
+        [
+            jnp.reshape(t, ()),
+            jnp.reshape(mu, ()),
+            jnp.reshape(side_pos, ()).astype(jnp.float32),
+        ]
+    )
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, smu)

@@ -1,0 +1,193 @@
+"""Pure-jnp reference oracles for the SBC compression kernels.
+
+Two references are provided:
+
+``sbc_compress_exact``
+    Bit-faithful implementation of paper Algorithm 2 using a full sort:
+    keep the fraction-``p`` largest positive and fraction-``p`` most
+    negative entries, compute the mean of each side, zero the weaker side
+    and binarize the stronger side to its mean.  This is the *semantic*
+    oracle — statistically what SBC transmits.
+
+``sbc_compress_hist``
+    The TPU-adapted two-pass histogram/quantile algorithm implemented in
+    plain jnp, with *identical* math to the Pallas kernels in
+    ``topk_hist.py`` / ``binarize.py``.  The kernels are tested for exact
+    agreement against this oracle; this oracle is in turn tested for
+    statistical agreement (kept-count within bin tolerance) against
+    ``sbc_compress_exact``.
+
+All functions operate on a flat f32 vector ``delta`` and a sparsity ``p``
+(fraction of elements kept *per side* before the side selection, matching
+the paper's "fraction p biggest and fraction p smallest").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Bit-pattern histogram parameters.  Magnitudes are binned directly on the
+# f32 bit pattern — (biased exponent, top-6 mantissa bits) — giving
+# log-spaced bins from *pure integer ops*: bit-identical across XLA fusion
+# contexts, Pallas interpret mode, and the Rust native reimplementation
+# (a transcendental log2 would round differently per compilation context).
+# 16 octaves below the absmax x 64 sub-bins/octave = 1.1% relative
+# threshold resolution; elements below absmax * 2**-16 land in bin 0 (the
+# noise bucket) and are never selected.
+OCTAVES = 16
+SUBBINS = 64
+NBINS = (OCTAVES + 1) * SUBBINS  # 1088
+
+
+def topk_threshold_exact(delta: jnp.ndarray, k: int, side: str) -> jnp.ndarray:
+    """Magnitude of the k-th largest positive (or most negative) entry."""
+    if side == "pos":
+        vals = jnp.where(delta > 0, delta, 0.0)
+    else:
+        vals = jnp.where(delta < 0, -delta, 0.0)
+    sorted_desc = -jnp.sort(-vals)
+    k = max(min(int(k), vals.shape[0]), 1)
+    return sorted_desc[k - 1]
+
+
+def sbc_compress_exact(delta: jnp.ndarray, p: float):
+    """Paper Algorithm 2 with exact (sort-based) top-k.
+
+    Returns ``(out, t, mu, side_pos)`` where ``out`` is the dense
+    binarized update, ``t`` the magnitude threshold actually used, ``mu``
+    the transmitted mean (always >= 0; the sign is implied by
+    ``side_pos``), and ``side_pos`` a bool scalar.
+    """
+    n = delta.shape[0]
+    k = max(int(round(p * n)), 1)
+
+    tpos = topk_threshold_exact(delta, k, "pos")
+    tneg = topk_threshold_exact(delta, k, "neg")
+
+    pos_mask = (delta > 0) & (delta >= tpos) & (tpos > 0)
+    neg_mask = (delta < 0) & (-delta >= tneg) & (tneg > 0)
+
+    npos = jnp.sum(pos_mask)
+    nneg = jnp.sum(neg_mask)
+    mupos = jnp.sum(jnp.where(pos_mask, delta, 0.0)) / jnp.maximum(npos, 1)
+    muneg = jnp.sum(jnp.where(neg_mask, -delta, 0.0)) / jnp.maximum(nneg, 1)
+
+    side_pos = mupos >= muneg
+    mu = jnp.where(side_pos, mupos, muneg)
+    t = jnp.where(side_pos, tpos, tneg)
+    out = jnp.where(
+        side_pos,
+        jnp.where(pos_mask, mupos, 0.0),
+        jnp.where(neg_mask, -muneg, 0.0),
+    )
+    return out, t, mu, side_pos
+
+
+# ---------------------------------------------------------------------------
+# Histogram path (math shared with the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def exp_base(absmax: jnp.ndarray) -> jnp.ndarray:
+    """Biased exponent of the lowest resolved octave (i32 scalar)."""
+    bits = jax.lax.bitcast_convert_type(absmax.astype(jnp.float32), jnp.int32)
+    emax = bits >> 23
+    return jnp.maximum(emax - OCTAVES, 1)
+
+
+def bit_bin_index(mag: jnp.ndarray, base: jnp.ndarray) -> jnp.ndarray:
+    """Map magnitudes (>= 0) to bit-pattern bin indices in [0, NBINS-1].
+
+    Bin index = (biased_exponent - base) * SUBBINS + top-6-mantissa-bits;
+    monotone in magnitude because positive-f32 bit patterns are monotone.
+    Everything below octave ``base`` (including zeros/denormals) lands in
+    bin 0.
+    """
+    bits = jax.lax.bitcast_convert_type(mag.astype(jnp.float32), jnp.int32)
+    e = bits >> 23
+    sub = (bits >> 17) & (SUBBINS - 1)
+    erel = e - base
+    idx = jnp.where(erel < 0, 0, erel * SUBBINS + sub)
+    return jnp.clip(idx, 0, NBINS - 1).astype(jnp.int32)
+
+
+def bin_lower_edge(idx: jnp.ndarray, base: jnp.ndarray) -> jnp.ndarray:
+    """Lower magnitude edge of bin ``idx`` — exact inverse of
+    :func:`bit_bin_index`: mag >= edge(idx)  <=>  bin(mag) >= idx."""
+    idx = jnp.asarray(idx, jnp.int32)
+    e = base + idx // SUBBINS
+    sub = idx % SUBBINS
+    bits = (e << 23) | (sub << 17)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def signed_histograms(delta: jnp.ndarray, absmax: jnp.ndarray):
+    """Histogram of positive values and of |negative| values (jnp oracle)."""
+    base = exp_base(absmax)
+    idx = bit_bin_index(jnp.abs(delta), base)
+    pos = (delta > 0).astype(jnp.float32)
+    neg = (delta < 0).astype(jnp.float32)
+    hpos = jnp.zeros(NBINS, jnp.float32).at[idx].add(pos)
+    hneg = jnp.zeros(NBINS, jnp.float32).at[idx].add(neg)
+    return hpos, hneg
+
+
+def threshold_from_hist(hist: jnp.ndarray, k: jnp.ndarray, absmax: jnp.ndarray):
+    """Smallest bin lower-edge t such that count(value >= t) >= k.
+
+    Scans the cumulative histogram from the top.  Returns the lower edge
+    of the boundary bin, so the kept count is >= k (overshoot bounded by
+    the boundary-bin population, ~1.1% relative with 64 sub-bins/octave).
+    If fewer than k entries exist above bin 0, falls back to the lower
+    edge of the lowest populated bin above the noise bucket.
+    """
+    base = exp_base(absmax)
+    tail = jnp.cumsum(hist[::-1])[::-1]  # tail[i] = count in bins >= i
+    ge = tail[1:] >= k  # ignore the noise bucket (bin 0)
+    # boundary = largest bin index i (in 1..NBINS-1) with tail[i] >= k
+    idx = jnp.where(jnp.any(ge), jnp.argmax(jnp.arange(1, NBINS) * ge) + 1, 1)
+    return bin_lower_edge(idx, base)
+
+
+def side_stats(delta: jnp.ndarray, tpos: jnp.ndarray, tneg: jnp.ndarray):
+    """(sum+, n+, sum-, n-) over the elements above each side's threshold."""
+    pos_mask = (delta > 0) & (delta >= tpos)
+    neg_mask = (delta < 0) & (-delta >= tneg)
+    spos = jnp.sum(jnp.where(pos_mask, delta, 0.0))
+    npos = jnp.sum(pos_mask).astype(jnp.float32)
+    sneg = jnp.sum(jnp.where(neg_mask, -delta, 0.0))
+    nneg = jnp.sum(neg_mask).astype(jnp.float32)
+    return spos, npos, sneg, nneg
+
+
+def apply_binarize(delta, t, mu, side_pos):
+    """Elementwise binarization given the chosen side/threshold/mean."""
+    pos_out = jnp.where((delta > 0) & (delta >= t), mu, 0.0)
+    neg_out = jnp.where((delta < 0) & (-delta >= t), -mu, 0.0)
+    return jnp.where(side_pos, pos_out, neg_out)
+
+
+def sbc_compress_hist(delta: jnp.ndarray, p) :
+    """TPU-adapted SBC compression: histogram-quantile top-k + binarize.
+
+    Same return convention as :func:`sbc_compress_exact`.  ``p`` may be a
+    traced scalar (it is a runtime input of the AOT-compiled graph).
+    """
+    n = delta.shape[0]
+    k = jnp.maximum(jnp.round(p * n), 1.0)
+
+    absmax = jnp.max(jnp.abs(delta))
+    hpos, hneg = signed_histograms(delta, absmax)
+    tpos = threshold_from_hist(hpos, k, absmax)
+    tneg = threshold_from_hist(hneg, k, absmax)
+
+    spos, npos, sneg, nneg = side_stats(delta, tpos, tneg)
+    mupos = spos / jnp.maximum(npos, 1.0)
+    muneg = sneg / jnp.maximum(nneg, 1.0)
+
+    side_pos = mupos >= muneg
+    mu = jnp.where(side_pos, mupos, muneg)
+    t = jnp.where(side_pos, tpos, tneg)
+    out = apply_binarize(delta, t, mu, side_pos)
+    return out, t, mu, side_pos

@@ -1,0 +1,51 @@
+"""Composed SBC compression graph: Pallas passes + tiny jnp epilogue.
+
+``sbc_compress_pallas(delta, p)`` is the L1 entry point the L2 compress
+graph exports. It chains the four Pallas passes:
+
+  P1 absmax            (topk_hist.absmax_pallas)
+  P2 signed histograms (topk_hist.signed_hist_pallas)
+  P3 side statistics   (binarize.side_stats_pallas)
+  P4 apply binarize    (binarize.apply_binarize_pallas)
+
+with the O(NBINS) threshold scan and the 4-scalar side decision done in
+plain jnp between passes (far below kernel-launch granularity on any
+backend).  Math is shared with ``ref.sbc_compress_hist``, against which the
+composition is tested for exact agreement.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref
+from .binarize import apply_binarize_pallas, side_stats_pallas
+from .topk_hist import absmax_pallas, pad_flat, signed_hist_pallas
+
+
+def sbc_compress_pallas(delta: jnp.ndarray, p):
+    """Compress a flat f32 update with SBC (histogram top-k + binarize).
+
+    Returns ``(out, t, mu, side_pos)`` — see ``ref.sbc_compress_exact``.
+    ``p`` may be a traced scalar. ``delta`` may be any length; it is
+    zero-padded internally and the output is cropped back.
+    """
+    n = delta.shape[0]
+    k = jnp.maximum(jnp.round(p * n), 1.0)
+
+    x = pad_flat(delta)
+    absmax = absmax_pallas(x)  # (1,)
+    hists = signed_hist_pallas(x, absmax)  # (2, NBINS)
+    am = absmax[0]
+    tpos = ref.threshold_from_hist(hists[0], k, am)
+    tneg = ref.threshold_from_hist(hists[1], k, am)
+
+    stats = side_stats_pallas(x, tpos, tneg)  # (4,)
+    mupos = stats[0] / jnp.maximum(stats[1], 1.0)
+    muneg = stats[2] / jnp.maximum(stats[3], 1.0)
+
+    side_pos = mupos >= muneg
+    mu = jnp.where(side_pos, mupos, muneg)
+    t = jnp.where(side_pos, tpos, tneg)
+    out = apply_binarize_pallas(x, t, mu, side_pos)[:n]
+    return out, t, mu, side_pos

@@ -1,0 +1,126 @@
+"""Pallas kernels, pass 1+2 of SBC compression: absmax and signed histograms.
+
+TPU adaptation of the paper's top-k selection (see DESIGN.md
+§Hardware-Adaptation): instead of a global sort (cheap on CPU/GPU,
+prohibitive on TPU), the magnitude quantile is located with a log-spaced
+histogram built in a single tiled pass over the gradient.
+
+Grid layout: the flat input is padded to a multiple of ``BLOCK`` and
+processed one VMEM-resident tile per grid step; the histogram output block
+is mapped to the *same* block for every grid step, so the kernel
+accumulates into it across the sequential grid (the canonical TPU
+reduction pattern — no atomics needed because the TPU grid is sequential).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the Rust
+runtime loads. On a real TPU the same BlockSpecs compile natively.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NBINS, OCTAVES, SUBBINS
+
+# One tile per grid step. 64k f32 = 256 KiB per input buffer: two input
+# buffers + histogram scratch stay well under the ~16 MiB VMEM budget while
+# amortizing grid overhead.
+BLOCK = 65536
+
+
+def _ceil_to_block(n: int) -> int:
+    return (n + BLOCK - 1) // BLOCK * BLOCK
+
+
+def pad_flat(x: jnp.ndarray) -> jnp.ndarray:
+    """Zero-pad a flat vector to a multiple of BLOCK (zeros are ignored by
+    every kernel because they are neither >0 nor <0)."""
+    n = x.shape[0]
+    m = _ceil_to_block(n)
+    if m == n:
+        return x
+    return jnp.concatenate([x, jnp.zeros(m - n, x.dtype)])
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: absmax
+# ---------------------------------------------------------------------------
+
+
+def _absmax_kernel(x_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    block_max = jnp.max(jnp.abs(x_ref[...]))
+    out_ref[...] = jnp.maximum(out_ref[...], block_max)
+
+
+def absmax_pallas(x: jnp.ndarray) -> jnp.ndarray:
+    """max(|x|) over a flat (padded) vector; returns a (1,) f32 array."""
+    n = x.shape[0]
+    assert n % BLOCK == 0, "pad with pad_flat first"
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _absmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: signed log-magnitude histograms
+# ---------------------------------------------------------------------------
+
+
+def _hist_kernel(x_ref, absmax_ref, hist_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    x = x_ref[...]
+    # Bit-pattern binning (see ref.bit_bin_index): pure integer ops, so the
+    # kernel agrees bit-for-bit with the jnp oracle and the Rust native path.
+    bits_max = jax.lax.bitcast_convert_type(absmax_ref[0], jnp.int32)
+    base = jnp.maximum((bits_max >> 23) - OCTAVES, 1)
+    bits = jax.lax.bitcast_convert_type(jnp.abs(x), jnp.int32)
+    e = bits >> 23
+    sub = (bits >> 17) & (SUBBINS - 1)
+    erel = e - base
+    idx = jnp.clip(jnp.where(erel < 0, 0, erel * SUBBINS + sub), 0, NBINS - 1)
+    pos = (x > 0).astype(jnp.float32)
+    neg = (x < 0).astype(jnp.float32)
+    block = jnp.zeros((2, NBINS), jnp.float32)
+    block = block.at[0, idx].add(pos)
+    block = block.at[1, idx].add(neg)
+    hist_ref[...] += block
+
+
+def signed_hist_pallas(x: jnp.ndarray, absmax: jnp.ndarray) -> jnp.ndarray:
+    """(2, NBINS) histograms: row 0 over positive values, row 1 over
+    |negative| values, with log-spaced bins relative to absmax."""
+    n = x.shape[0]
+    assert n % BLOCK == 0, "pad with pad_flat first"
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _hist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((2, NBINS), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, NBINS), jnp.float32),
+        interpret=True,
+    )(x, absmax)

@@ -1,0 +1,46 @@
+"""L2 public surface: the four AOT graphs per model.
+
+``build_graphs(model)`` returns the callables that ``aot.py`` lowers to
+HLO text; the compress graph calls the L1 Pallas kernels so they lower
+into the same artifact set.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sbc import sbc_compress_pallas
+from .models.common import ModelDef
+
+
+def build_compress(n: int):
+    """Compress graph over a flat delta of size ``n``.
+
+    Signature: (delta f32[n], p f32[]) -> (out f32[n], t, mu, side f32).
+    """
+
+    def compress(delta, p):
+        out, t, mu, side = sbc_compress_pallas(delta, p)
+        return out, t, mu, side.astype(jnp.float32)
+
+    return compress
+
+
+def compress_example_args(n: int):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n,), f32),
+        jax.ShapeDtypeStruct((), f32),
+    )
+
+
+def build_graphs(model: ModelDef):
+    """(name -> (callable, example_args)) for all four graphs of a model."""
+    ex = model.example_args()
+    return {
+        "init": (model.build_init(), ex["init"]),
+        "step": (model.build_step(), ex["step"]),
+        "eval": (model.build_eval(), ex["eval"]),
+        "compress": (build_compress(model.n_params), compress_example_args(model.n_params)),
+    }

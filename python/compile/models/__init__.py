@@ -1,0 +1,16 @@
+"""Model zoo registry. Order here fixes the artifact build order."""
+
+from .cifarcnn import MODEL as CIFARCNN
+from .lenet import MODEL as LENET
+from .lstm import CHARLM, WORDLM
+from .mlp import MODEL as MLP
+from .tinygpt import TINYGPT, TINYGPT25M
+
+REGISTRY = {
+    m.name: m
+    for m in [MLP, LENET, CIFARCNN, CHARLM, WORDLM, TINYGPT, TINYGPT25M]
+}
+
+# Models exported by default by `make artifacts` (tinygpt25m is opt-in via
+# SBC_AOT_MODELS to keep artifact build time reasonable).
+DEFAULT_EXPORT = ["mlp", "lenet", "cifarcnn", "charlm", "wordlm", "tinygpt"]

@@ -1,0 +1,103 @@
+"""CifarCNN — residual conv net standing in for the paper's ResNet32/50.
+
+Three stages of width (16, 32, 64), each with `blocks` residual blocks
+(two 3x3 convs + GroupNorm + identity/projection skip), global average
+pool, linear head. GroupNorm replaces BatchNorm so the model is stateless
+(flat-parameter contract; see DESIGN.md §2 substitutions). ~470k params at
+depth 2 — the compression path sees the same multi-tensor conv/FC update
+structure as the paper's ResNets. Momentum SGD, stepwise LR decay driven
+from Rust (lr is a runtime input of the step graph).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    ModelDef,
+    TensorSpec,
+    conv2d,
+    glorot,
+    group_norm,
+    he,
+    softmax_xent,
+)
+
+BATCH = 16
+WIDTHS = [8, 16, 32]
+BLOCKS = 1  # residual blocks per stage
+
+
+def _specs():
+    s = [TensorSpec("stem_w", (3, 3, 3, WIDTHS[0]))]
+    s.append(TensorSpec("stem_g", (WIDTHS[0],)))
+    s.append(TensorSpec("stem_b", (WIDTHS[0],)))
+    cin = WIDTHS[0]
+    for si, w in enumerate(WIDTHS):
+        for bi in range(BLOCKS):
+            pfx = f"s{si}b{bi}"
+            s.append(TensorSpec(f"{pfx}_w1", (3, 3, cin, w)))
+            s.append(TensorSpec(f"{pfx}_g1", (w,)))
+            s.append(TensorSpec(f"{pfx}_b1", (w,)))
+            s.append(TensorSpec(f"{pfx}_w2", (3, 3, w, w)))
+            s.append(TensorSpec(f"{pfx}_g2", (w,)))
+            s.append(TensorSpec(f"{pfx}_b2", (w,)))
+            if cin != w:
+                s.append(TensorSpec(f"{pfx}_proj", (1, 1, cin, w)))
+            cin = w
+    s.append(TensorSpec("head_w", (WIDTHS[-1], 10)))
+    s.append(TensorSpec("head_b", (10,)))
+    return s
+
+
+def _init(key):
+    tree = {}
+    for spec in _specs():
+        key, k = jax.random.split(key)
+        if spec.name.endswith(("_g1", "_g2", "stem_g")) or spec.name == "stem_g":
+            tree[spec.name] = jnp.ones(spec.shape, jnp.float32)
+        elif spec.name.endswith(("_b1", "_b2", "head_b")) or spec.name == "stem_b":
+            tree[spec.name] = jnp.zeros(spec.shape, jnp.float32)
+        elif spec.name == "head_w":
+            tree[spec.name] = glorot(k, spec.shape, spec.shape[0], spec.shape[1])
+        else:  # conv kernels
+            fan_in = spec.shape[0] * spec.shape[1] * spec.shape[2]
+            tree[spec.name] = he(k, spec.shape, fan_in)
+    return tree
+
+
+def _loss(tree, x, y):
+    h = conv2d(x, tree["stem_w"])
+    h = jax.nn.relu(group_norm(h, tree["stem_g"], tree["stem_b"]))
+    cin = WIDTHS[0]
+    for si, w in enumerate(WIDTHS):
+        for bi in range(BLOCKS):
+            pfx = f"s{si}b{bi}"
+            stride = 2 if (si > 0 and bi == 0) else 1
+            z = conv2d(h, tree[f"{pfx}_w1"], stride=stride)
+            z = jax.nn.relu(group_norm(z, tree[f"{pfx}_g1"], tree[f"{pfx}_b1"]))
+            z = conv2d(z, tree[f"{pfx}_w2"])
+            z = group_norm(z, tree[f"{pfx}_g2"], tree[f"{pfx}_b2"])
+            if cin != w:
+                skip = conv2d(h, tree[f"{pfx}_proj"], stride=stride)
+            else:
+                skip = h
+            h = jax.nn.relu(z + skip)
+            cin = w
+    h = h.mean(axis=(1, 2))  # global average pool
+    logits = h @ tree["head_w"] + tree["head_b"]
+    return softmax_xent(logits, y)
+
+
+MODEL = ModelDef(
+    name="cifarcnn",
+    params=_specs(),
+    loss_fn=_loss,
+    init_fn=_init,
+    optimizer="momentum",
+    x_shape=(BATCH, 32, 32, 3),
+    y_shape=(BATCH,),
+    task="classification",
+    meta={"classes": 10, "default_lr": 0.05},
+)

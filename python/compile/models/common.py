@@ -1,0 +1,218 @@
+"""Shared L2 model framework: flat-parameter train/eval/init graph builders.
+
+Every model in the zoo exposes the same AOT surface so the Rust runtime is
+fully generic over models:
+
+  init:     (seed i32)                                   -> (params f32[N],)
+  step:     (params f32[N], opt f32[S], lr f32, t f32,
+             x <model>, y <model>)                       -> (params', opt', loss)
+  eval:     (params f32[N], x, y)                        -> (loss_sum, metric, count)
+  compress: (delta f32[N], p f32)                        -> (dense out f32[N], t, mu, side)
+
+Parameters and optimizer state travel as single flat f32 vectors; the
+graphs unflatten/reflatten internally. ``metric`` is the correct-prediction
+count for classifiers and the summed token cross-entropy for language
+models (perplexity = exp(metric / count)).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class TensorSpec:
+    name: str
+    shape: Tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+@dataclass
+class ModelDef:
+    """A model in the zoo. ``params`` fixes the flat layout (order matters:
+    Rust addresses per-tensor segments of the flat vector by this order)."""
+
+    name: str
+    params: List[TensorSpec]
+    # loss_fn(ptree, x, y) -> (mean_loss, metric_sum, count)
+    loss_fn: Callable
+    init_fn: Callable  # init_fn(key) -> dict[name, array]
+    optimizer: str  # "momentum" | "adam" | "sgd"
+    x_shape: Tuple[int, ...] = ()
+    x_dtype: str = "f32"
+    y_shape: Tuple[int, ...] = ()
+    y_dtype: str = "i32"
+    momentum: float = 0.9
+    task: str = "classification"  # or "lm"
+    meta: Dict = field(default_factory=dict)
+
+    @property
+    def n_params(self) -> int:
+        return sum(t.size for t in self.params)
+
+    @property
+    def opt_size(self) -> int:
+        if self.optimizer == "momentum":
+            return self.n_params
+        if self.optimizer == "adam":
+            return 2 * self.n_params
+        return 1  # plain sgd: dummy 1-element state
+
+    # -- flat <-> pytree ---------------------------------------------------
+
+    def unflatten(self, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        out, off = {}, 0
+        for t in self.params:
+            out[t.name] = flat[off : off + t.size].reshape(t.shape)
+            off += t.size
+        return out
+
+    def flatten(self, tree: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        return jnp.concatenate([tree[t.name].reshape(-1) for t in self.params])
+
+    # -- graph builders ----------------------------------------------------
+
+    def build_init(self):
+        def init(seed):
+            key = jax.random.PRNGKey(seed)
+            tree = self.init_fn(key)
+            for t in self.params:
+                assert tree[t.name].shape == t.shape, (
+                    f"{self.name}.{t.name}: init {tree[t.name].shape} != spec {t.shape}"
+                )
+            return (self.flatten(tree).astype(jnp.float32),)
+
+        return init
+
+    def build_step(self):
+        mom = self.momentum
+
+        def step(flat, opt, lr, t_step, x, y):
+            tree = self.unflatten(flat)
+
+            def scalar_loss(tr):
+                loss, _, _ = self.loss_fn(tr, x, y)
+                return loss
+
+            loss, grads = jax.value_and_grad(scalar_loss)(tree)
+            g = self.flatten(grads)
+            if self.optimizer == "momentum":
+                v = mom * opt + g
+                new_flat = flat - lr * v
+                new_opt = v
+            elif self.optimizer == "adam":
+                n = self.n_params
+                m, v = opt[:n], opt[n:]
+                b1, b2, eps = 0.9, 0.999, 1e-8
+                m = b1 * m + (1 - b1) * g
+                v = b2 * v + (1 - b2) * g * g
+                mhat = m / (1 - b1 ** (t_step + 1.0))
+                vhat = v / (1 - b2 ** (t_step + 1.0))
+                new_flat = flat - lr * mhat / (jnp.sqrt(vhat) + eps)
+                new_opt = jnp.concatenate([m, v])
+            else:  # plain sgd with global-norm clipping (Zaremba-style LM
+                # training, matching the paper's LSTM setup at lr = 1.0)
+                gnorm = jnp.sqrt(jnp.sum(g * g))
+                clip = 5.0
+                g = g * jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-12))
+                new_flat = flat - lr * g
+                new_opt = opt
+            return new_flat, new_opt, loss
+
+        return step
+
+    def build_eval(self):
+        def evaluate(flat, x, y):
+            tree = self.unflatten(flat)
+            loss, metric, count = self.loss_fn(tree, x, y)
+            return (
+                loss * count,
+                metric.astype(jnp.float32),
+                jnp.asarray(count, jnp.float32),
+            )
+
+        return evaluate
+
+    def example_args(self):
+        """ShapeDtypeStructs for (init, step, eval) lowering."""
+        dt = {"f32": jnp.float32, "i32": jnp.int32}
+        f32 = jnp.float32
+        x = jax.ShapeDtypeStruct(self.x_shape, dt[self.x_dtype])
+        y = jax.ShapeDtypeStruct(self.y_shape, dt[self.y_dtype])
+        p = jax.ShapeDtypeStruct((self.n_params,), f32)
+        o = jax.ShapeDtypeStruct((self.opt_size,), f32)
+        s = jax.ShapeDtypeStruct((), f32)
+        seed = jax.ShapeDtypeStruct((), jnp.int32)
+        return {
+            "init": (seed,),
+            "step": (p, o, s, s, x, y),
+            "eval": (p, x, y),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Shared nn building blocks (pure jnp — used by the model zoo)
+# ---------------------------------------------------------------------------
+
+
+def glorot(key, shape, fan_in, fan_out):
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+def he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def conv2d(x, w, stride=1, padding="SAME"):
+    """NHWC conv with HWIO weights."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def group_norm(x, gamma, beta, groups=8, eps=1e-5):
+    """GroupNorm over NHWC (stateless BatchNorm substitute — see DESIGN.md)."""
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) / jnp.sqrt(var + eps)
+    return xg.reshape(n, h, w, c) * gamma + beta
+
+
+def softmax_xent(logits, labels):
+    """(mean loss, correct count, count) for int labels."""
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    correct = jnp.sum(jnp.argmax(logits, axis=1) == labels)
+    return jnp.mean(nll), correct, logits.shape[0]
+
+
+def lm_xent(logits, labels):
+    """(mean token loss, summed token loss, token count) for [B,T,V] logits."""
+    b, t, v = logits.shape
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=2)[..., 0]
+    total = jnp.sum(nll)
+    count = b * t
+    return total / count, total, count

@@ -1,0 +1,63 @@
+"""LeNet5-Caffe (~431k params), the paper's MNIST model, trained with Adam.
+
+Layer stack follows the Caffe prototxt the paper cites:
+conv(20@5x5, VALID) - pool2 - conv(50@5x5, VALID) - pool2 - fc500 - fc10.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelDef, TensorSpec, conv2d, glorot, he, maxpool2, softmax_xent
+
+BATCH = 16
+
+SPECS = [
+    TensorSpec("c1w", (5, 5, 1, 20)),
+    TensorSpec("c1b", (20,)),
+    TensorSpec("c2w", (5, 5, 20, 50)),
+    TensorSpec("c2b", (50,)),
+    TensorSpec("f1w", (800, 500)),
+    TensorSpec("f1b", (500,)),
+    TensorSpec("f2w", (500, 10)),
+    TensorSpec("f2b", (10,)),
+]
+
+
+def _init(key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "c1w": he(k1, (5, 5, 1, 20), 25),
+        "c1b": jnp.zeros((20,), jnp.float32),
+        "c2w": he(k2, (5, 5, 20, 50), 500),
+        "c2b": jnp.zeros((50,), jnp.float32),
+        "f1w": glorot(k3, (800, 500), 800, 500),
+        "f1b": jnp.zeros((500,), jnp.float32),
+        "f2w": glorot(k4, (500, 10), 500, 10),
+        "f2b": jnp.zeros((10,), jnp.float32),
+    }
+
+
+def _loss(tree, x, y):
+    h = conv2d(x, tree["c1w"], padding="VALID") + tree["c1b"]  # 24x24x20
+    h = maxpool2(jax.nn.relu(h))  # 12x12x20
+    h = conv2d(h, tree["c2w"], padding="VALID") + tree["c2b"]  # 8x8x50
+    h = maxpool2(jax.nn.relu(h))  # 4x4x50
+    h = h.reshape(h.shape[0], -1)  # 800
+    h = jax.nn.relu(h @ tree["f1w"] + tree["f1b"])
+    logits = h @ tree["f2w"] + tree["f2b"]
+    return softmax_xent(logits, y)
+
+
+MODEL = ModelDef(
+    name="lenet",
+    params=SPECS,
+    loss_fn=_loss,
+    init_fn=_init,
+    optimizer="adam",
+    x_shape=(BATCH, 28, 28, 1),
+    y_shape=(BATCH,),
+    task="classification",
+    meta={"classes": 10, "default_lr": 0.001},
+)

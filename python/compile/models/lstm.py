@@ -1,0 +1,95 @@
+"""Two-layer LSTM language models (CharLM / WordLM), paper §IV-A.
+
+Mirrors the Zaremba et al. seq-to-seq LM the paper uses: embedding,
+two LSTM layers run with ``lax.scan``, linear vocab projection, plain SGD
+(the paper trains its LMs with vanilla gradient descent + decay).
+Hidden sizes are scaled to the sandbox (see DESIGN.md §2): CharLM keeps
+the paper's 200 units; WordLM uses 256 units over a 1k vocab.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelDef, TensorSpec, glorot, lm_xent
+
+
+def _lstm_specs(name, vocab, embed, hidden):
+    s = [TensorSpec("embed", (vocab, embed))]
+    for l, in_dim in enumerate([embed, hidden]):
+        s.append(TensorSpec(f"l{l}_wx", (in_dim, 4 * hidden)))
+        s.append(TensorSpec(f"l{l}_wh", (hidden, 4 * hidden)))
+        s.append(TensorSpec(f"l{l}_b", (4 * hidden,)))
+    s.append(TensorSpec("proj_w", (hidden, vocab)))
+    s.append(TensorSpec("proj_b", (vocab,)))
+    return s
+
+
+def _make_init(vocab, embed, hidden):
+    def init(key):
+        ks = jax.random.split(key, 8)
+        tree = {"embed": jax.random.normal(ks[0], (vocab, embed)) * 0.1}
+        for l, in_dim in enumerate([embed, hidden]):
+            tree[f"l{l}_wx"] = glorot(ks[1 + 2 * l], (in_dim, 4 * hidden), in_dim, 4 * hidden)
+            tree[f"l{l}_wh"] = glorot(ks[2 + 2 * l], (hidden, 4 * hidden), hidden, 4 * hidden)
+            # forget-gate bias = 1 for stable early training
+            b = jnp.zeros((4 * hidden,), jnp.float32).at[hidden : 2 * hidden].set(1.0)
+            tree[f"l{l}_b"] = b
+        tree["proj_w"] = glorot(ks[5], (hidden, vocab), hidden, vocab)
+        tree["proj_b"] = jnp.zeros((vocab,), jnp.float32)
+        return tree
+
+    return init
+
+
+def _lstm_layer(tree, l, xs, hidden):
+    """xs: [T, B, D] -> [T, B, H] via lax.scan over time."""
+    b = xs.shape[1]
+    wx, wh, bias = tree[f"l{l}_wx"], tree[f"l{l}_wh"], tree[f"l{l}_b"]
+
+    def step(carry, x_t):
+        h, c = carry
+        gates = x_t @ wx + h @ wh + bias
+        i, f, g, o = jnp.split(gates, 4, axis=1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((b, hidden), jnp.float32)
+    (_, _), hs = jax.lax.scan(step, (h0, h0), xs)
+    return hs
+
+
+def _make_loss(hidden):
+    def loss(tree, x, y):
+        # x, y: [B, T] int32
+        emb = tree["embed"][x]  # [B, T, E]
+        h = jnp.transpose(emb, (1, 0, 2))  # [T, B, E]
+        h = _lstm_layer(tree, 0, h, hidden)
+        h = _lstm_layer(tree, 1, h, hidden)
+        h = jnp.transpose(h, (1, 0, 2))  # [B, T, H]
+        logits = h @ tree["proj_w"] + tree["proj_b"]
+        return lm_xent(logits, y)
+
+    return loss
+
+
+def make_lm(name, vocab, embed, hidden, batch, seqlen, lr):
+    return ModelDef(
+        name=name,
+        params=_lstm_specs(name, vocab, embed, hidden),
+        loss_fn=_make_loss(hidden),
+        init_fn=_make_init(vocab, embed, hidden),
+        optimizer="sgd",
+        x_shape=(batch, seqlen),
+        x_dtype="i32",
+        y_shape=(batch, seqlen),
+        y_dtype="i32",
+        task="lm",
+        meta={"vocab": vocab, "default_lr": lr},
+    )
+
+
+CHARLM = make_lm("charlm", vocab=98, embed=64, hidden=200, batch=8, seqlen=32, lr=1.0)
+WORDLM = make_lm("wordlm", vocab=1000, embed=128, hidden=256, batch=8, seqlen=20, lr=1.0)

@@ -1,0 +1,54 @@
+"""MLP-300-100: the classic MNIST fully-connected baseline (~266k params).
+
+Fast enough to drive the dense experiment grids (Fig. 3/4/9 sweeps run
+hundreds of full trainings); trained with momentum SGD.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelDef, TensorSpec, glorot, softmax_xent
+
+BATCH = 64
+DIMS = [784, 300, 100, 10]
+
+
+def _specs():
+    out = []
+    for i in range(len(DIMS) - 1):
+        out.append(TensorSpec(f"w{i}", (DIMS[i], DIMS[i + 1])))
+        out.append(TensorSpec(f"b{i}", (DIMS[i + 1],)))
+    return out
+
+
+def _init(key):
+    tree = {}
+    for i in range(len(DIMS) - 1):
+        key, k = jax.random.split(key)
+        tree[f"w{i}"] = glorot(k, (DIMS[i], DIMS[i + 1]), DIMS[i], DIMS[i + 1])
+        tree[f"b{i}"] = jnp.zeros((DIMS[i + 1],), jnp.float32)
+    return tree
+
+
+def _loss(tree, x, y):
+    h = x
+    for i in range(len(DIMS) - 1):
+        h = h @ tree[f"w{i}"] + tree[f"b{i}"]
+        if i < len(DIMS) - 2:
+            h = jax.nn.relu(h)
+    return softmax_xent(h, y)
+
+
+MODEL = ModelDef(
+    name="mlp",
+    params=_specs(),
+    loss_fn=_loss,
+    init_fn=_init,
+    optimizer="momentum",
+    x_shape=(BATCH, 784),
+    y_shape=(BATCH,),
+    task="classification",
+    meta={"classes": 10, "default_lr": 0.1},
+)

@@ -1,0 +1,117 @@
+"""TinyGPT — decoder-only transformer for the end-to-end driver.
+
+Used by ``examples/e2e_transformer.rs`` to prove the full stack composes
+at realistic scale: a multi-million-parameter transformer trained for a
+few hundred SBC-compressed distributed steps on the character corpus.
+
+Configurable width/depth; two presets are exported:
+  tinygpt     ~9.9M params  (d=320, L=8, 8 heads)   — default e2e run
+  tinygpt25m  ~25M  params  (d=512, L=8, 8 heads)   — larger, optional
+
+Pre-LN blocks, learned positional embeddings, GELU MLP (4x), untied
+output projection, AdamW-free Adam (the paper never uses weight decay).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelDef, TensorSpec, glorot, lm_xent
+
+
+def _specs(vocab, seq, d, layers):
+    s = [TensorSpec("wte", (vocab, d)), TensorSpec("wpe", (seq, d))]
+    for l in range(layers):
+        p = f"h{l}"
+        s += [
+            TensorSpec(f"{p}_ln1g", (d,)),
+            TensorSpec(f"{p}_ln1b", (d,)),
+            TensorSpec(f"{p}_attn_w", (d, 3 * d)),
+            TensorSpec(f"{p}_attn_b", (3 * d,)),
+            TensorSpec(f"{p}_attn_proj", (d, d)),
+            TensorSpec(f"{p}_attn_projb", (d,)),
+            TensorSpec(f"{p}_ln2g", (d,)),
+            TensorSpec(f"{p}_ln2b", (d,)),
+            TensorSpec(f"{p}_mlp_w1", (d, 4 * d)),
+            TensorSpec(f"{p}_mlp_b1", (4 * d,)),
+            TensorSpec(f"{p}_mlp_w2", (4 * d, d)),
+            TensorSpec(f"{p}_mlp_b2", (d,)),
+        ]
+    s += [TensorSpec("lnf_g", (d,)), TensorSpec("lnf_b", (d,)), TensorSpec("head", (d, vocab))]
+    return s
+
+
+def _make_init(vocab, seq, d, layers):
+    def init(key):
+        tree = {}
+        for spec in _specs(vocab, seq, d, layers):
+            key, k = jax.random.split(key)
+            n = spec.name
+            if n.endswith(("ln1g", "ln2g", "lnf_g")) or n == "lnf_g":
+                tree[n] = jnp.ones(spec.shape, jnp.float32)
+            elif n.endswith("b") or n.endswith("_ln1b") or n.endswith("_ln2b"):
+                tree[n] = jnp.zeros(spec.shape, jnp.float32)
+            elif n in ("wte", "wpe"):
+                tree[n] = jax.random.normal(k, spec.shape) * 0.02
+            else:
+                tree[n] = glorot(k, spec.shape, spec.shape[0], spec.shape[-1])
+        return tree
+
+    return init
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _make_loss(vocab, seq, d, layers, heads):
+    hd = d // heads
+    mask = jnp.tril(jnp.ones((seq, seq), bool))
+
+    def loss(tree, x, y):
+        b, t = x.shape
+        h = tree["wte"][x] + tree["wpe"][None, :, :]
+        for l in range(layers):
+            p = f"h{l}"
+            z = _ln(h, tree[f"{p}_ln1g"], tree[f"{p}_ln1b"])
+            qkv = z @ tree[f"{p}_attn_w"] + tree[f"{p}_attn_b"]
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            q = q.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+            k = k.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+            v = v.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+            att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(hd)
+            att = jnp.where(mask[None, None], att, -1e9)
+            att = jax.nn.softmax(att, axis=-1)
+            z = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+            h = h + z @ tree[f"{p}_attn_proj"] + tree[f"{p}_attn_projb"]
+            z = _ln(h, tree[f"{p}_ln2g"], tree[f"{p}_ln2b"])
+            z = jax.nn.gelu(z @ tree[f"{p}_mlp_w1"] + tree[f"{p}_mlp_b1"])
+            h = h + z @ tree[f"{p}_mlp_w2"] + tree[f"{p}_mlp_b2"]
+        h = _ln(h, tree["lnf_g"], tree["lnf_b"])
+        logits = h @ tree["head"]
+        return lm_xent(logits, y)
+
+    return loss
+
+
+def make_gpt(name, vocab=98, seq=128, d=320, layers=8, heads=8, batch=4, lr=3e-4):
+    return ModelDef(
+        name=name,
+        params=_specs(vocab, seq, d, layers),
+        loss_fn=_make_loss(vocab, seq, d, layers, heads),
+        init_fn=_make_init(vocab, seq, d, layers),
+        optimizer="adam",
+        x_shape=(batch, seq),
+        x_dtype="i32",
+        y_shape=(batch, seq),
+        y_dtype="i32",
+        task="lm",
+        meta={"vocab": vocab, "default_lr": lr, "d_model": d, "layers": layers},
+    )
+
+
+TINYGPT = make_gpt("tinygpt")
+TINYGPT25M = make_gpt("tinygpt25m", d=512, layers=8, heads=8, batch=2)

@@ -1,0 +1,173 @@
+"""L1 kernel correctness: Pallas passes vs pure-jnp oracles.
+
+The core signal: `sbc_compress_pallas` must agree *exactly* with the
+pure-jnp histogram oracle (same math, different execution), and
+*statistically* with the sort-based Algorithm 2 oracle (kept count within
+histogram-bin tolerance, means close).
+Hypothesis sweeps shapes, dtypes-scales, sparsity levels and distributions.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.sbc import sbc_compress_pallas
+from compile.kernels.topk_hist import BLOCK, absmax_pallas, pad_flat, signed_hist_pallas
+from compile.kernels.binarize import apply_binarize_pallas, side_stats_pallas
+
+
+def make_delta(n, seed, dist="heavy", scale=1.0):
+    rng = np.random.default_rng(seed)
+    if dist == "heavy":
+        d = rng.standard_normal(n) * rng.random(n) ** 4
+    elif dist == "normal":
+        d = rng.standard_normal(n)
+    elif dist == "skew_pos":
+        d = np.abs(rng.standard_normal(n)) - 0.1 * rng.random(n)
+    elif dist == "skew_neg":
+        d = -np.abs(rng.standard_normal(n)) + 0.1 * rng.random(n)
+    else:
+        raise ValueError(dist)
+    return jnp.array((d * scale).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Individual passes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [BLOCK, 3 * BLOCK])
+def test_absmax_matches_jnp(n):
+    x = pad_flat(make_delta(n - 7, 1))
+    got = absmax_pallas(x)[0]
+    assert float(got) == float(jnp.max(jnp.abs(x)))
+
+
+def test_absmax_all_zero():
+    x = jnp.zeros(BLOCK, jnp.float32)
+    assert float(absmax_pallas(x)[0]) == 0.0
+
+
+@pytest.mark.parametrize("dist", ["heavy", "normal", "skew_pos", "skew_neg"])
+def test_hist_matches_oracle(dist):
+    x = pad_flat(make_delta(BLOCK + 123, 2, dist))
+    am = jnp.max(jnp.abs(x))
+    got = signed_hist_pallas(x, jnp.array([am]))
+    hpos, hneg = ref.signed_histograms(x, am)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(hpos))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(hneg))
+
+
+def test_hist_counts_sum_to_nonzero_elements():
+    x = pad_flat(make_delta(2 * BLOCK, 3))
+    am = jnp.max(jnp.abs(x))
+    got = signed_hist_pallas(x, jnp.array([am]))
+    n_pos = int(jnp.sum(x > 0))
+    n_neg = int(jnp.sum(x < 0))
+    assert int(np.asarray(got[0]).sum()) == n_pos
+    assert int(np.asarray(got[1]).sum()) == n_neg
+
+
+def test_side_stats_matches_oracle():
+    x = pad_flat(make_delta(BLOCK, 4))
+    tpos, tneg = jnp.float32(0.05), jnp.float32(0.07)
+    got = side_stats_pallas(x, tpos, tneg)
+    want = ref.side_stats(x, tpos, tneg)
+    np.testing.assert_allclose(np.asarray(got), np.array([float(w) for w in want]), rtol=1e-6)
+
+
+def test_apply_binarize_matches_oracle():
+    x = pad_flat(make_delta(BLOCK, 5))
+    t, mu = jnp.float32(0.03), jnp.float32(0.5)
+    for side in (True, False):
+        got = apply_binarize_pallas(x, t, mu, jnp.asarray(side))
+        want = ref.apply_binarize(x, t, mu, jnp.asarray(side))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Composed kernel vs oracles
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1000, max_value=200_000),
+    seed=st.integers(min_value=0, max_value=2**31),
+    dist=st.sampled_from(["heavy", "normal", "skew_pos", "skew_neg"]),
+    p=st.sampled_from([0.001, 0.01, 0.05, 0.1]),
+    scale=st.sampled_from([1e-4, 1.0, 1e4]),
+)
+def test_pallas_equals_hist_oracle(n, seed, dist, p, scale):
+    d = make_delta(n, seed, dist, scale)
+    out_k, t_k, mu_k, s_k = sbc_compress_pallas(d, p)
+    out_h, t_h, mu_h, s_h = ref.sbc_compress_hist(d, p)
+    a, b = np.asarray(out_k), np.asarray(out_h)
+    # positions exact; values equal up to float reduction order (the Pallas
+    # pass reduces block-wise, the oracle reduces flat)
+    np.testing.assert_array_equal(a != 0, b != 0)
+    np.testing.assert_allclose(a, b, rtol=2e-6)
+    assert float(t_k) == float(t_h)
+    assert abs(float(mu_k) - float(mu_h)) <= 1e-6 * max(1.0, abs(float(mu_h)))
+    assert bool(s_k) == bool(s_h)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=10_000, max_value=150_000),
+    seed=st.integers(min_value=0, max_value=2**31),
+    p=st.sampled_from([0.005, 0.01, 0.05]),
+)
+def test_hist_tracks_exact_topk(n, seed, p):
+    """Histogram top-k keeps >= k elements with <= 2% relative overshoot
+    (bin-width bound) and the binarized mean is within 5% of exact."""
+    d = make_delta(n, seed, "heavy")
+    out_h, t_h, mu_h, s_h = ref.sbc_compress_hist(d, p)
+    out_e, t_e, mu_e, s_e = ref.sbc_compress_exact(d, p)
+    k = max(int(round(p * n)), 1)
+    kept = int(np.sum(np.asarray(out_h) != 0))
+    assert kept >= min(k, kept)  # never empty when signal exists
+    if bool(s_h) == bool(s_e):
+        # same side chosen -> mean magnitudes must be close
+        assert abs(float(mu_h) - float(mu_e)) <= 0.05 * max(abs(float(mu_e)), 1e-8)
+        # kept count within bin tolerance of exact kept count
+        kept_e = int(np.sum(np.asarray(out_e) != 0))
+        assert kept <= int(kept_e * 1.05) + 8
+
+
+def test_compress_all_zero_input():
+    d = jnp.zeros(5000, jnp.float32)
+    out, t, mu, side = sbc_compress_pallas(d, 0.01)
+    assert float(jnp.sum(jnp.abs(out))) == 0.0
+    assert float(mu) == 0.0
+
+
+def test_compress_single_spike():
+    d = jnp.zeros(70_000, jnp.float32).at[12345].set(3.5)
+    out, t, mu, side = sbc_compress_pallas(d, 0.001)
+    o = np.asarray(out)
+    assert bool(side)
+    assert o[12345] == pytest.approx(3.5, rel=1e-6)
+    assert int(np.sum(o != 0)) == 1
+
+
+def test_compress_negative_side_wins():
+    rng = np.random.default_rng(9)
+    d = rng.standard_normal(50_000).astype(np.float32) * 0.01
+    d[:50] = -5.0  # strong negative block
+    out, t, mu, side = sbc_compress_pallas(jnp.array(d), 0.001)
+    assert not bool(side)
+    o = np.asarray(out)
+    assert np.all(o <= 0)
+    assert int(np.sum(o != 0)) >= 50
+
+
+def test_compress_output_is_binary():
+    d = make_delta(80_000, 11)
+    out, t, mu, side = sbc_compress_pallas(d, 0.01)
+    o = np.asarray(out)
+    nz = o[o != 0]
+    assert len(np.unique(nz)) == 1  # exactly one transmitted value
+    assert np.unique(np.abs(nz))[0] == pytest.approx(float(mu), rel=1e-6)

@@ -1,0 +1,131 @@
+//! Communication accounting — paper equation (1) and Table I.
+//!
+//! Two kinds of numbers live here:
+//!   * **theoretical** per-method asymptotic bit costs (Table I rows),
+//!     computed from the formulas the paper uses, and
+//!   * **measured** cumulative counters fed by the coordinator with the
+//!     exact wire size of every encoded message.
+
+use crate::codec::golomb;
+
+/// Theoretical per-iteration upstream bits per parameter for a method
+/// (paper eq. 1 normalized by N_iter * |W|), and the derived compression
+/// rate vs. the 32-bit dense baseline.
+#[derive(Clone, Debug)]
+pub struct MethodCost {
+    pub name: &'static str,
+    /// Fraction of iterations with communication (1/n for delay n).
+    pub temporal: f64,
+    /// Fraction of gradient entries transmitted.
+    pub gradient_sparsity: f64,
+    /// Value bits per transmitted entry.
+    pub value_bits: f64,
+    /// Position bits per transmitted entry.
+    pub position_bits: f64,
+}
+
+impl MethodCost {
+    /// Bits per parameter per local iteration.
+    pub fn bits_per_param_iter(&self) -> f64 {
+        self.temporal * self.gradient_sparsity * (self.value_bits + self.position_bits)
+    }
+
+    /// Compression rate vs dense 32-bit updates every iteration.
+    pub fn compression_rate(&self) -> f64 {
+        32.0 / self.bits_per_param_iter()
+    }
+}
+
+/// The Table I rows (theoretical asymptotic costs).
+pub fn table1_rows() -> Vec<MethodCost> {
+    vec![
+        MethodCost { name: "Baseline", temporal: 1.0, gradient_sparsity: 1.0, value_bits: 32.0, position_bits: 0.0 },
+        MethodCost { name: "signSGD", temporal: 1.0, gradient_sparsity: 1.0, value_bits: 1.0, position_bits: 0.0 },
+        MethodCost { name: "TernGrad", temporal: 1.0, gradient_sparsity: 1.0, value_bits: 2.0, position_bits: 0.0 },
+        MethodCost { name: "QSGD(8)", temporal: 1.0, gradient_sparsity: 1.0, value_bits: 8.0, position_bits: 0.0 },
+        MethodCost { name: "GradDrop(p=.001)", temporal: 1.0, gradient_sparsity: 0.001, value_bits: 32.0, position_bits: 16.0 },
+        MethodCost { name: "DGC(p=.001)", temporal: 1.0, gradient_sparsity: 0.001, value_bits: 32.0, position_bits: 16.0 },
+        MethodCost { name: "FedAvg(n=100)", temporal: 0.01, gradient_sparsity: 1.0, value_bits: 32.0, position_bits: 0.0 },
+        MethodCost {
+            name: "SBC(p=.01,n=100)",
+            temporal: 0.01,
+            gradient_sparsity: 0.01,
+            value_bits: 0.0, // + one f32 mean per tensor, amortized to ~0
+            position_bits: golomb::expected_bits_per_position(0.01),
+        },
+    ]
+}
+
+/// Running measured-communication counters for one training run.
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    /// Total upstream bits actually put on the wire (all clients).
+    pub upstream_bits: u64,
+    /// Total messages sent.
+    pub messages: u64,
+    /// Total non-zero elements transmitted.
+    pub nonzeros: u64,
+    /// What dense-f32-every-iteration would have cost (the baseline).
+    pub baseline_bits: u64,
+}
+
+impl CommStats {
+    pub fn record_message(&mut self, wire_bits: u64, nonzeros: u64) {
+        self.upstream_bits += wire_bits;
+        self.messages += 1;
+        self.nonzeros += nonzeros;
+    }
+
+    /// Account one local iteration of one client against the baseline
+    /// (dense 32-bit update of `n_params` every iteration).
+    pub fn record_baseline_iter(&mut self, n_params: usize) {
+        self.baseline_bits += 32 * n_params as u64;
+    }
+
+    /// Measured compression rate vs the dense baseline.
+    pub fn compression_rate(&self) -> f64 {
+        if self.upstream_bits == 0 {
+            return 1.0;
+        }
+        self.baseline_bits as f64 / self.upstream_bits as f64
+    }
+
+    pub fn upstream_megabytes(&self) -> f64 {
+        self.upstream_bits as f64 / 8e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_magnitudes() {
+        let rows = table1_rows();
+        let by_name = |n: &str| rows.iter().find(|r| r.name.starts_with(n)).unwrap().compression_rate();
+        assert!((by_name("Baseline") - 1.0).abs() < 1e-9);
+        assert!((by_name("signSGD") - 32.0).abs() < 1e-9);
+        assert!((by_name("TernGrad") - 16.0).abs() < 1e-9);
+        // paper Table I: DGC ~ x666 with 48 bits per entry at p = 0.001
+        let dgc = by_name("DGC");
+        assert!((660.0..=670.0).contains(&dgc), "{dgc}");
+        // FedAvg at n=100 -> x100 (paper range x10-x1000)
+        assert!((by_name("FedAvg") - 100.0).abs() < 1e-9);
+        // SBC at p=0.01, n=100: paper's headline "up to x40000" scale
+        let sbc = by_name("SBC");
+        assert!(sbc > 30_000.0 && sbc < 50_000.0, "{sbc}");
+    }
+
+    #[test]
+    fn comm_stats_accumulate() {
+        let mut s = CommStats::default();
+        for _ in 0..10 {
+            s.record_baseline_iter(1000);
+        }
+        s.record_message(3_200, 10);
+        assert_eq!(s.upstream_bits, 3_200);
+        assert_eq!(s.baseline_bits, 320_000);
+        assert!((s.compression_rate() - 100.0).abs() < 1e-9);
+        assert!((s.upstream_megabytes() - 3_200.0 / 8e6).abs() < 1e-12);
+    }
+}

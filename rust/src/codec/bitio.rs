@@ -1,0 +1,250 @@
+//! MSB-first bit-level writer/reader — the substrate for every wire codec.
+//!
+//! The writer packs into a `Vec<u8>`; the reader walks a `&[u8]`. Both keep
+//! an exact bit count so compression rates are measured on true wire size,
+//! not approximations.
+
+#[derive(Default, Clone, Debug)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Pending bits, MSB-aligned to the *low* end: the low `nacc` bits of
+    /// `acc` are the not-yet-flushed tail of the stream.
+    acc: u64,
+    nacc: u32,
+    bits: u64,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        BitWriter { buf: Vec::with_capacity(bytes), acc: 0, nacc: 0, bits: 0 }
+    }
+
+    /// Total bits written so far.
+    #[inline]
+    pub fn len_bits(&self) -> u64 {
+        self.bits
+    }
+
+    #[inline]
+    fn flush_acc(&mut self) {
+        while self.nacc >= 8 {
+            self.nacc -= 8;
+            self.buf.push((self.acc >> self.nacc) as u8);
+        }
+    }
+
+    #[inline]
+    pub fn put_bit(&mut self, bit: bool) {
+        self.acc = (self.acc << 1) | bit as u64;
+        self.nacc += 1;
+        self.bits += 1;
+        if self.nacc >= 8 {
+            self.flush_acc();
+        }
+    }
+
+    /// Write the low `n` bits of `v`, MSB first. n <= 64.
+    #[inline]
+    pub fn put_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return;
+        }
+        // the accumulator holds < 8 pending bits, so chunks of <= 56 fit
+        if n > 56 {
+            let hi = n - 32;
+            self.put_bits(v >> 32, hi);
+            self.put_bits(v & 0xFFFF_FFFF, 32);
+            return;
+        }
+        let v = v & (u64::MAX >> (64 - n));
+        self.acc = (self.acc << n) | v;
+        self.nacc += n;
+        self.bits += n as u64;
+        self.flush_acc();
+    }
+
+    /// Unary: q ones followed by a zero.
+    pub fn put_unary(&mut self, mut q: u64) {
+        while q >= 32 {
+            self.put_bits(0xFFFF_FFFF, 32);
+            q -= 32;
+        }
+        // q ones then a zero, in one chunk (q + 1 <= 33 bits)
+        self.put_bits(((1u64 << q) - 1) << 1, q as u32 + 1);
+    }
+
+    pub fn put_f32(&mut self, x: f32) {
+        self.put_bits(x.to_bits() as u64, 32);
+    }
+
+    /// Finish and return (bytes, exact_bit_count).
+    pub fn finish(mut self) -> (Vec<u8>, u64) {
+        self.flush_acc();
+        if self.nacc > 0 {
+            let pad = 8 - self.nacc;
+            self.buf.push(((self.acc << pad) & 0xFF) as u8);
+            self.nacc = 0;
+        }
+        (self.buf, self.bits)
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.acc = 0;
+        self.nacc = 0;
+        self.bits = 0;
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: u64,
+    len_bits: u64,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8], len_bits: u64) -> Self {
+        debug_assert!(len_bits <= buf.len() as u64 * 8);
+        BitReader { buf, pos: 0, len_bits }
+    }
+
+    #[inline]
+    pub fn remaining(&self) -> u64 {
+        self.len_bits - self.pos
+    }
+
+    #[inline]
+    pub fn get_bit(&mut self) -> Option<bool> {
+        if self.pos >= self.len_bits {
+            return None;
+        }
+        let byte = self.buf[(self.pos >> 3) as usize];
+        let bit = (byte >> (7 - (self.pos & 7))) & 1 == 1;
+        self.pos += 1;
+        Some(bit)
+    }
+
+    /// Read `n` bits MSB-first, assembling byte-sized chunks.
+    pub fn get_bits(&mut self, n: u32) -> Option<u64> {
+        if self.pos + n as u64 > self.len_bits {
+            self.pos = self.len_bits; // exhaust on under-run
+            return if n == 0 { Some(0) } else { None };
+        }
+        let mut v = 0u64;
+        let mut got = 0u32;
+        while got < n {
+            let byte_i = (self.pos >> 3) as usize;
+            let bit_off = (self.pos & 7) as u32;
+            let take = (8 - bit_off).min(n - got);
+            let byte = self.buf[byte_i] as u64;
+            let chunk = (byte >> (8 - bit_off - take)) & ((1u64 << take) - 1);
+            v = (v << take) | chunk;
+            self.pos += take as u64;
+            got += take;
+        }
+        Some(v)
+    }
+
+    /// Count ones until the terminating zero (byte-at-a-time fast path).
+    pub fn get_unary(&mut self) -> Option<u64> {
+        let mut q = 0u64;
+        loop {
+            if self.pos >= self.len_bits {
+                return None;
+            }
+            let byte_i = (self.pos >> 3) as usize;
+            let bit_off = (self.pos & 7) as u32;
+            // bits of this byte from the cursor on, left-aligned in a u32
+            // (zero-filled below, so leading_ones stops at the byte's end)
+            let window = (self.buf[byte_i] as u32) << (24 + bit_off);
+            let ones = window.leading_ones().min(8 - bit_off);
+            let avail = (self.len_bits - self.pos).min((8 - bit_off) as u64);
+            if (ones as u64) < avail {
+                // terminating zero lies inside this byte
+                self.pos += ones as u64 + 1;
+                return Some(q + ones as u64);
+            }
+            // all available bits are ones; continue into the next byte
+            q += avail;
+            self.pos += avail;
+            if (ones as u64) > avail {
+                return None; // ran past the stream without a zero
+            }
+        }
+    }
+
+    pub fn get_f32(&mut self) -> Option<f32> {
+        Some(f32::from_bits(self.get_bits(32)? as u32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bits() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b1011, 4);
+        w.put_bit(true);
+        w.put_bits(0xDEADBEEF, 32);
+        w.put_unary(5);
+        w.put_f32(-1.25);
+        let total = w.len_bits();
+        assert_eq!(total, 4 + 1 + 32 + 6 + 32);
+        let (bytes, bits) = w.finish();
+        assert_eq!(bits, total);
+        let mut r = BitReader::new(&bytes, bits);
+        assert_eq!(r.get_bits(4), Some(0b1011));
+        assert_eq!(r.get_bit(), Some(true));
+        assert_eq!(r.get_bits(32), Some(0xDEADBEEF));
+        assert_eq!(r.get_unary(), Some(5));
+        assert_eq!(r.get_f32(), Some(-1.25));
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(r.get_bit(), None);
+    }
+
+    #[test]
+    fn zero_length_values() {
+        let mut w = BitWriter::new();
+        w.put_bits(0, 0);
+        w.put_unary(0);
+        let (bytes, bits) = w.finish();
+        assert_eq!(bits, 1);
+        let mut r = BitReader::new(&bytes, bits);
+        assert_eq!(r.get_unary(), Some(0));
+    }
+
+    #[test]
+    fn reader_stops_at_len_bits_not_byte_boundary() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b101, 3);
+        let (bytes, bits) = w.finish();
+        assert_eq!(bytes.len(), 1);
+        let mut r = BitReader::new(&bytes, bits);
+        assert_eq!(r.get_bits(3), Some(0b101));
+        assert_eq!(r.get_bit(), None); // padding bits are not readable
+    }
+
+    #[test]
+    fn many_random_values() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let vals: Vec<(u64, u32)> =
+            (0..500).map(|_| { let n = 1 + rng.below(48) as u32; (rng.next_u64() & ((1u64 << n) - 1), n) }).collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &vals {
+            w.put_bits(v, n);
+        }
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::new(&bytes, bits);
+        for &(v, n) in &vals {
+            assert_eq!(r.get_bits(n), Some(v));
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Golomb-Rice position coding — paper Algorithm 3 (encode) / 4 (decode)
+//! and equation (5).
+//!
+//! The gaps between successive non-zero positions of a random sparsity-p
+//! mask are geometrically distributed; the Golomb code with
+//! `b* = 1 + floor(log2( log(phi-1) / log(1-p) ))` (phi the golden ratio)
+//! is the optimal prefix code for that distribution. Gaps are encoded as
+//! `d-1 = q * 2^b* + r` → q ones, a zero, then r in b* fixed bits.
+
+use crate::codec::bitio::{BitReader, BitWriter};
+
+/// Golden ratio φ.
+pub const PHI: f64 = 1.618033988749894848;
+
+/// Optimal Rice parameter b* for sparsity `p` (paper eq. 5, left part).
+pub fn optimal_b(p: f64) -> u32 {
+    let p = p.clamp(1e-12, 0.999_999);
+    // log(phi - 1) / log(1 - p)  =  log_{1-p}(phi^-1)
+    let ratio = (PHI - 1.0).ln() / (1.0 - p).ln();
+    let b = 1 + ratio.log2().floor() as i64;
+    b.clamp(0, 62) as u32
+}
+
+/// Expected bits per position, `b̄_pos = b* + 1/(1-(1-p)^{2^b*})` (eq. 5).
+pub fn expected_bits_per_position(p: f64) -> f64 {
+    let b = optimal_b(p);
+    let m = (1u64 << b) as f64;
+    b as f64 + 1.0 / (1.0 - (1.0 - p).powf(m))
+}
+
+/// Encode sorted non-zero positions as first-difference Golomb codes.
+/// Positions must be strictly increasing. `b` is the Rice parameter.
+pub fn encode_positions(w: &mut BitWriter, positions: &[u32], b: u32) {
+    let mut prev: i64 = -1;
+    for &pos in positions {
+        let d = pos as i64 - prev; // gap >= 1
+        debug_assert!(d >= 1, "positions must be strictly increasing");
+        let v = (d - 1) as u64;
+        let q = v >> b;
+        let r = v & ((1u64 << b) - 1);
+        w.put_unary(q);
+        w.put_bits(r, b);
+        prev = pos as i64;
+    }
+}
+
+/// Decode `count` positions previously encoded with `encode_positions`.
+pub fn decode_positions(r: &mut BitReader, count: usize, b: u32) -> Option<Vec<u32>> {
+    let mut out = Vec::with_capacity(count);
+    let mut prev: i64 = -1;
+    for _ in 0..count {
+        let q = r.get_unary()?;
+        let rem = r.get_bits(b)?;
+        let d = ((q << b) | rem) as i64 + 1;
+        let pos = prev + d;
+        out.push(pos as u32);
+        prev = pos;
+    }
+    Some(out)
+}
+
+/// Measured encode size in bits for a gap list, without writing.
+pub fn measure_positions_bits(positions: &[u32], b: u32) -> u64 {
+    let mut bits = 0u64;
+    let mut prev: i64 = -1;
+    for &pos in positions {
+        let v = (pos as i64 - prev - 1) as u64;
+        bits += (v >> b) + 1 + b as u64;
+        prev = pos as i64;
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn b_star_reference_values() {
+        // The paper quotes b̄_pos = 8.38 at p = 0.01, which corresponds to
+        // b* = 7; its own eq.-5 formula (which we implement) yields b* = 6
+        // and b̄_pos = 8.11 — strictly fewer bits. Accept the formula value
+        // and require we never exceed the paper's quoted cost.
+        let b001 = expected_bits_per_position(0.01);
+        assert!((b001 - 8.108).abs() < 0.01, "{b001}");
+        assert!(b001 <= 8.38);
+        // for p = 0.001 the paper's Table I range is 8-14 position bits
+        let b = expected_bits_per_position(0.001);
+        assert!(b > 11.0 && b < 14.0, "{b}");
+    }
+
+    #[test]
+    fn optimal_b_monotone_in_p() {
+        let mut last = u32::MAX;
+        for &p in &[0.0005, 0.001, 0.01, 0.05, 0.1, 0.3] {
+            let b = optimal_b(p);
+            assert!(b <= last, "b must not grow with denser p");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn roundtrip_simple() {
+        let positions = vec![0u32, 1, 7, 8, 100, 10_000, 10_001];
+        for b in [0u32, 1, 4, 8, 12] {
+            let mut w = BitWriter::new();
+            encode_positions(&mut w, &positions, b);
+            let (bytes, bits) = w.finish();
+            assert_eq!(bits, measure_positions_bits(&positions, b));
+            let mut r = BitReader::new(&bytes, bits);
+            let got = decode_positions(&mut r, positions.len(), b).unwrap();
+            assert_eq!(got, positions);
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_masks() {
+        let mut rng = Rng::new(5);
+        for &p in &[0.001, 0.01, 0.1] {
+            let n = 200_000;
+            let positions: Vec<u32> =
+                (0..n).filter(|_| rng.next_f64() < p).map(|i| i as u32).collect();
+            if positions.is_empty() {
+                continue;
+            }
+            let b = optimal_b(p);
+            let mut w = BitWriter::new();
+            encode_positions(&mut w, &positions, b);
+            let (bytes, bits) = w.finish();
+            let mut r = BitReader::new(&bytes, bits);
+            assert_eq!(decode_positions(&mut r, positions.len(), b).unwrap(), positions);
+            // measured bits/position within 15% of the analytic expectation
+            let per = bits as f64 / positions.len() as f64;
+            let want = expected_bits_per_position(p);
+            assert!((per - want).abs() / want < 0.15, "p={p}: {per} vs {want}");
+        }
+    }
+
+    #[test]
+    fn golomb_beats_fixed16_at_p001() {
+        // the paper's ×1.9 claim at p = 0.01 vs 16-bit distance coding
+        let per = expected_bits_per_position(0.01);
+        assert!(16.0 / per > 1.85, "compression vs fixed-16: {}", 16.0 / per);
+    }
+
+    #[test]
+    fn degenerate_gaps() {
+        // all-adjacent positions (gap 1 everywhere) and one huge gap
+        let positions = vec![5u32, 6, 7, 8, 1_000_000];
+        let b = optimal_b(0.0001);
+        let mut w = BitWriter::new();
+        encode_positions(&mut w, &positions, b);
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::new(&bytes, bits);
+        assert_eq!(decode_positions(&mut r, positions.len(), b).unwrap(), positions);
+    }
+}

@@ -1,0 +1,8 @@
+//! Bit-exact wire codecs: bit I/O, Golomb (paper Alg. 3/4), comparator
+//! codecs, the message format, and communication accounting (eq. 1).
+
+pub mod accounting;
+pub mod bitio;
+pub mod golomb;
+pub mod message;
+pub mod varint;

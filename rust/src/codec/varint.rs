@@ -1,0 +1,125 @@
+//! Comparator position codecs for the ablation study (DESIGN.md §7.2):
+//! fixed-width gap coding (the "naive 16-bit" scheme the paper compares
+//! against) and Elias-gamma, a parameter-free universal code.
+
+use crate::codec::bitio::{BitReader, BitWriter};
+
+/// Fixed-width gap coding: each gap-1 in `width` bits; gaps that overflow
+/// are escaped with an all-ones marker followed by 32 raw bits (rare).
+pub fn encode_fixed(w: &mut BitWriter, positions: &[u32], width: u32) {
+    let escape = (1u64 << width) - 1;
+    let mut prev: i64 = -1;
+    for &pos in positions {
+        let v = (pos as i64 - prev - 1) as u64;
+        if v >= escape {
+            w.put_bits(escape, width);
+            w.put_bits(v, 32);
+        } else {
+            w.put_bits(v, width);
+        }
+        prev = pos as i64;
+    }
+}
+
+pub fn decode_fixed(r: &mut BitReader, count: usize, width: u32) -> Option<Vec<u32>> {
+    let escape = (1u64 << width) - 1;
+    let mut out = Vec::with_capacity(count);
+    let mut prev: i64 = -1;
+    for _ in 0..count {
+        let mut v = r.get_bits(width)?;
+        if v == escape {
+            v = r.get_bits(32)?;
+        }
+        let pos = prev + v as i64 + 1;
+        out.push(pos as u32);
+        prev = pos;
+    }
+    Some(out)
+}
+
+/// Elias-gamma code for x >= 1: floor(log2 x) zeros, then x in binary.
+pub fn put_elias_gamma(w: &mut BitWriter, x: u64) {
+    debug_assert!(x >= 1);
+    let nbits = 64 - x.leading_zeros();
+    for _ in 0..nbits - 1 {
+        w.put_bit(false);
+    }
+    w.put_bits(x, nbits);
+}
+
+pub fn get_elias_gamma(r: &mut BitReader) -> Option<u64> {
+    let mut zeros = 0u32;
+    loop {
+        match r.get_bit()? {
+            false => zeros += 1,
+            true => break,
+        }
+    }
+    let rest = r.get_bits(zeros)?;
+    Some((1u64 << zeros) | rest)
+}
+
+pub fn encode_elias(w: &mut BitWriter, positions: &[u32]) {
+    let mut prev: i64 = -1;
+    for &pos in positions {
+        put_elias_gamma(w, (pos as i64 - prev) as u64);
+        prev = pos as i64;
+    }
+}
+
+pub fn decode_elias(r: &mut BitReader, count: usize) -> Option<Vec<u32>> {
+    let mut out = Vec::with_capacity(count);
+    let mut prev: i64 = -1;
+    for _ in 0..count {
+        let d = get_elias_gamma(r)? as i64;
+        let pos = prev + d;
+        out.push(pos as u32);
+        prev = pos;
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fixed_roundtrip_with_escapes() {
+        let positions = vec![0u32, 3, 70_000, 70_001]; // 70_000 gap overflows 16 bits
+        let mut w = BitWriter::new();
+        encode_fixed(&mut w, &positions, 16);
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::new(&bytes, bits);
+        assert_eq!(decode_fixed(&mut r, positions.len(), 16).unwrap(), positions);
+    }
+
+    #[test]
+    fn elias_gamma_small_values() {
+        let mut w = BitWriter::new();
+        for x in 1..=64u64 {
+            put_elias_gamma(&mut w, x);
+        }
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::new(&bytes, bits);
+        for x in 1..=64u64 {
+            assert_eq!(get_elias_gamma(&mut r), Some(x));
+        }
+    }
+
+    #[test]
+    fn elias_positions_roundtrip() {
+        let mut rng = Rng::new(3);
+        let positions: Vec<u32> = {
+            let mut v: Vec<u32> = (0..500).map(|_| rng.next_u32() % 1_000_000).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        let mut w = BitWriter::new();
+        encode_elias(&mut w, &positions);
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::new(&bytes, bits);
+        assert_eq!(decode_elias(&mut r, positions.len()).unwrap(), positions);
+    }
+}

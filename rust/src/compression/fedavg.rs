@@ -1,0 +1,58 @@
+//! Federated Averaging (McMahan et al.) — dense, uncompressed updates;
+//! the compression gain comes entirely from communication delay, which the
+//! coordinator provides. Also serves as the "Baseline" method at n = 1.
+
+use crate::compression::{Compressor, Granularity, TensorUpdate, UpdateMsg};
+use crate::model::TensorLayout;
+
+pub struct DenseCompressor {
+    pub granularity: Granularity,
+}
+
+impl DenseCompressor {
+    pub fn new() -> Self {
+        DenseCompressor { granularity: Granularity::Global }
+    }
+}
+
+impl Default for DenseCompressor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor for DenseCompressor {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn compress(&mut self, acc: &[f32], layout: &TensorLayout, round: u32) -> UpdateMsg {
+        let tensors = match self.granularity {
+            Granularity::Global => vec![TensorUpdate::Dense(acc.to_vec())],
+            Granularity::PerTensor => {
+                layout.segments().map(|seg| TensorUpdate::Dense(acc[seg].to_vec())).collect()
+            }
+        };
+        UpdateMsg { round, tensors }
+    }
+
+    // Dense transfer is lossless — no residual needed.
+    fn uses_residual(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lossless_roundtrip() {
+        let x = vec![1.0f32, -2.0, 3.5];
+        let layout = TensorLayout::flat(3);
+        let mut c = DenseCompressor::new();
+        let dense = c.compress(&x, &layout, 0).to_dense(&layout, 1.0);
+        assert_eq!(dense, x);
+        assert!(!c.uses_residual());
+    }
+}

@@ -1,0 +1,77 @@
+//! Gradient Dropping / Deep Gradient Compression (Aji & Heafield; Lin et
+//! al.) — the paper's main sparse baseline: top-p by magnitude with
+//! full-precision (32-bit) values. Momentum correction is implicit in the
+//! delayed-update formulation; momentum factor masking is applied by the
+//! coordinator (see `momentum_mask.rs`) when enabled.
+
+use crate::compression::topk;
+use crate::compression::{Compressor, Granularity, TensorUpdate, UpdateMsg};
+use crate::model::TensorLayout;
+
+pub struct GradientDropping {
+    pub p: f64,
+    pub granularity: Granularity,
+}
+
+impl GradientDropping {
+    pub fn new(p: f64, granularity: Granularity) -> Self {
+        GradientDropping { p, granularity }
+    }
+
+    fn compress_segment(&self, x: &[f32]) -> TensorUpdate {
+        let k = ((self.p * x.len() as f64).round() as usize).max(1);
+        let idx = topk::topk_exact(x, k);
+        let val = idx.iter().map(|&i| x[i as usize]).collect();
+        TensorUpdate::SparseF32 { idx, val }
+    }
+}
+
+impl Compressor for GradientDropping {
+    fn name(&self) -> &'static str {
+        "gradient_dropping"
+    }
+
+    fn compress(&mut self, acc: &[f32], layout: &TensorLayout, round: u32) -> UpdateMsg {
+        let tensors = match self.granularity {
+            Granularity::Global => vec![self.compress_segment(acc)],
+            Granularity::PerTensor => {
+                layout.segments().map(|seg| self.compress_segment(&acc[seg])).collect()
+            }
+        };
+        UpdateMsg { round, tensors }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_exact_values() {
+        let x = vec![0.0f32, -3.0, 0.5, 2.0, -0.1];
+        let mut c = GradientDropping::new(0.4, Granularity::Global);
+        let msg = c.compress(&x, &TensorLayout::flat(5), 0);
+        match &msg.tensors[0] {
+            TensorUpdate::SparseF32 { idx, val } => {
+                assert_eq!(idx, &vec![1, 3]);
+                assert_eq!(val, &vec![-3.0, 2.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn densify_reconstructs_topk() {
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..10_000).map(|_| rng.normal()).collect();
+        let mut c = GradientDropping::new(0.001, Granularity::Global);
+        let layout = TensorLayout::flat(x.len());
+        let dense = c.compress(&x, &layout, 0).to_dense(&layout, 1.0);
+        let kept = dense.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(kept, 10);
+        for (a, b) in dense.iter().zip(&x) {
+            assert!(*a == 0.0 || a == b);
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Weight-update compression framework.
+//!
+//! A [`Compressor`] turns an accumulated weight-update (residual + fresh
+//! delta, paper eq. 2) into a [`UpdateMsg`] — the exact object that goes on
+//! the wire — plus the dense approximation needed for residual bookkeeping.
+//! Compression and encoding are separate stages: compressors produce
+//! structured updates; `codec::message` serializes them bit-exactly.
+
+pub mod fedavg;
+pub mod gradient_dropping;
+pub mod momentum_mask;
+pub mod onebit;
+pub mod qsgd;
+pub mod registry;
+pub mod residual;
+pub mod sbc;
+pub mod signsgd;
+pub mod terngrad;
+pub mod topk;
+
+use crate::model::TensorLayout;
+
+/// One tensor's compressed update, aligned with the model's tensor layout
+/// (or a single whole-vector segment when granularity is global).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorUpdate {
+    /// Dense f32 — the baseline and Federated Averaging.
+    Dense(Vec<f32>),
+    /// Sparse with full-precision values (Gradient Dropping / DGC).
+    SparseF32 { idx: Vec<u32>, val: Vec<f32> },
+    /// Sparse binary (SBC, paper Alg. 2): positions + one mean; the sign
+    /// is carried by `side_pos`.
+    SparseBinary { idx: Vec<u32>, mu: f32, side_pos: bool },
+    /// Dense sign quantization (signSGD): one bit per element.
+    Sign { signs: Vec<bool> },
+    /// Dense stochastic ternary (TernGrad): scale plus {-1,0,+1}.
+    Ternary { scale: f32, vals: Vec<i8> },
+    /// QSGD stochastic uniform quantization: per-tensor scale, signed
+    /// integer levels in [-s, s].
+    Quantized { scale: f32, levels: u8, vals: Vec<i8> },
+}
+
+impl TensorUpdate {
+    /// Number of elements the update covers when densified to length `n`.
+    pub fn nonzeros(&self) -> usize {
+        match self {
+            TensorUpdate::Dense(v) => v.iter().filter(|x| **x != 0.0).count(),
+            TensorUpdate::SparseF32 { idx, .. } => idx.len(),
+            TensorUpdate::SparseBinary { idx, .. } => idx.len(),
+            TensorUpdate::Sign { signs } => signs.len(),
+            TensorUpdate::Ternary { vals, .. } => vals.iter().filter(|v| **v != 0).count(),
+            TensorUpdate::Quantized { vals, .. } => vals.iter().filter(|v| **v != 0).count(),
+        }
+    }
+
+    /// Densify into `out` (adds into the buffer; caller zeroes it).
+    pub fn add_into(&self, out: &mut [f32], sign_scale: f32) {
+        match self {
+            TensorUpdate::Dense(v) => {
+                for (o, x) in out.iter_mut().zip(v) {
+                    *o += x;
+                }
+            }
+            TensorUpdate::SparseF32 { idx, val } => {
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] += v;
+                }
+            }
+            TensorUpdate::SparseBinary { idx, mu, side_pos } => {
+                let v = if *side_pos { *mu } else { -*mu };
+                for &i in idx {
+                    out[i as usize] += v;
+                }
+            }
+            TensorUpdate::Sign { signs } => {
+                for (o, s) in out.iter_mut().zip(signs) {
+                    *o += if *s { sign_scale } else { -sign_scale };
+                }
+            }
+            TensorUpdate::Ternary { scale, vals } => {
+                for (o, v) in out.iter_mut().zip(vals) {
+                    *o += *v as f32 * scale;
+                }
+            }
+            TensorUpdate::Quantized { scale, levels, vals } => {
+                let s = *levels as f32;
+                for (o, v) in out.iter_mut().zip(vals) {
+                    *o += *v as f32 / s * scale;
+                }
+            }
+        }
+    }
+}
+
+/// A full client→server message: one update per layout segment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UpdateMsg {
+    pub round: u32,
+    pub tensors: Vec<TensorUpdate>,
+}
+
+impl UpdateMsg {
+    /// Densify the whole message into a flat vector of length `layout.total`.
+    pub fn to_dense(&self, layout: &TensorLayout, sign_scale: f32) -> Vec<f32> {
+        let mut out = vec![0.0f32; layout.total];
+        for (seg, tu) in layout.segments().zip(&self.tensors) {
+            tu.add_into(&mut out[seg.clone()], sign_scale);
+        }
+        out
+    }
+}
+
+/// Compression granularity (paper compresses per tensor: one μ per tensor).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    PerTensor,
+    Global,
+}
+
+/// A gradient compressor. Stateless w.r.t. clients — residuals and momentum
+/// live in the coordinator's per-client state; compressors may carry
+/// method-level state (e.g. QSGD rng) via `&mut self`.
+pub trait Compressor: Send {
+    fn name(&self) -> &'static str;
+
+    /// Compress the accumulated update `acc` (layout-segmented). Returns the
+    /// message; the caller reconstructs the dense approximation via
+    /// `UpdateMsg::to_dense` for residual accounting.
+    fn compress(&mut self, acc: &[f32], layout: &TensorLayout, round: u32) -> UpdateMsg;
+
+    /// Whether this method uses residual accumulation (error feedback).
+    fn uses_residual(&self) -> bool {
+        true
+    }
+
+    /// Scale applied when densifying `Sign` updates (signSGD semantics).
+    fn sign_scale(&self) -> f32 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TensorLayout;
+
+    fn layout2() -> TensorLayout {
+        TensorLayout::new(vec![("a".into(), vec![4]), ("b".into(), vec![2, 3])])
+    }
+
+    #[test]
+    fn densify_sparse_binary() {
+        let layout = layout2();
+        let msg = UpdateMsg {
+            round: 0,
+            tensors: vec![
+                TensorUpdate::SparseBinary { idx: vec![1, 3], mu: 0.5, side_pos: false },
+                TensorUpdate::SparseF32 { idx: vec![0, 5], val: vec![1.0, -2.0] },
+            ],
+        };
+        let dense = msg.to_dense(&layout, 1.0);
+        assert_eq!(dense, vec![0.0, -0.5, 0.0, -0.5, 1.0, 0.0, 0.0, 0.0, 0.0, -2.0]);
+    }
+
+    #[test]
+    fn densify_quantized_and_ternary() {
+        let layout = TensorLayout::new(vec![("a".into(), vec![3])]);
+        let t = TensorUpdate::Ternary { scale: 2.0, vals: vec![-1, 0, 1] };
+        let mut out = vec![0.0; 3];
+        t.add_into(&mut out, 1.0);
+        assert_eq!(out, vec![-2.0, 0.0, 2.0]);
+        let q = TensorUpdate::Quantized { scale: 4.0, levels: 4, vals: vec![2, -4, 0] };
+        let dense = UpdateMsg { round: 0, tensors: vec![q] }.to_dense(&layout, 1.0);
+        assert_eq!(dense, vec![2.0, -4.0, 0.0]);
+    }
+
+    #[test]
+    fn nonzeros() {
+        assert_eq!(TensorUpdate::Dense(vec![0.0, 1.0]).nonzeros(), 1);
+        assert_eq!(
+            TensorUpdate::SparseBinary { idx: vec![1, 2, 3], mu: 0.1, side_pos: true }.nonzeros(),
+            3
+        );
+        assert_eq!(TensorUpdate::Sign { signs: vec![true, false] }.nonzeros(), 2);
+    }
+}

@@ -1,0 +1,44 @@
+//! Momentum factor masking (Lin et al. / DGC, adopted by the paper).
+//!
+//! After a round transmits certain coordinates, the local optimizer
+//! momentum at those coordinates is stale (it pushed toward an update that
+//! has now been applied globally); DGC zeroes it to avoid carrying the
+//! optimization in a wrong direction. The coordinator applies this to the
+//! flat optimizer state returned by the L2 step graph.
+
+/// Zero the optimizer state at the transmitted coordinates.
+/// `opt` may be a multiple of `n_params` long (momentum: 1x, Adam: 2x) —
+/// every segment is masked at the same offsets.
+pub fn mask_momentum(opt: &mut [f32], n_params: usize, transmitted_idx: &[u32]) {
+    if opt.is_empty() || n_params == 0 {
+        return;
+    }
+    let segments = opt.len() / n_params;
+    for s in 0..segments {
+        let off = s * n_params;
+        for &i in transmitted_idx {
+            opt[off + i as usize] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_all_segments() {
+        let mut opt = vec![1.0f32; 8]; // 2 segments of 4 (Adam-like)
+        mask_momentum(&mut opt, 4, &[1, 3]);
+        assert_eq!(opt, vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_cases() {
+        let mut opt: Vec<f32> = vec![];
+        mask_momentum(&mut opt, 0, &[0]);
+        let mut opt2 = vec![1.0f32; 3]; // opt smaller than n_params segment
+        mask_momentum(&mut opt2, 4, &[0]);
+        assert_eq!(opt2, vec![1.0; 3]); // 3/4 = 0 segments -> untouched
+    }
+}

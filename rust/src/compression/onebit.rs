@@ -1,0 +1,115 @@
+//! 1-bit SGD (Seide et al.) — dense 1-bit quantization *with* error
+//! feedback: positive entries map to the mean of positives, negative to
+//! the mean of negatives, and the quantization error goes to the residual.
+//! Wire format reuses `Sign` plus two f32 means carried as a 2-element
+//! Dense tensor appended per segment.
+
+use crate::compression::{Compressor, Granularity, TensorUpdate, UpdateMsg};
+use crate::model::TensorLayout;
+
+pub struct OneBitSgd {
+    pub granularity: Granularity,
+}
+
+impl OneBitSgd {
+    pub fn new() -> Self {
+        OneBitSgd { granularity: Granularity::PerTensor }
+    }
+
+    fn compress_segment(&self, x: &[f32]) -> Vec<TensorUpdate> {
+        let (mut sp, mut np_, mut sn, mut nn) = (0.0f64, 0u32, 0.0f64, 0u32);
+        for &v in x {
+            if v >= 0.0 {
+                sp += v as f64;
+                np_ += 1;
+            } else {
+                sn += v as f64;
+                nn += 1;
+            }
+        }
+        let mu_pos = if np_ > 0 { (sp / np_ as f64) as f32 } else { 0.0 };
+        let mu_neg = if nn > 0 { (sn / nn as f64) as f32 } else { 0.0 };
+        vec![
+            TensorUpdate::Sign { signs: x.iter().map(|&v| v >= 0.0).collect() },
+            TensorUpdate::Dense(vec![mu_pos, mu_neg]),
+        ]
+    }
+
+    /// Densify one segment's (sign, means) pair.
+    pub fn densify_segment(signs: &[bool], mu_pos: f32, mu_neg: f32, out: &mut [f32]) {
+        for (o, &s) in out.iter_mut().zip(signs) {
+            *o = if s { mu_pos } else { mu_neg };
+        }
+    }
+}
+
+impl Default for OneBitSgd {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor for OneBitSgd {
+    fn name(&self) -> &'static str {
+        "onebit"
+    }
+
+    fn compress(&mut self, acc: &[f32], layout: &TensorLayout, round: u32) -> UpdateMsg {
+        let mut tensors = Vec::new();
+        match self.granularity {
+            Granularity::Global => tensors.extend(self.compress_segment(acc)),
+            Granularity::PerTensor => {
+                for seg in layout.segments() {
+                    tensors.extend(self.compress_segment(&acc[seg]));
+                }
+            }
+        }
+        UpdateMsg { round, tensors }
+    }
+
+    // the defining feature of 1-bit SGD is error feedback
+    fn uses_residual(&self) -> bool {
+        true
+    }
+}
+
+/// Densify a full 1-bit message (pairs of Sign + Dense[2] per segment).
+pub fn onebit_to_dense(msg: &UpdateMsg, layout: &TensorLayout, granularity: Granularity) -> Vec<f32> {
+    let mut out = vec![0.0f32; layout.total];
+    let segs: Vec<std::ops::Range<usize>> = match granularity {
+        Granularity::Global => vec![0..layout.total],
+        Granularity::PerTensor => layout.segments().collect(),
+    };
+    for (si, seg) in segs.into_iter().enumerate() {
+        let TensorUpdate::Sign { signs } = &msg.tensors[2 * si] else { panic!("bad onebit msg") };
+        let TensorUpdate::Dense(mus) = &msg.tensors[2 * si + 1] else { panic!("bad onebit msg") };
+        OneBitSgd::densify_segment(signs, mus[0], mus[1], &mut out[seg]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn means_partition() {
+        let x = vec![1.0f32, 3.0, -2.0, -4.0];
+        let layout = TensorLayout::flat(4);
+        let mut c = OneBitSgd { granularity: Granularity::Global };
+        let msg = c.compress(&x, &layout, 0);
+        let dense = onebit_to_dense(&msg, &layout, Granularity::Global);
+        assert_eq!(dense, vec![2.0, 2.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn per_tensor_pairs() {
+        let layout = TensorLayout::new(vec![("a".into(), vec![2]), ("b".into(), vec![2])]);
+        let x = vec![1.0f32, -1.0, 10.0, 20.0];
+        let mut c = OneBitSgd::new();
+        let msg = c.compress(&x, &layout, 0);
+        assert_eq!(msg.tensors.len(), 4);
+        let dense = onebit_to_dense(&msg, &layout, Granularity::PerTensor);
+        assert_eq!(dense, vec![1.0, -1.0, 15.0, 15.0]);
+    }
+}

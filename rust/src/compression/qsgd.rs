@@ -1,0 +1,101 @@
+//! QSGD (Alistarh et al.) — stochastic uniform quantization to `s` levels
+//! with per-segment L2 scale and Elias-coded integer levels. Unbiased.
+
+use crate::compression::{Compressor, Granularity, TensorUpdate, UpdateMsg};
+use crate::model::TensorLayout;
+use crate::util::rng::Rng;
+use crate::util::tensor;
+
+pub struct Qsgd {
+    pub levels: u8,
+    pub granularity: Granularity,
+    rng: Rng,
+}
+
+impl Qsgd {
+    pub fn new(levels: u8, seed: u64) -> Self {
+        assert!(levels >= 1);
+        Qsgd { levels, granularity: Granularity::PerTensor, rng: Rng::new(seed) }
+    }
+
+    fn compress_segment(&mut self, x: &[f32]) -> TensorUpdate {
+        let norm = tensor::l2_norm(x);
+        if norm == 0.0 {
+            return TensorUpdate::Quantized { scale: 0.0, levels: self.levels, vals: vec![0; x.len()] };
+        }
+        let s = self.levels as f32;
+        let vals = x
+            .iter()
+            .map(|&v| {
+                let r = v.abs() / norm * s; // in [0, s]
+                let lo = r.floor();
+                let level = lo as i32 + if (self.rng.next_f32()) < r - lo { 1 } else { 0 };
+                let level = level.clamp(0, s as i32) as i8;
+                if v < 0.0 {
+                    -level
+                } else {
+                    level
+                }
+            })
+            .collect();
+        TensorUpdate::Quantized { scale: norm, levels: self.levels, vals }
+    }
+}
+
+impl Compressor for Qsgd {
+    fn name(&self) -> &'static str {
+        "qsgd"
+    }
+
+    fn compress(&mut self, acc: &[f32], layout: &TensorLayout, round: u32) -> UpdateMsg {
+        let tensors = match self.granularity {
+            Granularity::Global => vec![self.compress_segment(acc)],
+            Granularity::PerTensor => {
+                let segs: Vec<_> = layout.segments().collect();
+                segs.into_iter().map(|seg| self.compress_segment(&acc[seg])).collect()
+            }
+        };
+        UpdateMsg { round, tensors }
+    }
+
+    fn uses_residual(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let x = vec![0.3f32, -0.4, 0.0, 0.866];
+        let layout = TensorLayout::flat(4);
+        let mut c = Qsgd::new(4, 7);
+        let trials = 4000;
+        let mut sum = vec![0.0f64; 4];
+        for r in 0..trials {
+            let dense = c.compress(&x, &layout, r).to_dense(&layout, 1.0);
+            for i in 0..4 {
+                sum[i] += dense[i] as f64;
+            }
+        }
+        for i in 0..4 {
+            let mean = sum[i] / trials as f64;
+            assert!((mean - x[i] as f64).abs() < 0.05, "i={i}: {mean} vs {}", x[i]);
+        }
+    }
+
+    #[test]
+    fn levels_bounded() {
+        let mut rng = Rng::new(8);
+        let x: Vec<f32> = (0..1000).map(|_| rng.normal()).collect();
+        let mut c = Qsgd::new(8, 9);
+        match c.compress_segment(&x) {
+            TensorUpdate::Quantized { levels, vals, .. } => {
+                assert!(vals.iter().all(|&v| v.unsigned_abs() <= levels));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Method registry: configuration → boxed compressor + coordinator knobs.
+//!
+//! A [`MethodConfig`] fully describes one compression scheme including the
+//! coordinator-level settings (communication delay, residual, momentum
+//! masking); the paper's named configurations (Table II columns) are
+//! provided as constructors.
+
+use crate::compression::fedavg::DenseCompressor;
+use crate::compression::gradient_dropping::GradientDropping;
+use crate::compression::onebit::OneBitSgd;
+use crate::compression::qsgd::Qsgd;
+use crate::compression::sbc::{SbcCompressor, Selection};
+use crate::compression::signsgd::SignSgd;
+use crate::compression::terngrad::TernGrad;
+use crate::compression::{Compressor, Granularity};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Method {
+    /// Dense every round (DSGD baseline when delay = 1).
+    Baseline,
+    /// Dense with communication delay (McMahan et al.).
+    FedAvg,
+    /// Top-p sparsification, f32 values (Aji & Heafield / Lin et al.).
+    GradientDropping { p: f64 },
+    /// Sparse Binary Compression (this paper).
+    Sbc { p: f64, selection: SelectionCfg },
+    SignSgd { scale: f32 },
+    TernGrad,
+    Qsgd { levels: u8 },
+    OneBit,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectionCfg {
+    Exact,
+    Sampled(usize),
+    Hist,
+}
+
+impl From<SelectionCfg> for Selection {
+    fn from(c: SelectionCfg) -> Selection {
+        match c {
+            SelectionCfg::Exact => Selection::Exact,
+            SelectionCfg::Sampled(s) => Selection::Sampled(s),
+            SelectionCfg::Hist => Selection::Hist,
+        }
+    }
+}
+
+/// Full per-run compression configuration.
+#[derive(Clone, Debug)]
+pub struct MethodConfig {
+    pub method: Method,
+    /// Local iterations per communication round (n in the paper; 1 = DSGD).
+    pub delay: usize,
+    /// Momentum factor masking (Lin et al.), applied by the coordinator.
+    pub momentum_masking: bool,
+    /// Error feedback on/off (ablation; methods have sane defaults).
+    pub residual: Option<bool>,
+    pub granularity: Granularity,
+}
+
+impl MethodConfig {
+    pub fn baseline() -> Self {
+        Self::of(Method::Baseline, 1)
+    }
+
+    /// SBC (1): no delay, 0.1% gradient sparsity (paper §IV-B).
+    pub fn sbc1() -> Self {
+        Self::of(Method::Sbc { p: 0.001, selection: SelectionCfg::Exact }, 1)
+    }
+
+    /// SBC (2): delay 10, 1% sparsity.
+    pub fn sbc2() -> Self {
+        Self::of(Method::Sbc { p: 0.01, selection: SelectionCfg::Exact }, 10)
+    }
+
+    /// SBC (3): delay 100, 1% sparsity.
+    pub fn sbc3() -> Self {
+        Self::of(Method::Sbc { p: 0.01, selection: SelectionCfg::Exact }, 100)
+    }
+
+    /// Gradient Dropping at the paper's p = 0.1%.
+    pub fn gradient_dropping() -> Self {
+        let mut c = Self::of(Method::GradientDropping { p: 0.001 }, 1);
+        c.momentum_masking = true;
+        c
+    }
+
+    /// Federated Averaging at delay n.
+    pub fn fedavg(n: usize) -> Self {
+        Self::of(Method::FedAvg, n)
+    }
+
+    pub fn of(method: Method, delay: usize) -> Self {
+        MethodConfig {
+            method,
+            delay: delay.max(1),
+            momentum_masking: false,
+            residual: None,
+            granularity: Granularity::PerTensor,
+        }
+    }
+
+    /// Human-readable label for tables.
+    pub fn label(&self) -> String {
+        match &self.method {
+            Method::Baseline => "Baseline".into(),
+            Method::FedAvg => format!("FedAvg(n={})", self.delay),
+            Method::GradientDropping { p } => format!("GradDrop(p={p})"),
+            Method::Sbc { p, .. } => format!("SBC(p={p},n={})", self.delay),
+            Method::SignSgd { .. } => "signSGD".into(),
+            Method::TernGrad => "TernGrad".into(),
+            Method::Qsgd { levels } => format!("QSGD({levels})"),
+            Method::OneBit => "1bitSGD".into(),
+        }
+    }
+
+    /// Instantiate the compressor (seeded for stochastic methods).
+    pub fn build(&self, seed: u64) -> Box<dyn Compressor> {
+        let g = self.granularity;
+        match &self.method {
+            Method::Baseline | Method::FedAvg => Box::new(DenseCompressor { granularity: g }),
+            Method::GradientDropping { p } => Box::new(GradientDropping::new(*p, g)),
+            Method::Sbc { p, selection } => {
+                Box::new(SbcCompressor::new(*p, g, (*selection).into(), seed))
+            }
+            Method::SignSgd { scale } => Box::new(SignSgd::new(*scale)),
+            Method::TernGrad => {
+                let mut t = TernGrad::new(seed);
+                t.granularity = g;
+                Box::new(t)
+            }
+            Method::Qsgd { levels } => {
+                let mut q = Qsgd::new(*levels, seed);
+                q.granularity = g;
+                Box::new(q)
+            }
+            Method::OneBit => {
+                let mut o = OneBitSgd::new();
+                o.granularity = g;
+                Box::new(o)
+            }
+        }
+    }
+
+    /// Residual on/off, resolving the ablation override.
+    pub fn use_residual(&self, compressor_default: bool) -> bool {
+        self.residual.unwrap_or(compressor_default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper() {
+        assert_eq!(MethodConfig::sbc1().delay, 1);
+        assert_eq!(MethodConfig::sbc2().delay, 10);
+        assert_eq!(MethodConfig::sbc3().delay, 100);
+        match MethodConfig::sbc1().method {
+            Method::Sbc { p, .. } => assert_eq!(p, 0.001),
+            _ => panic!(),
+        }
+        assert!(MethodConfig::gradient_dropping().momentum_masking);
+    }
+
+    #[test]
+    fn build_all() {
+        for cfg in [
+            MethodConfig::baseline(),
+            MethodConfig::fedavg(100),
+            MethodConfig::gradient_dropping(),
+            MethodConfig::sbc1(),
+            MethodConfig::of(Method::SignSgd { scale: 0.01 }, 1),
+            MethodConfig::of(Method::TernGrad, 1),
+            MethodConfig::of(Method::Qsgd { levels: 4 }, 1),
+            MethodConfig::of(Method::OneBit, 1),
+        ] {
+            let c = cfg.build(0);
+            assert!(!c.name().is_empty());
+            assert!(!cfg.label().is_empty());
+        }
+    }
+
+    #[test]
+    fn residual_override() {
+        let mut cfg = MethodConfig::sbc1();
+        assert!(cfg.use_residual(true));
+        cfg.residual = Some(false);
+        assert!(!cfg.use_residual(true));
+    }
+}

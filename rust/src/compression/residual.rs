@@ -1,0 +1,96 @@
+//! Residual accumulation (error feedback) — paper eq. (2) and Thm. II.1.
+//!
+//! Each client keeps `R_i`; before compression the fresh update is added
+//! to the residual, and after compression the transmitted approximation is
+//! subtracted, so no gradient information is ever dropped — only delayed.
+
+use crate::util::tensor;
+
+#[derive(Clone, Debug)]
+pub struct Residual {
+    r: Vec<f32>,
+    enabled: bool,
+}
+
+impl Residual {
+    pub fn new(n: usize, enabled: bool) -> Self {
+        Residual { r: vec![0.0; n], enabled }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// acc = R + delta (into `acc`, which arrives holding `delta`).
+    pub fn accumulate_into(&self, acc: &mut [f32]) {
+        if self.enabled {
+            tensor::add_assign(acc, &self.r);
+        }
+    }
+
+    /// R = acc - transmitted (paper eq. 2). When disabled, R stays zero
+    /// (pure lossy compression, the ablation arm).
+    pub fn update(&mut self, acc: &[f32], transmitted: &[f32]) {
+        if !self.enabled {
+            return;
+        }
+        tensor::sub_into(&mut self.r, acc, transmitted);
+    }
+
+    pub fn norm(&self) -> f32 {
+        tensor::l2_norm(&self.r)
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conservation() {
+        // over T rounds, sum(delta_t) == sum(transmitted_t) + R_T exactly
+        // (the Thm II.1 bookkeeping identity)
+        let n = 64;
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mut res = Residual::new(n, true);
+        let mut sum_delta = vec![0.0f64; n];
+        let mut sum_tx = vec![0.0f64; n];
+        for _ in 0..20 {
+            let delta: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            for i in 0..n {
+                sum_delta[i] += delta[i] as f64;
+            }
+            let mut acc = delta.clone();
+            res.accumulate_into(&mut acc);
+            // "compress": keep only first 8 entries
+            let mut tx = vec![0.0f32; n];
+            tx[..8].copy_from_slice(&acc[..8]);
+            res.update(&acc, &tx);
+            for i in 0..n {
+                sum_tx[i] += tx[i] as f64;
+            }
+        }
+        for i in 0..n {
+            let lhs = sum_delta[i];
+            let rhs = sum_tx[i] + res.as_slice()[i] as f64;
+            assert!((lhs - rhs).abs() < 1e-3, "{i}: {lhs} vs {rhs}");
+        }
+        // entries 8.. were never sent: residual carries them entirely
+        assert!(res.norm() > 0.0);
+    }
+
+    #[test]
+    fn disabled_residual_stays_zero() {
+        let mut res = Residual::new(4, false);
+        let acc = [1.0f32, 2.0, 3.0, 4.0];
+        res.update(&acc, &[0.0; 4]);
+        assert_eq!(res.as_slice(), &[0.0; 4]);
+        let mut buf = [5.0f32; 4];
+        res.accumulate_into(&mut buf);
+        assert_eq!(buf, [5.0; 4]);
+    }
+}

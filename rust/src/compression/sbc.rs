@@ -1,0 +1,278 @@
+//! Sparse Binary Compression — paper Algorithm 2 (the native Rust path).
+//!
+//! Per segment (tensor or whole vector, by granularity): keep the fraction
+//! `p` largest positive and `p` most negative entries, average each side,
+//! drop the weaker side, binarize the stronger side to its mean. Combined
+//! with communication delay (coordinator), residual accumulation
+//! (`residual.rs`) and Golomb position coding (`codec::message`), this is
+//! the full SBC pipeline.
+//!
+//! Selection strategy is pluggable ([`Selection`]): `Exact` quickselect,
+//! DGC-style `Sampled`, or `Hist` — the bit-exact mirror of the L1 Pallas
+//! kernel, used to cross-validate the PJRT compress path.
+
+use crate::compression::topk::{self, hist_thresholds};
+use crate::compression::{Compressor, Granularity, TensorUpdate, UpdateMsg};
+use crate::model::TensorLayout;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Selection {
+    Exact,
+    /// Threshold estimated from a subsample of this many elements.
+    Sampled(usize),
+    /// Bit-pattern histogram quantile (kernel mirror).
+    Hist,
+}
+
+pub struct SbcCompressor {
+    pub p: f64,
+    pub granularity: Granularity,
+    pub selection: Selection,
+    rng: Rng,
+}
+
+impl SbcCompressor {
+    pub fn new(p: f64, granularity: Granularity, selection: Selection, seed: u64) -> Self {
+        SbcCompressor { p, granularity, selection, rng: Rng::new(seed) }
+    }
+
+    /// Compress one segment (paper Alg. 2). Public so tests and the PJRT
+    /// cross-validation can call it directly.
+    pub fn compress_segment(&mut self, x: &[f32]) -> TensorUpdate {
+        let n = x.len();
+        let k = ((self.p * n as f64).round() as usize).max(1);
+
+        let (pos_idx, neg_idx) = match self.selection {
+            Selection::Exact => select_exact(x, k),
+            Selection::Sampled(sample) => select_sampled(x, k, sample, &mut self.rng),
+            Selection::Hist => select_hist(x, k as u32),
+        };
+
+        let (mu_pos, mu_neg) = (mean_at(x, &pos_idx), -mean_at(x, &neg_idx));
+        // paper: if mu+ > mu- keep positives; ties resolve to the positive
+        // side (matches the kernel's `mupos >= muneg`)
+        if mu_pos >= mu_neg {
+            TensorUpdate::SparseBinary { idx: pos_idx, mu: mu_pos, side_pos: true }
+        } else {
+            TensorUpdate::SparseBinary { idx: neg_idx, mu: mu_neg, side_pos: false }
+        }
+    }
+}
+
+fn mean_at(x: &[f32], idx: &[u32]) -> f32 {
+    if idx.is_empty() {
+        return 0.0;
+    }
+    (idx.iter().map(|&i| x[i as usize] as f64).sum::<f64>() / idx.len() as f64) as f32
+}
+
+/// Exact per-side top-k: k largest positive values, k most negative.
+///
+/// Two-phase for speed (perf pass, EXPERIMENTS.md §Perf): quickselect the
+/// k-th value on a contiguous f32 copy (cache-friendly, no indirect
+/// compares), then one scan collects the indices at/above the threshold.
+fn select_exact(x: &[f32], k: usize) -> (Vec<u32>, Vec<u32>) {
+    let take_side = |sign: f32| -> Vec<u32> {
+        let mut vals: Vec<f32> = x
+            .iter()
+            .filter_map(|&v| {
+                let s = sign * v;
+                if s > 0.0 {
+                    Some(s)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let k2 = k.min(vals.len());
+        if k2 == 0 {
+            return vec![];
+        }
+        let thr = if k2 < vals.len() {
+            let (_, kth, _) =
+                vals.select_nth_unstable_by(k2 - 1, |a, b| b.partial_cmp(a).unwrap());
+            *kth
+        } else {
+            0.0 // keep every element of this side
+        };
+        let mut out = Vec::with_capacity(k2 + 8);
+        let mut ties = Vec::new();
+        for (i, &v) in x.iter().enumerate() {
+            let s = sign * v;
+            if s > thr {
+                out.push(i as u32);
+            } else if s == thr && s > 0.0 {
+                ties.push(i as u32);
+            }
+        }
+        for t in ties {
+            if out.len() >= k2 {
+                break;
+            }
+            out.push(t);
+        }
+        out.sort_unstable();
+        out
+    };
+    (take_side(1.0), take_side(-1.0))
+}
+
+fn select_sampled(x: &[f32], k: usize, sample: usize, rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+    // Estimate per-side thresholds from a magnitude subsample of each side.
+    let idx = topk::topk_sampled(x, 2 * k, sample, rng);
+    let mut pos = Vec::new();
+    let mut neg = Vec::new();
+    for i in idx {
+        if x[i as usize] > 0.0 {
+            pos.push(i);
+        } else if x[i as usize] < 0.0 {
+            neg.push(i);
+        }
+    }
+    (pos, neg)
+}
+
+fn select_hist(x: &[f32], k: u32) -> (Vec<u32>, Vec<u32>) {
+    let (tp, tn, _am) = hist_thresholds(x, k);
+    let mut pos = Vec::new();
+    let mut neg = Vec::new();
+    for (i, &v) in x.iter().enumerate() {
+        if v > 0.0 && v >= tp {
+            pos.push(i as u32);
+        } else if v < 0.0 && -v >= tn {
+            neg.push(i as u32);
+        }
+    }
+    (pos, neg)
+}
+
+impl Compressor for SbcCompressor {
+    fn name(&self) -> &'static str {
+        "sbc"
+    }
+
+    fn compress(&mut self, acc: &[f32], layout: &TensorLayout, round: u32) -> UpdateMsg {
+        let tensors = match self.granularity {
+            Granularity::Global => vec![self.compress_segment(acc)],
+            Granularity::PerTensor => {
+                layout.segments().map(|seg| self.compress_segment(&acc[seg])).collect()
+            }
+        };
+        UpdateMsg { round, tensors }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn heavy(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() * rng.next_f32().powi(3)).collect()
+    }
+
+    #[test]
+    fn algorithm2_semantics_positive_side() {
+        // handcrafted: positives clearly stronger
+        let x = vec![5.0f32, 4.0, -0.1, -0.2, 0.0, 3.0, -0.3, 0.05];
+        let mut c = SbcCompressor::new(0.25, Granularity::Global, Selection::Exact, 0);
+        match c.compress_segment(&x) {
+            TensorUpdate::SparseBinary { idx, mu, side_pos } => {
+                assert!(side_pos);
+                assert_eq!(idx, vec![0, 1]); // top-2 positives (k = 2)
+                assert!((mu - 4.5).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn algorithm2_semantics_negative_side() {
+        let x = vec![0.1f32, -5.0, 0.2, -4.0, 0.0, -3.0, 0.3, 0.05];
+        let mut c = SbcCompressor::new(0.25, Granularity::Global, Selection::Exact, 0);
+        match c.compress_segment(&x) {
+            TensorUpdate::SparseBinary { idx, mu, side_pos } => {
+                assert!(!side_pos);
+                assert_eq!(idx, vec![1, 3]);
+                assert!((mu - 4.5).abs() < 1e-6);
+                // densified: -mu at idx
+                let mut out = vec![0.0f32; 8];
+                TensorUpdate::SparseBinary { idx, mu, side_pos }.add_into(&mut out, 1.0);
+                assert_eq!(out[1], -4.5);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sparsity_is_respected() {
+        let x = heavy(100_000, 7);
+        let mut c = SbcCompressor::new(0.01, Granularity::Global, Selection::Exact, 0);
+        let tu = c.compress_segment(&x);
+        let k = 1000;
+        assert_eq!(tu.nonzeros(), k);
+    }
+
+    #[test]
+    fn hist_selection_close_to_exact() {
+        let x = heavy(100_000, 8);
+        let mut ce = SbcCompressor::new(0.01, Granularity::Global, Selection::Exact, 0);
+        let mut ch = SbcCompressor::new(0.01, Granularity::Global, Selection::Hist, 0);
+        let (te, th) = (ce.compress_segment(&x), ch.compress_segment(&x));
+        let (TensorUpdate::SparseBinary { idx: ie, mu: me, side_pos: se },
+             TensorUpdate::SparseBinary { idx: ih, mu: mh, side_pos: sh }) = (te, th)
+        else {
+            panic!()
+        };
+        // With near-symmetric data mu+ ~ mu- and the side choice can flip
+        // between selection strategies; either way the transmitted means
+        // must be close and the kept count within histogram-bin overshoot.
+        assert!((me - mh).abs() / me.max(1e-9) < 0.05, "mu {me} vs {mh}");
+        if se == sh {
+            assert!(ih.len() >= ie.len());
+            assert!(ih.len() <= ie.len() + ie.len() / 8 + 64);
+        }
+    }
+
+    #[test]
+    fn per_tensor_granularity_one_mu_per_tensor() {
+        let layout = TensorLayout::new(vec![("a".into(), vec![1000]), ("b".into(), vec![500])]);
+        let x = heavy(1500, 9);
+        let mut c = SbcCompressor::new(0.02, Granularity::PerTensor, Selection::Exact, 0);
+        let msg = c.compress(&x, &layout, 3);
+        assert_eq!(msg.tensors.len(), 2);
+        assert_eq!(msg.round, 3);
+        for t in &msg.tensors {
+            assert!(matches!(t, TensorUpdate::SparseBinary { .. }));
+        }
+    }
+
+    #[test]
+    fn all_zero_segment() {
+        let x = vec![0.0f32; 1000];
+        let mut c = SbcCompressor::new(0.01, Granularity::Global, Selection::Exact, 0);
+        match c.compress_segment(&x) {
+            TensorUpdate::SparseBinary { idx, mu, .. } => {
+                assert!(idx.is_empty());
+                assert_eq!(mu, 0.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn one_sided_input() {
+        // every entry negative: positive side empty, negative side chosen
+        let x: Vec<f32> = heavy(10_000, 10).iter().map(|v| -v.abs() - 1e-6).collect();
+        let mut c = SbcCompressor::new(0.01, Granularity::Global, Selection::Exact, 0);
+        match c.compress_segment(&x) {
+            TensorUpdate::SparseBinary { idx, mu, side_pos } => {
+                assert!(!side_pos);
+                assert_eq!(idx.len(), 100);
+                assert!(mu > 0.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

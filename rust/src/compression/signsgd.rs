@@ -1,0 +1,62 @@
+//! signSGD (Bernstein et al.) — dense 1-bit sign quantization. The server
+//! aggregates by majority vote (handled in `coordinator::aggregation`);
+//! the client-side sign scale is the configured server step size.
+
+use crate::compression::{Compressor, Granularity, TensorUpdate, UpdateMsg};
+use crate::model::TensorLayout;
+
+pub struct SignSgd {
+    pub granularity: Granularity,
+    /// Magnitude applied per sign on densify (server lr in the paper).
+    pub scale: f32,
+}
+
+impl SignSgd {
+    pub fn new(scale: f32) -> Self {
+        SignSgd { granularity: Granularity::Global, scale }
+    }
+
+    fn compress_segment(&self, x: &[f32]) -> TensorUpdate {
+        TensorUpdate::Sign { signs: x.iter().map(|&v| v >= 0.0).collect() }
+    }
+}
+
+impl Compressor for SignSgd {
+    fn name(&self) -> &'static str {
+        "signsgd"
+    }
+
+    fn compress(&mut self, acc: &[f32], layout: &TensorLayout, round: u32) -> UpdateMsg {
+        let tensors = match self.granularity {
+            Granularity::Global => vec![self.compress_segment(acc)],
+            Granularity::PerTensor => {
+                layout.segments().map(|seg| self.compress_segment(&acc[seg])).collect()
+            }
+        };
+        UpdateMsg { round, tensors }
+    }
+
+    // signSGD does not use error feedback in its published form.
+    fn uses_residual(&self) -> bool {
+        false
+    }
+
+    fn sign_scale(&self) -> f32 {
+        self.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signs_and_scale() {
+        let x = vec![0.5f32, -0.1, 0.0, -7.0];
+        let layout = TensorLayout::flat(4);
+        let mut c = SignSgd::new(0.01);
+        let msg = c.compress(&x, &layout, 0);
+        let dense = msg.to_dense(&layout, c.sign_scale());
+        assert_eq!(dense, vec![0.01, -0.01, 0.01, -0.01]);
+    }
+}

@@ -1,0 +1,113 @@
+//! TernGrad (Wen et al.) — stochastic ternarization: each coordinate
+//! becomes s_t * sign(x) with probability |x| / s_t (s_t = max |x| per
+//! segment), else 0. Unbiased: E[out] = x.
+
+use crate::compression::{Compressor, Granularity, TensorUpdate, UpdateMsg};
+use crate::model::TensorLayout;
+use crate::util::rng::Rng;
+use crate::util::tensor;
+
+pub struct TernGrad {
+    pub granularity: Granularity,
+    rng: Rng,
+}
+
+impl TernGrad {
+    pub fn new(seed: u64) -> Self {
+        TernGrad { granularity: Granularity::PerTensor, rng: Rng::new(seed) }
+    }
+
+    fn compress_segment(&mut self, x: &[f32]) -> TensorUpdate {
+        let s = tensor::abs_max(x);
+        if s == 0.0 {
+            return TensorUpdate::Ternary { scale: 0.0, vals: vec![0; x.len()] };
+        }
+        let vals = x
+            .iter()
+            .map(|&v| {
+                let p = (v.abs() / s) as f64;
+                if (self.rng.next_f64()) < p {
+                    if v >= 0.0 {
+                        1i8
+                    } else {
+                        -1
+                    }
+                } else {
+                    0
+                }
+            })
+            .collect();
+        TensorUpdate::Ternary { scale: s, vals }
+    }
+}
+
+impl Compressor for TernGrad {
+    fn name(&self) -> &'static str {
+        "terngrad"
+    }
+
+    fn compress(&mut self, acc: &[f32], layout: &TensorLayout, round: u32) -> UpdateMsg {
+        let tensors = match self.granularity {
+            Granularity::Global => vec![self.compress_segment(acc)],
+            Granularity::PerTensor => {
+                let segs: Vec<_> = layout.segments().collect();
+                segs.into_iter().map(|seg| self.compress_segment(&acc[seg])).collect()
+            }
+        };
+        UpdateMsg { round, tensors }
+    }
+
+    // published TernGrad is unbiased and does not use error feedback
+    fn uses_residual(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let x = vec![0.5f32, -0.25, 0.0, 1.0];
+        let layout = TensorLayout::flat(4);
+        let mut c = TernGrad::new(3);
+        let trials = 4000;
+        let mut sum = vec![0.0f64; 4];
+        for r in 0..trials {
+            let dense = c.compress(&x, &layout, r).to_dense(&layout, 1.0);
+            for i in 0..4 {
+                sum[i] += dense[i] as f64;
+            }
+        }
+        for i in 0..4 {
+            let mean = sum[i] / trials as f64;
+            assert!((mean - x[i] as f64).abs() < 0.05, "i={i}: {mean} vs {}", x[i]);
+        }
+    }
+
+    #[test]
+    fn max_element_always_kept() {
+        let x = vec![0.1f32, -2.0, 0.3];
+        let mut c = TernGrad::new(4);
+        match c.compress_segment(&x) {
+            TensorUpdate::Ternary { scale, vals } => {
+                assert_eq!(scale, 2.0);
+                assert_eq!(vals[1], -1); // p = 1 for the absmax element
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_segment() {
+        let mut c = TernGrad::new(5);
+        match c.compress_segment(&[0.0; 10]) {
+            TensorUpdate::Ternary { scale, vals } => {
+                assert_eq!(scale, 0.0);
+                assert!(vals.iter().all(|&v| v == 0));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

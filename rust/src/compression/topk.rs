@@ -1,0 +1,229 @@
+//! Top-k magnitude selection — three strategies (ablated, DESIGN.md §7.1):
+//!
+//! * `exact`: Floyd-Rivest-style quickselect on magnitudes, O(n);
+//! * `sampled`: DGC-style threshold estimated from a random subsample;
+//! * `hist`: the bit-pattern histogram quantile — a faithful Rust
+//!   replication of the L1 Pallas kernel (same bins, same tie handling),
+//!   used to cross-validate the PJRT compress path bit-for-bit.
+
+use crate::util::rng::Rng;
+
+/// Select the indices of the k largest-magnitude entries (any order).
+/// O(n) average via quickselect on a scratch copy.
+pub fn topk_exact(x: &[f32], k: usize) -> Vec<u32> {
+    let k = k.min(x.len());
+    if k == 0 {
+        return vec![];
+    }
+    if k == x.len() {
+        return (0..x.len() as u32).collect();
+    }
+    let mut mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+    let kth = {
+        let (_, kth, _) = mags.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+        *kth
+    };
+    // collect everything strictly above, then fill ties up to k
+    let mut out = Vec::with_capacity(k);
+    let mut ties = Vec::new();
+    for (i, v) in x.iter().enumerate() {
+        let m = v.abs();
+        if m > kth {
+            out.push(i as u32);
+        } else if m == kth {
+            ties.push(i as u32);
+        }
+    }
+    for t in ties {
+        if out.len() >= k {
+            break;
+        }
+        out.push(t);
+    }
+    out.sort_unstable();
+    out
+}
+
+/// DGC-style sampled threshold: estimate the k-th magnitude from a random
+/// subsample of `sample` elements, then take everything above it.
+pub fn topk_sampled(x: &[f32], k: usize, sample: usize, rng: &mut Rng) -> Vec<u32> {
+    if x.is_empty() || k == 0 {
+        return vec![];
+    }
+    let sample = sample.clamp(1, x.len());
+    let mut mags: Vec<f32> = (0..sample).map(|_| x[rng.below(x.len())].abs()).collect();
+    let frac = k as f64 / x.len() as f64;
+    let ks = ((frac * sample as f64).round() as usize).clamp(1, sample);
+    let thr = {
+        let (_, kth, _) = mags.select_nth_unstable_by(ks - 1, |a, b| b.partial_cmp(a).unwrap());
+        *kth
+    };
+    let mut out: Vec<u32> =
+        x.iter().enumerate().filter(|(_, v)| v.abs() >= thr).map(|(i, _)| i as u32).collect();
+    out.sort_unstable();
+    out
+}
+
+// --- bit-pattern histogram (mirror of python/compile/kernels) -------------
+
+pub const OCTAVES: i32 = 16;
+pub const SUBBINS: i32 = 64;
+pub const NBINS: usize = ((OCTAVES + 1) * SUBBINS) as usize; // 1088
+
+#[inline]
+fn exp_base(absmax: f32) -> i32 {
+    let emax = (absmax.to_bits() >> 23) as i32;
+    (emax - OCTAVES).max(1)
+}
+
+#[inline]
+fn bin_index(mag: f32, base: i32) -> usize {
+    let bits = mag.to_bits() as i32;
+    let e = bits >> 23;
+    let sub = (bits >> 17) & (SUBBINS - 1);
+    let erel = e - base;
+    if erel < 0 {
+        0
+    } else {
+        ((erel * SUBBINS + sub).min(NBINS as i32 - 1)) as usize
+    }
+}
+
+#[inline]
+fn bin_lower_edge(idx: usize, base: i32) -> f32 {
+    let e = base + idx as i32 / SUBBINS;
+    let sub = idx as i32 % SUBBINS;
+    f32::from_bits(((e << 23) | (sub << 17)) as u32)
+}
+
+/// Signed histograms over a slice: (pos_hist, neg_hist, absmax).
+pub fn signed_histograms(x: &[f32]) -> (Vec<u32>, Vec<u32>, f32) {
+    let absmax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let base = exp_base(absmax);
+    let mut hpos = vec![0u32; NBINS];
+    let mut hneg = vec![0u32; NBINS];
+    for &v in x {
+        if v > 0.0 {
+            hpos[bin_index(v, base)] += 1;
+        } else if v < 0.0 {
+            hneg[bin_index(-v, base)] += 1;
+        }
+    }
+    (hpos, hneg, absmax)
+}
+
+/// Threshold (bin lower edge) such that count(value >= t) >= k, ignoring
+/// the noise bucket (bin 0) — exact mirror of `ref.threshold_from_hist`.
+pub fn threshold_from_hist(hist: &[u32], k: u32, absmax: f32) -> f32 {
+    let base = exp_base(absmax);
+    let mut tail = 0u64;
+    let mut idx = 1usize; // fallback: lowest non-noise bin
+    let mut found = false;
+    // scan from the top; the *largest* i with tail(i) >= k
+    for i in (1..NBINS).rev() {
+        tail += hist[i] as u64;
+        if tail >= k as u64 {
+            idx = i;
+            found = true;
+            break;
+        }
+    }
+    if !found {
+        idx = 1;
+    }
+    bin_lower_edge(idx, base)
+}
+
+/// Histogram-based top-k thresholds for both sides (mirrors the Pallas
+/// compress graph's threshold stage). Returns (t_pos, t_neg, absmax).
+pub fn hist_thresholds(x: &[f32], k: u32) -> (f32, f32, f32) {
+    let (hpos, hneg, absmax) = signed_histograms(x);
+    (threshold_from_hist(&hpos, k, absmax), threshold_from_hist(&hneg, k, absmax), absmax)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn heavy(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() * rng.next_f32().powi(4)).collect()
+    }
+
+    #[test]
+    fn exact_selects_largest() {
+        let x = [0.1f32, -5.0, 0.2, 3.0, -0.05];
+        let idx = topk_exact(&x, 2);
+        assert_eq!(idx, vec![1, 3]);
+        assert_eq!(topk_exact(&x, 0), Vec::<u32>::new());
+        assert_eq!(topk_exact(&x, 5).len(), 5);
+        assert_eq!(topk_exact(&x, 99).len(), 5);
+    }
+
+    #[test]
+    fn exact_handles_ties() {
+        let x = [1.0f32; 10];
+        let idx = topk_exact(&x, 3);
+        assert_eq!(idx.len(), 3);
+    }
+
+    #[test]
+    fn exact_matches_sort_reference() {
+        let x = heavy(10_000, 3);
+        for k in [1usize, 10, 100, 5000] {
+            let got = topk_exact(&x, k);
+            assert_eq!(got.len(), k);
+            // reference: sort by magnitude
+            let mut order: Vec<usize> = (0..x.len()).collect();
+            order.sort_by(|&a, &b| x[b].abs().partial_cmp(&x[a].abs()).unwrap());
+            let min_kept: f32 = got.iter().map(|&i| x[i as usize].abs()).fold(f32::MAX, f32::min);
+            let kth = x[order[k - 1]].abs();
+            assert_eq!(min_kept, kth, "k={k}");
+        }
+    }
+
+    #[test]
+    fn sampled_close_to_exact() {
+        let x = heavy(50_000, 4);
+        let k = 500;
+        let mut rng = Rng::new(9);
+        let idx = topk_sampled(&x, k, 5_000, &mut rng);
+        // sampled keeps roughly k elements (within 3x either way)
+        assert!(idx.len() >= k / 3 && idx.len() <= k * 3, "{}", idx.len());
+    }
+
+    #[test]
+    fn hist_threshold_keeps_at_least_k() {
+        let x = heavy(100_000, 5);
+        for k in [10u32, 100, 1000] {
+            let (tp, tn, _) = hist_thresholds(&x, k);
+            let np = x.iter().filter(|&&v| v > 0.0 && v >= tp).count() as u32;
+            let nn = x.iter().filter(|&&v| v < 0.0 && -v >= tn).count() as u32;
+            assert!(np >= k, "pos {np} < {k}");
+            assert!(nn >= k, "neg {nn} < {k}");
+            // overshoot bounded by boundary bin (~a few % at these ks)
+            assert!(np <= k + k / 4 + 64, "pos overshoot {np} vs {k}");
+            assert!(nn <= k + k / 4 + 64, "neg overshoot {nn} vs {k}");
+        }
+    }
+
+    #[test]
+    fn bin_edge_is_exact_inverse() {
+        let base = exp_base(1.0);
+        for idx in 1..NBINS {
+            let edge = bin_lower_edge(idx, base);
+            assert_eq!(bin_index(edge, base), idx, "idx {idx}");
+            // the float just below the edge falls in a lower bin
+            let below = f32::from_bits(edge.to_bits() - 1);
+            assert!(bin_index(below, base) < idx);
+        }
+    }
+
+    #[test]
+    fn all_zero_input() {
+        let x = vec![0.0f32; 1000];
+        let (tp, _tn, am) = hist_thresholds(&x, 10);
+        assert_eq!(am, 0.0);
+        assert!(x.iter().all(|&v| !(v > 0.0 && v >= tp)));
+    }
+}

@@ -1,0 +1,172 @@
+//! Experiment configuration: TOML files + named presets.
+//!
+//! `sbc-train train --config configs/foo.toml` or
+//! `sbc-train train --model lenet --method sbc2 --iterations 2000`.
+
+pub mod presets;
+
+use anyhow::{anyhow, Result};
+
+use crate::codec::message::PosCodec;
+use crate::compression::registry::{Method, MethodConfig, SelectionCfg};
+use crate::compression::Granularity;
+use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::trainer::TrainConfig;
+use crate::formats::toml::{Doc, Value};
+use crate::netsim::Link;
+
+/// Parse a method name: "baseline", "fedavg", "gd"/"gradient_dropping",
+/// "sbc1"/"sbc2"/"sbc3"/"sbc", "signsgd", "terngrad", "qsgd", "onebit".
+pub fn parse_method(name: &str, p: f64, delay: usize) -> Result<MethodConfig> {
+    Ok(match name {
+        "baseline" => MethodConfig::baseline(),
+        "fedavg" => MethodConfig::fedavg(delay.max(2)),
+        "gd" | "gradient_dropping" | "dgc" => {
+            let mut c = MethodConfig::of(Method::GradientDropping { p }, 1);
+            c.momentum_masking = true;
+            c
+        }
+        "sbc1" => MethodConfig::sbc1(),
+        "sbc2" => MethodConfig::sbc2(),
+        "sbc3" => MethodConfig::sbc3(),
+        "sbc" => MethodConfig::of(Method::Sbc { p, selection: SelectionCfg::Exact }, delay),
+        "signsgd" => MethodConfig::of(Method::SignSgd { scale: 1e-3 }, 1),
+        "terngrad" => MethodConfig::of(Method::TernGrad, 1),
+        "qsgd" => MethodConfig::of(Method::Qsgd { levels: 4 }, 1),
+        "onebit" => MethodConfig::of(Method::OneBit, 1),
+        other => return Err(anyhow!("unknown method '{other}'")),
+    })
+}
+
+fn parse_link(name: &str) -> Result<Link> {
+    Ok(match name {
+        "datacenter" | "10g" => Link::datacenter_10g(),
+        "wifi" => Link::wifi(),
+        "lte" | "mobile" => Link::mobile_lte(),
+        "3g" | "rural" => Link::rural_3g(),
+        other => return Err(anyhow!("unknown link profile '{other}'")),
+    })
+}
+
+/// Build a TrainConfig from a parsed TOML doc (all keys optional except
+/// model; defaults follow the paper's Table III where applicable).
+pub fn train_config_from_doc(doc: &Doc) -> Result<TrainConfig> {
+    let model = doc
+        .get("model")
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("config needs a 'model' key"))?
+        .to_string();
+    let method_name = doc.str_or("compression.method", "sbc2").to_string();
+    let p = doc.f64_or("compression.p", 0.01);
+    let delay = doc.i64_or("compression.delay", 1) as usize;
+    let mut method = parse_method(&method_name, p, delay)?;
+    if let Some(v) = doc.get("compression.momentum_masking").and_then(Value::as_bool) {
+        method.momentum_masking = v;
+    }
+    if let Some(v) = doc.get("compression.residual").and_then(Value::as_bool) {
+        method.residual = Some(v);
+    }
+    if doc.str_or("compression.granularity", "per_tensor") == "global" {
+        method.granularity = Granularity::Global;
+    }
+    if doc.str_or("compression.selection", "exact") == "hist" {
+        if let Method::Sbc { p, .. } = method.method {
+            method.method = Method::Sbc { p, selection: SelectionCfg::Hist };
+        }
+    }
+
+    let iterations = doc.i64_or("train.iterations", 1000) as usize;
+    let base_lr = doc.f64_or("train.lr", 0.0) as f32; // 0 -> model default
+    let decay = doc.f64_or("train.lr_decay", 0.1) as f32;
+    let milestones: Vec<usize> = doc
+        .get("train.decay_at")
+        .and_then(|v| match v {
+            Value::Arr(a) => Some(a.iter().filter_map(Value::as_i64).map(|i| i as usize).collect()),
+            _ => None,
+        })
+        .unwrap_or_default();
+    let lr = if milestones.is_empty() {
+        LrSchedule::constant(base_lr)
+    } else {
+        LrSchedule::step(base_lr, decay, milestones)
+    };
+
+    let mut cfg = TrainConfig::new(&model, method, iterations, lr);
+    cfg.clients = doc.i64_or("train.clients", 4) as usize;
+    cfg.eval_every_rounds = doc.i64_or("train.eval_every_rounds", 10) as usize;
+    cfg.eval_batches = doc.i64_or("train.eval_batches", 4) as usize;
+    cfg.seed = doc.i64_or("seed", 42) as u64;
+    cfg.verbose = doc.bool_or("train.verbose", false);
+    cfg.use_pjrt_compress = doc.bool_or("compression.use_pjrt", false);
+    cfg.pos_codec = match doc.str_or("compression.pos_codec", "golomb") {
+        "golomb" => PosCodec::Golomb,
+        "fixed16" => PosCodec::Fixed16,
+        "elias" => PosCodec::Elias,
+        other => return Err(anyhow!("unknown pos codec '{other}'")),
+    };
+    cfg.uplink = parse_link(doc.str_or("net.uplink", "wifi"))?;
+    cfg.downlink = parse_link(doc.str_or("net.downlink", "wifi"))?;
+    Ok(cfg)
+}
+
+pub fn load_train_config(path: &str) -> Result<TrainConfig> {
+    let text = std::fs::read_to_string(path)?;
+    train_config_from_doc(&Doc::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config() {
+        let doc = Doc::parse(
+            r#"
+            model = "lenet"
+            seed = 7
+            [train]
+            iterations = 500
+            lr = 0.001
+            clients = 4
+            decay_at = [300]
+            [compression]
+            method = "sbc"
+            p = 0.005
+            delay = 20
+            momentum_masking = true
+            pos_codec = "elias"
+            [net]
+            uplink = "lte"
+            "#,
+        )
+        .unwrap();
+        let cfg = train_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.model, "lenet");
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.method.delay, 20);
+        assert!(cfg.method.momentum_masking);
+        assert_eq!(cfg.pos_codec, PosCodec::Elias);
+        match cfg.method.method {
+            Method::Sbc { p, .. } => assert_eq!(p, 0.005),
+            _ => panic!(),
+        }
+        assert!((cfg.uplink.bandwidth_bps - 12e6).abs() < 1.0);
+        assert_eq!(cfg.lr.at(0), 0.001);
+        assert!((cfg.lr.at(300) - 0.0001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn method_names() {
+        assert!(parse_method("baseline", 0.0, 1).is_ok());
+        assert!(parse_method("sbc3", 0.0, 1).is_ok());
+        assert!(parse_method("qsgd", 0.0, 1).is_ok());
+        assert!(parse_method("nope", 0.0, 1).is_err());
+        assert_eq!(parse_method("fedavg", 0.0, 100).unwrap().delay, 100);
+    }
+
+    #[test]
+    fn missing_model_fails() {
+        let doc = Doc::parse("seed = 1").unwrap();
+        assert!(train_config_from_doc(&doc).is_err());
+    }
+}

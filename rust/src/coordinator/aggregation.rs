@@ -1,0 +1,117 @@
+//! Server-side aggregation of decoded client updates (Alg. 1 lines 16-19).
+
+use crate::compression::onebit::onebit_to_dense;
+use crate::compression::registry::{Method, MethodConfig};
+use crate::compression::{Granularity, UpdateMsg};
+use crate::model::TensorLayout;
+
+/// How the server combines client updates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AggRule {
+    /// Plain averaging (paper Alg. 1: ΔW = mean of client updates).
+    Mean,
+    /// signSGD majority vote: sign of the summed signs, times `scale`.
+    MajoritySign { scale: f32 },
+}
+
+impl AggRule {
+    pub fn for_method(cfg: &MethodConfig) -> AggRule {
+        match cfg.method {
+            Method::SignSgd { scale } => AggRule::MajoritySign { scale },
+            _ => AggRule::Mean,
+        }
+    }
+}
+
+/// Densify one decoded message according to the method's wire layout.
+pub fn densify(
+    msg: &UpdateMsg,
+    cfg: &MethodConfig,
+    layout: &TensorLayout,
+    sign_scale: f32,
+) -> Vec<f32> {
+    match cfg.method {
+        Method::OneBit => onebit_to_dense(msg, layout, cfg.granularity),
+        _ => {
+            // Global granularity wraps the whole vector in one segment.
+            match cfg.granularity {
+                Granularity::Global => msg.to_dense(&TensorLayout::flat(layout.total), sign_scale),
+                Granularity::PerTensor => msg.to_dense(layout, sign_scale),
+            }
+        }
+    }
+}
+
+/// Aggregate densified updates into the master delta.
+pub fn aggregate(updates: &[Vec<f32>], rule: AggRule) -> Vec<f32> {
+    assert!(!updates.is_empty());
+    let n = updates[0].len();
+    let mut out = vec![0.0f32; n];
+    for u in updates {
+        assert_eq!(u.len(), n);
+        for i in 0..n {
+            out[i] += u[i];
+        }
+    }
+    match rule {
+        AggRule::Mean => {
+            let inv = 1.0 / updates.len() as f32;
+            for v in out.iter_mut() {
+                *v *= inv;
+            }
+        }
+        AggRule::MajoritySign { scale } => {
+            for v in out.iter_mut() {
+                *v = if *v > 0.0 {
+                    scale
+                } else if *v < 0.0 {
+                    -scale
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::TensorUpdate;
+
+    #[test]
+    fn mean_aggregation() {
+        let got = aggregate(&[vec![1.0, 2.0], vec![3.0, -2.0]], AggRule::Mean);
+        assert_eq!(got, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn majority_vote() {
+        let got = aggregate(
+            &[vec![0.1, -0.1, 0.0], vec![0.1, -0.1, 0.0], vec![-0.1, 0.1, 0.0]],
+            AggRule::MajoritySign { scale: 0.5 },
+        );
+        assert_eq!(got, vec![0.5, -0.5, 0.0]);
+    }
+
+    #[test]
+    fn densify_respects_granularity() {
+        let layout = TensorLayout::new(vec![("a".into(), vec![2]), ("b".into(), vec![2])]);
+        let mut cfg = MethodConfig::sbc1();
+        cfg.granularity = Granularity::Global;
+        let msg = UpdateMsg {
+            round: 0,
+            tensors: vec![TensorUpdate::SparseBinary { idx: vec![3], mu: 1.0, side_pos: true }],
+        };
+        let dense = densify(&msg, &cfg, &layout, 1.0);
+        assert_eq!(dense, vec![0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn rule_for_method() {
+        assert_eq!(AggRule::for_method(&MethodConfig::sbc1()), AggRule::Mean);
+        let s = MethodConfig::of(Method::SignSgd { scale: 0.01 }, 1);
+        assert_eq!(AggRule::for_method(&s), AggRule::MajoritySign { scale: 0.01 });
+    }
+}

@@ -1,0 +1,68 @@
+//! Per-client distributed-training state (paper Alg. 1 lines 6-14).
+
+use crate::compression::residual::Residual;
+use crate::compression::Compressor;
+use crate::util::rng::Rng;
+
+pub struct ClientState {
+    pub id: usize,
+    /// Flat optimizer state, layout identical to the L2 graphs'.
+    pub opt: Vec<f32>,
+    /// Error-feedback residual (paper eq. 2).
+    pub residual: Residual,
+    /// This client's compressor instance (stateful for stochastic methods).
+    pub compressor: Box<dyn Compressor>,
+    /// Local iteration counter (Adam bias correction, schedules).
+    pub iterations: usize,
+    /// Client-local RNG stream (data sampling).
+    pub rng: Rng,
+    /// Cumulative upstream bits this client has sent.
+    pub up_bits: u64,
+}
+
+impl ClientState {
+    pub fn new(
+        id: usize,
+        n_params: usize,
+        opt_size: usize,
+        residual_enabled: bool,
+        compressor: Box<dyn Compressor>,
+        root_rng: &Rng,
+    ) -> Self {
+        ClientState {
+            id,
+            opt: vec![0.0; opt_size],
+            residual: Residual::new(n_params, residual_enabled),
+            compressor,
+            iterations: 0,
+            rng: root_rng.child(0x1000 + id as u64),
+            up_bits: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::registry::MethodConfig;
+
+    #[test]
+    fn construction() {
+        let root = Rng::new(1);
+        let cfg = MethodConfig::sbc1();
+        let c = ClientState::new(2, 100, 100, true, cfg.build(7), &root);
+        assert_eq!(c.id, 2);
+        assert_eq!(c.opt.len(), 100);
+        assert!(c.residual.enabled());
+        assert_eq!(c.compressor.name(), "sbc");
+    }
+
+    #[test]
+    fn distinct_rng_streams() {
+        let root = Rng::new(1);
+        let cfg = MethodConfig::baseline();
+        let mut a = ClientState::new(0, 4, 1, false, cfg.build(0), &root);
+        let mut b = ClientState::new(1, 4, 1, false, cfg.build(0), &root);
+        assert_ne!(a.rng.next_u64(), b.rng.next_u64());
+    }
+}

@@ -1,0 +1,61 @@
+//! DSGD coordinator (paper Algorithm 1): synchronous rounds with
+//! communication delay, per-client residuals and momentum, bit-true
+//! message encode/decode, server aggregation, evaluation and logging.
+
+pub mod aggregation;
+pub mod client;
+pub mod schedule;
+pub mod trainer;
+
+use crate::model::TensorLayout;
+use crate::util::rng::Rng;
+
+/// Evaluation output: mean loss plus the task metric (accuracy for
+/// classifiers, perplexity for LMs — see [`crate::model::Task`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalOut {
+    pub loss: f32,
+    pub metric: f32,
+}
+
+/// A training substrate the coordinator can drive: either the PJRT
+/// runtime executing AOT artifacts ([`crate::runtime::PjrtBackend`]) or
+/// the pure-Rust MLP ([`crate::sgd::NativeMlpBackend`]).
+///
+/// The backend owns the dataset (shards + held-out eval split); the
+/// coordinator owns all distributed state (master weights, residuals,
+/// per-client optimizer state, compression, accounting).
+pub trait TrainBackend {
+    fn n_params(&self) -> usize;
+    fn opt_size(&self) -> usize;
+    fn layout(&self) -> &TensorLayout;
+    /// Accuracy-type or perplexity-type metric?
+    fn is_lm(&self) -> bool;
+
+    /// Deterministic initial parameters.
+    fn init_params(&mut self, seed: u64) -> Vec<f32>;
+
+    /// Run `steps` local SGD iterations for `client` starting from
+    /// `params`, updating `opt` in place. Returns (new_params, mean loss).
+    /// `t0` is the client's global iteration count (Adam bias correction).
+    #[allow(clippy::too_many_arguments)]
+    fn local_steps(
+        &mut self,
+        params: &[f32],
+        opt: &mut [f32],
+        steps: usize,
+        lr: f32,
+        t0: usize,
+        client: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, f32);
+
+    /// Evaluate on up to `max_batches` held-out batches.
+    fn evaluate(&mut self, params: &[f32], max_batches: usize) -> EvalOut;
+
+    /// Compress through the AOT Pallas graph, if this backend has one.
+    /// Returns (dense binarized update, threshold, mu, side_pos).
+    fn compress_pjrt(&mut self, _delta: &[f32], _p: f32) -> Option<(Vec<f32>, f32, f32, bool)> {
+        None
+    }
+}

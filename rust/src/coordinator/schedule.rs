@@ -1,0 +1,48 @@
+//! Learning-rate schedules (paper Table III: stepwise decay at fixed
+//! iteration milestones). Schedules are evaluated on *local iterations*,
+//! matching the paper's iteration-count axis.
+
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    pub base: f32,
+    /// Multiplicative factor applied at each milestone.
+    pub decay: f32,
+    /// Iteration milestones (sorted).
+    pub milestones: Vec<usize>,
+}
+
+impl LrSchedule {
+    pub fn constant(base: f32) -> Self {
+        LrSchedule { base, decay: 1.0, milestones: vec![] }
+    }
+
+    pub fn step(base: f32, decay: f32, milestones: Vec<usize>) -> Self {
+        LrSchedule { base, decay, milestones }
+    }
+
+    pub fn at(&self, iteration: usize) -> f32 {
+        let hits = self.milestones.iter().filter(|&&m| iteration >= m).count();
+        self.base * self.decay.powi(hits as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_decay() {
+        let s = LrSchedule::step(0.1, 0.1, vec![100, 200]);
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(99), 0.1);
+        assert!((s.at(100) - 0.01).abs() < 1e-9);
+        assert!((s.at(250) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant() {
+        let s = LrSchedule::constant(0.5);
+        assert_eq!(s.at(0), 0.5);
+        assert_eq!(s.at(10_000), 0.5);
+    }
+}

@@ -1,0 +1,376 @@
+//! The distributed training driver — paper Algorithm 1 end to end.
+//!
+//! One [`Trainer::run`] call executes a full DSGD training: every round,
+//! every participating client runs `delay` local iterations on its shard,
+//! forms the accumulated update (residual + delta), compresses it, puts
+//! the message *on the wire* (bit-exact encode), the server decodes and
+//! aggregates, and everyone synchronizes. All reported bits are measured
+//! on the encoded messages.
+
+use std::time::Instant;
+
+use crate::codec::accounting::CommStats;
+use crate::codec::message::{self, PosCodec};
+use crate::compression::momentum_mask::mask_momentum;
+use crate::compression::registry::{Method, MethodConfig};
+use crate::compression::TensorUpdate;
+use crate::coordinator::aggregation::{aggregate, densify, AggRule};
+use crate::coordinator::client::ClientState;
+use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::TrainBackend;
+use crate::metrics::{CurvePoint, RunLog};
+use crate::model::Task;
+use crate::netsim::{Link, NetSim};
+use crate::util::rng::Rng;
+use crate::util::tensor;
+use crate::util::timer::span;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: String,
+    pub method: MethodConfig,
+    pub clients: usize,
+    /// Total local iterations per client (paper's x-axis). Rounds =
+    /// iterations / delay.
+    pub iterations: usize,
+    pub lr: LrSchedule,
+    /// Evaluate every this many *rounds* (also logs a curve point).
+    pub eval_every_rounds: usize,
+    pub eval_batches: usize,
+    pub seed: u64,
+    pub pos_codec: PosCodec,
+    /// Route SBC compression through the AOT Pallas graph when available.
+    pub use_pjrt_compress: bool,
+    pub uplink: Link,
+    pub downlink: Link,
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    pub fn new(model: &str, method: MethodConfig, iterations: usize, lr: LrSchedule) -> Self {
+        TrainConfig {
+            model: model.to_string(),
+            method,
+            clients: 4, // the paper fixes 4 clients throughout
+            iterations,
+            lr,
+            eval_every_rounds: 10,
+            eval_batches: 4,
+            seed: 42,
+            pos_codec: PosCodec::Golomb,
+            use_pjrt_compress: false,
+            uplink: Link::wifi(),
+            downlink: Link::wifi(),
+            verbose: false,
+        }
+    }
+}
+
+/// Result of one training run.
+pub struct TrainResult {
+    pub log: RunLog,
+    pub comm: CommStats,
+    pub net: NetSim,
+    pub final_params: Vec<f32>,
+}
+
+pub struct Trainer<'a, B: TrainBackend> {
+    pub backend: &'a mut B,
+    pub cfg: TrainConfig,
+}
+
+impl<'a, B: TrainBackend> Trainer<'a, B> {
+    pub fn new(backend: &'a mut B, cfg: TrainConfig) -> Self {
+        Trainer { backend, cfg }
+    }
+
+    pub fn run(&mut self) -> TrainResult {
+        let seed = self.cfg.seed;
+        let init = self.backend.init_params(seed);
+        self.run_from(init)
+    }
+
+    /// Run from explicit initial master weights (warm start — used by the
+    /// adaptive-sparsity schedule to chain phases).
+    pub fn run_from(&mut self, initial: Vec<f32>) -> TrainResult {
+        let cfg = self.cfg.clone();
+        let n = self.backend.n_params();
+        let layout = self.backend.layout().clone();
+        let opt_size = self.backend.opt_size();
+        let root = Rng::new(cfg.seed);
+        let started = Instant::now();
+
+        assert_eq!(initial.len(), n, "initial params length mismatch");
+        let mut master = initial;
+        let default_residual = cfg.method.build(0).uses_residual();
+        let use_residual = cfg.method.use_residual(default_residual);
+        let mut clients: Vec<ClientState> = (0..cfg.clients)
+            .map(|i| {
+                ClientState::new(
+                    i,
+                    n,
+                    opt_size,
+                    use_residual,
+                    cfg.method.build(cfg.seed ^ (0xC11E + i as u64)),
+                    &root,
+                )
+            })
+            .collect();
+
+        let agg_rule = AggRule::for_method(&cfg.method);
+        let sign_scale = cfg.method.build(0).sign_scale();
+        let delay = cfg.method.delay;
+        let rounds = (cfg.iterations / delay).max(1);
+        let mut comm = CommStats::default();
+        let mut net = NetSim::new(cfg.uplink, cfg.downlink, cfg.clients);
+        let mut log = RunLog {
+            model: cfg.model.clone(),
+            method: cfg.method.label(),
+            seed: cfg.seed,
+            ..Default::default()
+        };
+
+        let is_sbc_pjrt = cfg.use_pjrt_compress
+            && matches!(cfg.method.method, Method::Sbc { .. });
+
+        let mut acc = vec![0.0f32; n];
+        for round in 0..rounds {
+            let lr = cfg.lr.at(round * delay);
+            let mut updates: Vec<Vec<f32>> = Vec::with_capacity(cfg.clients);
+            let mut round_up_bits = vec![0u64; cfg.clients];
+            let mut train_loss = 0.0f32;
+
+            for ci in 0..cfg.clients {
+                // --- local training ---------------------------------
+                let (w_new, loss) = {
+                    let _t = span("local_steps");
+                    let c = &mut clients[ci];
+                    self.backend.local_steps(
+                        &master,
+                        &mut c.opt,
+                        delay,
+                        lr,
+                        c.iterations,
+                        ci,
+                        &mut c.rng,
+                    )
+                };
+                train_loss += loss;
+                let c = &mut clients[ci];
+                c.iterations += delay;
+                for _ in 0..delay {
+                    comm.record_baseline_iter(n);
+                }
+
+                // --- accumulate + compress --------------------------
+                {
+                    let _t = span("compress");
+                    tensor::sub_into(&mut acc, &w_new, &master);
+                    c.residual.accumulate_into(&mut acc);
+                }
+                let msg = if is_sbc_pjrt {
+                    // route through the AOT Pallas kernel graph
+                    let p = match cfg.method.method {
+                        Method::Sbc { p, .. } => p as f32,
+                        _ => unreachable!(),
+                    };
+                    let _t = span("compress_pjrt");
+                    let (dense, _t_thr, mu, side_pos) = self
+                        .backend
+                        .compress_pjrt(&acc, p)
+                        .expect("backend has no pjrt compress graph");
+                    let idx: Vec<u32> = dense
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, v)| **v != 0.0)
+                        .map(|(i, _)| i as u32)
+                        .collect();
+                    crate::compression::UpdateMsg {
+                        round: round as u32,
+                        tensors: vec![TensorUpdate::SparseBinary { idx, mu: mu.abs(), side_pos }],
+                    }
+                } else {
+                    let _t = span("compress");
+                    c.compressor.compress(&acc, &layout, round as u32)
+                };
+
+                // --- encode: the bits that actually cross the wire ---
+                let (bytes, bits) = {
+                    let _t = span("encode");
+                    message::encode(&msg, cfg.pos_codec)
+                };
+                let nnz: usize = msg.tensors.iter().map(|t| t.nonzeros()).sum();
+                comm.record_message(bits, nnz as u64);
+                c.up_bits += bits;
+                round_up_bits[ci] = bits;
+
+                // --- server-side decode (bit-true path) --------------
+                let decoded = {
+                    let _t = span("decode");
+                    message::decode(&bytes, bits).expect("wire roundtrip failed")
+                };
+                let mut dense = {
+                    let _t = span("densify");
+                    if is_sbc_pjrt {
+                        decoded.to_dense(&crate::model::TensorLayout::flat(n), sign_scale)
+                    } else {
+                        densify(&decoded, &cfg.method, &layout, sign_scale)
+                    }
+                };
+                // keep exactly what was decoded; residual vs transmitted
+                c.residual.update(&acc, &dense);
+
+                if cfg.method.momentum_masking {
+                    let idx: Vec<u32> = dense
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, v)| **v != 0.0)
+                        .map(|(i, _)| i as u32)
+                        .collect();
+                    mask_momentum(&mut c.opt, n, &idx);
+                }
+                if matches!(agg_rule, AggRule::MajoritySign { .. }) {
+                    // majority vote wants raw ±1 votes, not ±scale
+                    for v in dense.iter_mut() {
+                        *v = v.signum();
+                    }
+                }
+                updates.push(dense);
+            }
+
+            // --- server aggregation + broadcast ----------------------
+            let delta = {
+                let _t = span("aggregate");
+                aggregate(&updates, agg_rule)
+            };
+            tensor::add_assign(&mut master, &delta);
+            // downstream: the server re-encodes the aggregated update —
+            // sparse (union of client supports) when that is cheaper than
+            // a dense broadcast, exactly as it would go on the wire.
+            let down_bits = {
+                let _t = span("encode_down");
+                let nnz = delta.iter().filter(|v| **v != 0.0).count();
+                let sparse_estimate = nnz as u64 * (32 + 16) + 64;
+                if sparse_estimate < 32 * n as u64 {
+                    let idx: Vec<u32> = delta
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, v)| **v != 0.0)
+                        .map(|(i, _)| i as u32)
+                        .collect();
+                    let val: Vec<f32> = idx.iter().map(|&i| delta[i as usize]).collect();
+                    let down_msg = crate::compression::UpdateMsg {
+                        round: round as u32,
+                        tensors: vec![TensorUpdate::SparseF32 { idx, val }],
+                    };
+                    message::encode(&down_msg, cfg.pos_codec).1
+                } else {
+                    32 * n as u64
+                }
+            };
+            net.round(&round_up_bits, down_bits);
+
+            // --- evaluation ------------------------------------------
+            let last = round + 1 == rounds;
+            if round % cfg.eval_every_rounds == 0 || last {
+                let _t = span("evaluate");
+                let ev = self.backend.evaluate(&master, cfg.eval_batches);
+                let metric = if self.backend.is_lm() { ev.loss.exp() } else { ev.metric };
+                let point = CurvePoint {
+                    round,
+                    iterations: (round + 1) * delay,
+                    client_up_bits: clients[0].up_bits,
+                    train_loss: train_loss / cfg.clients as f32,
+                    eval_loss: ev.loss,
+                    metric,
+                };
+                if cfg.verbose {
+                    eprintln!(
+                        "[{}] round {round:5} it {:6} lr {lr:.4} loss {:.4} eval {:.4} metric {:.4} upMB {:.3}",
+                        cfg.method.label(),
+                        point.iterations,
+                        point.train_loss,
+                        point.eval_loss,
+                        point.metric,
+                        clients[0].up_bits as f64 / 8e6,
+                    );
+                }
+                log.push(point);
+            }
+        }
+
+        log.compression = comm.compression_rate();
+        log.final_metric = log.points.last().map(|p| p.metric).unwrap_or(f32::NAN);
+        log.wall_s = started.elapsed().as_secs_f64();
+        TrainResult { log, comm, net, final_params: master }
+    }
+}
+
+/// Task-appropriate "higher is better" comparison helper for tables.
+pub fn better(task: Task, a: f32, b: f32) -> bool {
+    match task {
+        Task::Classification => a > b,
+        Task::Lm => a < b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sgd::NativeMlpBackend;
+
+    fn tiny_backend() -> NativeMlpBackend {
+        NativeMlpBackend::digits_small(4, 1)
+    }
+
+    fn run(method: MethodConfig, iters: usize) -> TrainResult {
+        let mut be = tiny_backend();
+        let mut cfg = TrainConfig::new("mlp-small", method, iters, LrSchedule::constant(0.1));
+        cfg.eval_every_rounds = 50;
+        cfg.eval_batches = 2;
+        Trainer::new(&mut be, cfg).run()
+    }
+
+    #[test]
+    fn baseline_learns() {
+        let r = run(MethodConfig::baseline(), 60);
+        let first = r.log.points.first().unwrap();
+        let last = r.log.points.last().unwrap();
+        assert!(last.metric > first.metric, "acc {} -> {}", first.metric, last.metric);
+        assert!(last.metric > 0.5, "final acc {}", last.metric);
+        // dense every iteration: compression ~1 (message overhead only)
+        assert!(r.log.compression < 1.05 && r.log.compression > 0.8, "{}", r.log.compression);
+    }
+
+    #[test]
+    fn sbc_learns_with_huge_compression() {
+        let r = run(MethodConfig::sbc2(), 200);
+        let last = r.log.points.last().unwrap();
+        assert!(last.metric > 0.5, "final acc {}", last.metric);
+        assert!(r.log.compression > 500.0, "compression {}", r.log.compression);
+    }
+
+    #[test]
+    fn fedavg_counts_delay() {
+        let r = run(MethodConfig::fedavg(10), 100);
+        // 10 rounds of dense messages vs 100 baseline iterations -> ~x10
+        assert!(r.log.compression > 8.0 && r.log.compression < 12.0, "{}", r.log.compression);
+        assert_eq!(r.comm.messages, 4 * 10);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(MethodConfig::sbc1(), 30);
+        let b = run(MethodConfig::sbc1(), 30);
+        assert_eq!(a.final_params, b.final_params);
+        assert_eq!(a.comm.upstream_bits, b.comm.upstream_bits);
+    }
+
+    #[test]
+    fn netsim_tracks_rounds() {
+        let r = run(MethodConfig::fedavg(10), 100);
+        assert_eq!(r.net.clients.len(), 4);
+        assert!(r.net.total_comm_time_s > 0.0);
+        assert_eq!(r.net.clients[0].messages, 10);
+    }
+}

@@ -1,0 +1,34 @@
+//! Synthetic/small datasets + client sharding (DESIGN.md §2 substitutions).
+//!
+//! The paper trains on MNIST/CIFAR/ImageNet/PTB/Shakespeare; this sandbox
+//! has no datasets, so each benchmark gets the closest generatable
+//! equivalent that exercises the same code path: teacher-based image
+//! classification tasks (learnable, with class structure and noise) and
+//! character/word corpora (an embedded public-domain seed text expanded by
+//! a Markov model, and a Zipf-bigram word stream).
+
+pub mod shard;
+pub mod synth_images;
+pub mod text;
+
+/// A batch ready for upload to a train/eval graph.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Flattened x (f32) — image pixels, or token ids cast to i32 via `xi`.
+    pub xf: Vec<f32>,
+    pub xi: Vec<i32>,
+    pub y: Vec<i32>,
+}
+
+/// Common interface over datasets: draw a train batch for one client, or
+/// an eval batch from held-out data.
+pub trait Dataset: Send {
+    /// Fill a train batch for `client` (deterministic in `rng`).
+    fn train_batch(&self, client: usize, rng: &mut crate::util::rng::Rng, batch: usize) -> Batch;
+    /// Fill an eval batch (held-out split).
+    fn eval_batch(&self, index: usize, batch: usize) -> Batch;
+    /// Number of distinct eval batches available.
+    fn eval_batches(&self, batch: usize) -> usize;
+    /// True for token (i32 x) datasets.
+    fn is_text(&self) -> bool;
+}

@@ -1,0 +1,114 @@
+//! Client data sharding. The paper splits data IID ("balanced,
+//! homogeneous"); we also provide a non-IID Dirichlet split as an
+//! extension knob (federated-learning realism, paper §I motivation).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Sharding {
+    /// Per-client class-sampling distribution (clients × classes CDF).
+    cdfs: Vec<Vec<f32>>,
+}
+
+impl Sharding {
+    /// Balanced IID split: every client samples classes uniformly.
+    pub fn iid(clients: usize, classes: usize) -> Self {
+        let uniform: Vec<f32> =
+            (0..classes).map(|c| (c + 1) as f32 / classes as f32).collect();
+        Sharding { cdfs: vec![uniform; clients.max(1)] }
+    }
+
+    /// Non-IID: per-client class proportions drawn from Dirichlet(alpha).
+    /// Small alpha -> strongly skewed shards.
+    pub fn dirichlet(clients: usize, classes: usize, alpha: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let cdfs = (0..clients.max(1))
+            .map(|_| {
+                // gamma(alpha) via Marsaglia-Tsang for alpha<1 boost trick
+                let mut w: Vec<f64> = (0..classes).map(|_| gamma_sample(alpha, &mut rng)).collect();
+                let sum: f64 = w.iter().sum::<f64>().max(1e-12);
+                let mut acc = 0.0;
+                for v in w.iter_mut() {
+                    acc += *v / sum;
+                    *v = acc;
+                }
+                w.iter().map(|&v| v as f32).collect()
+            })
+            .collect();
+        Sharding { cdfs }
+    }
+
+    /// Draw a class for one client's next sample.
+    pub fn draw_class(&self, client: usize, rng: &mut Rng) -> usize {
+        let cdf = &self.cdfs[client % self.cdfs.len()];
+        let u = rng.next_f32();
+        cdf.iter().position(|&c| u < c).unwrap_or(cdf.len() - 1)
+    }
+
+    pub fn clients(&self) -> usize {
+        self.cdfs.len()
+    }
+}
+
+fn gamma_sample(alpha: f64, rng: &mut Rng) -> f64 {
+    // Marsaglia & Tsang; for alpha < 1 use the boosting identity.
+    if alpha < 1.0 {
+        let u = rng.next_f64().max(1e-300);
+        return gamma_sample(alpha + 1.0, rng) * u.powf(1.0 / alpha);
+    }
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal() as f64;
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.next_f64().max(1e-300);
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iid_is_uniform() {
+        let s = Sharding::iid(4, 10);
+        let mut rng = Rng::new(1);
+        let mut counts = [0usize; 10];
+        for _ in 0..10_000 {
+            counts[s.draw_class(2, &mut rng)] += 1;
+        }
+        for &c in &counts {
+            assert!((800..1200).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_skews() {
+        let s = Sharding::dirichlet(4, 10, 0.1, 3);
+        let mut rng = Rng::new(2);
+        let mut counts = [0usize; 10];
+        for _ in 0..5_000 {
+            counts[s.draw_class(0, &mut rng)] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        // strongly non-uniform: dominant class holds far above 10%
+        assert!(max > 1500, "{counts:?}");
+        assert_eq!(s.clients(), 4);
+    }
+
+    #[test]
+    fn gamma_positive() {
+        let mut rng = Rng::new(5);
+        for &a in &[0.1, 0.5, 1.0, 3.0] {
+            for _ in 0..100 {
+                assert!(gamma_sample(a, &mut rng) > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Teacher-based synthetic image classification.
+//!
+//! Each class `c` owns a smooth random template image; a sample is an
+//! affine-jittered, scaled template plus pixel noise. The task has real
+//! class structure (within-class variation, between-class separation) so
+//! optimizers and compressors interact with it the way they do with
+//! MNIST/CIFAR — while remaining fully generatable and deterministic.
+
+use crate::data::shard::Sharding;
+use crate::data::{Batch, Dataset};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SynthImages {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub classes: usize,
+    templates: Vec<Vec<f32>>, // classes × (h*w*c)
+    noise: f32,
+    /// held-out eval set, pre-generated
+    eval_x: Vec<f32>,
+    eval_y: Vec<i32>,
+    eval_n: usize,
+    sharding: Sharding,
+}
+
+impl SynthImages {
+    /// `kind`: "mnist" (28x28x1/10) or "cifar" (32x32x3/10).
+    pub fn new(kind: &str, clients: usize, seed: u64) -> Self {
+        let (h, w, c) = match kind {
+            "mnist" => (28, 28, 1),
+            "cifar" => (32, 32, 3),
+            other => panic!("unknown synth image kind {other}"),
+        };
+        Self::with_dims(h, w, c, 10, clients, 0.35, seed)
+    }
+
+    pub fn with_dims(
+        h: usize,
+        w: usize,
+        c: usize,
+        classes: usize,
+        clients: usize,
+        noise: f32,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed ^ 0x5b3a_91c4);
+        let templates: Vec<Vec<f32>> =
+            (0..classes).map(|_| smooth_template(h, w, c, &mut rng)).collect();
+        let mut ds = SynthImages {
+            h,
+            w,
+            c,
+            classes,
+            templates,
+            noise,
+            eval_x: vec![],
+            eval_y: vec![],
+            eval_n: 0,
+            sharding: Sharding::iid(clients, classes),
+        };
+        // held-out eval set: 512 samples from an independent stream
+        let eval_n = 512;
+        let mut erng = Rng::new(seed ^ 0x77ee_11aa);
+        let px = h * w * c;
+        let mut ex = vec![0.0f32; eval_n * px];
+        let mut ey = vec![0i32; eval_n];
+        for i in 0..eval_n {
+            let y = erng.below(classes);
+            ds.render(y, &mut erng, &mut ex[i * px..(i + 1) * px]);
+            ey[i] = y as i32;
+        }
+        ds.eval_x = ex;
+        ds.eval_y = ey;
+        ds.eval_n = eval_n;
+        ds
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng, out: &mut [f32]) {
+        let t = &self.templates[class];
+        // per-sample brightness/contrast jitter + shift by up to ±2 px
+        let gain = 0.8 + 0.4 * rng.next_f32();
+        let bias = 0.1 * (rng.next_f32() - 0.5);
+        let dy = rng.below(5) as isize - 2;
+        let dx = rng.below(5) as isize - 2;
+        let (h, w, c) = (self.h as isize, self.w as isize, self.c);
+        for y in 0..h {
+            for x in 0..w {
+                let sy = (y + dy).clamp(0, h - 1);
+                let sx = (x + dx).clamp(0, w - 1);
+                for ch in 0..c {
+                    let src = ((sy * w + sx) as usize) * c + ch;
+                    let dst = ((y * w + x) as usize) * c + ch;
+                    out[dst] = (t[src] * gain + bias + self.noise * rng.normal()).clamp(-1.0, 1.0);
+                }
+            }
+        }
+    }
+}
+
+/// Smooth random template: low-frequency cosine mixture -> class identity
+/// lives in large-scale structure, like natural image classes.
+fn smooth_template(h: usize, w: usize, c: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut out = vec![0.0f32; h * w * c];
+    let kmax = 4;
+    for ch in 0..c {
+        // random low-frequency coefficients
+        let mut coef = Vec::new();
+        for ky in 0..kmax {
+            for kx in 0..kmax {
+                coef.push((ky, kx, rng.normal() / (1.0 + (ky + kx) as f32)));
+            }
+        }
+        for y in 0..h {
+            for x in 0..w {
+                let mut v = 0.0f32;
+                for &(ky, kx, a) in &coef {
+                    let fy = std::f32::consts::PI * ky as f32 * (y as f32 + 0.5) / h as f32;
+                    let fx = std::f32::consts::PI * kx as f32 * (x as f32 + 0.5) / w as f32;
+                    v += a * fy.cos() * fx.cos();
+                }
+                out[(y * w + x) * c + ch] = (v * 0.5).clamp(-1.0, 1.0);
+            }
+        }
+    }
+    out
+}
+
+impl Dataset for SynthImages {
+    fn train_batch(&self, client: usize, rng: &mut Rng, batch: usize) -> Batch {
+        let px = self.h * self.w * self.c;
+        let mut xf = vec![0.0f32; batch * px];
+        let mut y = vec![0i32; batch];
+        for i in 0..batch {
+            let class = self.sharding.draw_class(client, rng);
+            self.render(class, rng, &mut xf[i * px..(i + 1) * px]);
+            y[i] = class as i32;
+        }
+        Batch { xf, xi: vec![], y }
+    }
+
+    fn eval_batch(&self, index: usize, batch: usize) -> Batch {
+        let px = self.h * self.w * self.c;
+        let start = (index * batch) % self.eval_n;
+        let mut xf = vec![0.0f32; batch * px];
+        let mut y = vec![0i32; batch];
+        for i in 0..batch {
+            let j = (start + i) % self.eval_n;
+            xf[i * px..(i + 1) * px].copy_from_slice(&self.eval_x[j * px..(j + 1) * px]);
+            y[i] = self.eval_y[j];
+        }
+        Batch { xf, xi: vec![], y }
+    }
+
+    fn eval_batches(&self, batch: usize) -> usize {
+        (self.eval_n / batch).max(1)
+    }
+
+    fn is_text(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let ds = SynthImages::new("mnist", 4, 1);
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let b1 = ds.train_batch(0, &mut r1, 8);
+        let b2 = ds.train_batch(0, &mut r2, 8);
+        assert_eq!(b1.xf.len(), 8 * 28 * 28);
+        assert_eq!(b1.y.len(), 8);
+        assert_eq!(b1.xf, b2.xf);
+        assert_eq!(b1.y, b2.y);
+    }
+
+    #[test]
+    fn class_structure_exists() {
+        // same-class samples are closer than cross-class samples on average
+        let ds = SynthImages::new("cifar", 1, 2);
+        let mut rng = Rng::new(3);
+        let px = 32 * 32 * 3;
+        let render = |class: usize, rng: &mut Rng| {
+            let mut v = vec![0.0f32; px];
+            ds.render(class, rng, &mut v);
+            v
+        };
+        let a1 = render(0, &mut rng);
+        let a2 = render(0, &mut rng);
+        let b1 = render(1, &mut rng);
+        let d_same: f32 = a1.iter().zip(&a2).map(|(x, y)| (x - y).powi(2)).sum();
+        let d_diff: f32 = a1.iter().zip(&b1).map(|(x, y)| (x - y).powi(2)).sum();
+        assert!(d_same < d_diff, "same {d_same} diff {d_diff}");
+    }
+
+    #[test]
+    fn eval_batches_cycle() {
+        let ds = SynthImages::new("mnist", 4, 1);
+        assert!(ds.eval_batches(32) >= 16);
+        let b = ds.eval_batch(0, 32);
+        let b2 = ds.eval_batch(0, 32);
+        assert_eq!(b.xf, b2.xf); // eval set is fixed
+        assert!(!ds.is_text());
+    }
+
+    #[test]
+    fn values_bounded() {
+        let ds = SynthImages::new("cifar", 2, 7);
+        let mut rng = Rng::new(1);
+        let b = ds.train_batch(1, &mut rng, 4);
+        assert!(b.xf.iter().all(|v| (-1.0..=1.0).contains(v)));
+        assert!(b.y.iter().all(|&y| (0..10).contains(&y)));
+    }
+}

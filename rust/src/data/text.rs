@@ -1,0 +1,302 @@
+//! Character and word corpora for the LM benchmarks.
+//!
+//! * [`CharCorpus`] — stands in for the paper's Shakespeare dataset: a
+//!   public-domain Shakespeare seed (embedded below) expanded to an
+//!   arbitrarily long stream by an order-2 character Markov chain fitted
+//!   on the seed. Real character statistics, fully generatable offline.
+//! * [`WordCorpus`] — stands in for PTB: a Zipf-distributed vocabulary
+//!   with sparse bigram structure (each word has a small preferred
+//!   successor set), so an LSTM has genuine sequential signal to learn.
+//!
+//! Both split the stream into `clients` contiguous subsequences exactly as
+//! the paper does (§IV-A), with a held-out tail for evaluation.
+
+use std::collections::HashMap;
+
+use crate::data::{Batch, Dataset};
+use crate::util::rng::Rng;
+
+/// Public-domain Shakespeare seed text (Sonnet 18, Hamlet III.1 excerpt,
+/// Macbeth V.5 excerpt). Used only to fit the Markov expander.
+pub const SHAKESPEARE_SEED: &str = "\
+Shall I compare thee to a summer's day?\n\
+Thou art more lovely and more temperate:\n\
+Rough winds do shake the darling buds of May,\n\
+And summer's lease hath all too short a date;\n\
+Sometime too hot the eye of heaven shines,\n\
+And often is his gold complexion dimm'd;\n\
+And every fair from fair sometime declines,\n\
+By chance or nature's changing course untrimm'd;\n\
+But thy eternal summer shall not fade,\n\
+Nor lose possession of that fair thou ow'st;\n\
+Nor shall death brag thou wander'st in his shade,\n\
+When in eternal lines to time thou grow'st:\n\
+So long as men can breathe or eyes can see,\n\
+So long lives this, and this gives life to thee.\n\
+To be, or not to be, that is the question:\n\
+Whether 'tis nobler in the mind to suffer\n\
+The slings and arrows of outrageous fortune,\n\
+Or to take arms against a sea of troubles\n\
+And by opposing end them. To die: to sleep;\n\
+No more; and by a sleep to say we end\n\
+The heart-ache and the thousand natural shocks\n\
+That flesh is heir to, 'tis a consummation\n\
+Devoutly to be wish'd. To die, to sleep;\n\
+To sleep: perchance to dream: ay, there's the rub;\n\
+For in that sleep of death what dreams may come\n\
+When we have shuffled off this mortal coil,\n\
+Must give us pause: there's the respect\n\
+That makes calamity of so long life;\n\
+To-morrow, and to-morrow, and to-morrow,\n\
+Creeps in this petty pace from day to day\n\
+To the last syllable of recorded time,\n\
+And all our yesterdays have lighted fools\n\
+The way to dusty death. Out, out, brief candle!\n\
+Life's but a walking shadow, a poor player\n\
+That struts and frets his hour upon the stage\n\
+And then is heard no more: it is a tale\n\
+Told by an idiot, full of sound and fury,\n\
+Signifying nothing.\n";
+
+/// Character vocabulary size (matches the paper's CharLSTM: 98 symbols).
+pub const CHAR_VOCAB: usize = 98;
+
+/// Map a byte to a char id in [0, CHAR_VOCAB).
+pub fn char_id(b: u8) -> i32 {
+    match b {
+        32..=125 => (b - 32) as i32, // printable ASCII: 0..=93
+        b'\n' => 94,
+        b'\t' => 95,
+        _ => 96, // everything else buckets to id 96; 97 reserved/unused
+    }
+}
+
+pub struct CharCorpus {
+    /// token streams per client + eval tail
+    shards: Vec<Vec<i32>>,
+    eval: Vec<i32>,
+    seqlen: usize,
+}
+
+impl CharCorpus {
+    pub fn new(clients: usize, tokens_per_client: usize, seqlen: usize, seed: u64) -> Self {
+        // fit order-2 markov on the seed
+        let seed_ids: Vec<i32> = SHAKESPEARE_SEED.bytes().map(char_id).collect();
+        let mut table: HashMap<(i32, i32), Vec<i32>> = HashMap::new();
+        for w in seed_ids.windows(3) {
+            table.entry((w[0], w[1])).or_default().push(w[2]);
+        }
+        let mut rng = Rng::new(seed ^ 0xc0ffee);
+        let gen_stream = |len: usize, rng: &mut Rng| -> Vec<i32> {
+            let mut out = Vec::with_capacity(len);
+            let start = rng.below(seed_ids.len().saturating_sub(2));
+            let (mut a, mut b) = (seed_ids[start], seed_ids[start + 1]);
+            out.push(a);
+            out.push(b);
+            while out.len() < len {
+                let next = match table.get(&(a, b)) {
+                    Some(cands) if !cands.is_empty() => cands[rng.below(cands.len())],
+                    _ => {
+                        // dead end: restart from a random seed position
+                        let s = rng.below(seed_ids.len().saturating_sub(2));
+                        seed_ids[s]
+                    }
+                };
+                out.push(next);
+                a = b;
+                b = next;
+            }
+            out
+        };
+        let shards = (0..clients.max(1)).map(|_| gen_stream(tokens_per_client, &mut rng)).collect();
+        let eval = gen_stream(tokens_per_client / 4 + 2 * seqlen, &mut rng);
+        CharCorpus { shards, eval, seqlen }
+    }
+}
+
+/// Deterministic eval batch: consecutive windows starting at `index`.
+fn lm_eval_batch(stream: &[i32], index: usize, batch: usize, seqlen: usize) -> Batch {
+    let span = seqlen + 1;
+    let max_start = stream.len().saturating_sub(span).max(1);
+    let mut xi = vec![0i32; batch * seqlen];
+    let mut y = vec![0i32; batch * seqlen];
+    for b in 0..batch {
+        let s = (index * batch + b) * seqlen % max_start;
+        for t in 0..seqlen {
+            xi[b * seqlen + t] = stream[s + t];
+            y[b * seqlen + t] = stream[s + t + 1];
+        }
+    }
+    Batch { xf: vec![], xi, y }
+}
+
+fn lm_train_batch(stream: &[i32], rng: &mut Rng, batch: usize, seqlen: usize) -> Batch {
+    let span = seqlen + 1;
+    let max_start = stream.len().saturating_sub(span).max(1);
+    let mut xi = vec![0i32; batch * seqlen];
+    let mut y = vec![0i32; batch * seqlen];
+    for b in 0..batch {
+        let s = rng.below(max_start);
+        for t in 0..seqlen {
+            xi[b * seqlen + t] = stream[s + t];
+            y[b * seqlen + t] = stream[s + t + 1];
+        }
+    }
+    Batch { xf: vec![], xi, y }
+}
+
+impl Dataset for CharCorpus {
+    fn train_batch(&self, client: usize, rng: &mut Rng, batch: usize) -> Batch {
+        lm_train_batch(&self.shards[client % self.shards.len()], rng, batch, self.seqlen)
+    }
+
+    fn eval_batch(&self, index: usize, batch: usize) -> Batch {
+        lm_eval_batch(&self.eval, index, batch, self.seqlen)
+    }
+
+    fn eval_batches(&self, batch: usize) -> usize {
+        (self.eval.len() / (batch * self.seqlen)).max(1)
+    }
+
+    fn is_text(&self) -> bool {
+        true
+    }
+}
+
+pub struct WordCorpus {
+    shards: Vec<Vec<i32>>,
+    eval: Vec<i32>,
+    seqlen: usize,
+    pub vocab: usize,
+}
+
+impl WordCorpus {
+    pub fn new(vocab: usize, clients: usize, tokens_per_client: usize, seqlen: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xbead);
+        // Zipf CDF over ranks
+        let weights: Vec<f64> = (1..=vocab).map(|r| 1.0 / (r as f64).powf(1.1)).collect();
+        let total: f64 = weights.iter().sum();
+        let cdf: Vec<f64> = weights
+            .iter()
+            .scan(0.0, |acc, w| {
+                *acc += w / total;
+                Some(*acc)
+            })
+            .collect();
+        // sparse bigram structure: 8 preferred successors per word
+        let succ: Vec<Vec<i32>> = (0..vocab)
+            .map(|_| (0..8).map(|_| zipf_draw(&cdf, &mut rng)).collect())
+            .collect();
+        let gen_stream = |len: usize, rng: &mut Rng| -> Vec<i32> {
+            let mut out = Vec::with_capacity(len);
+            let mut cur = zipf_draw(&cdf, rng);
+            out.push(cur);
+            while out.len() < len {
+                cur = if rng.next_f32() < 0.7 {
+                    let s = &succ[cur as usize];
+                    s[rng.below(s.len())]
+                } else {
+                    zipf_draw(&cdf, rng)
+                };
+                out.push(cur);
+            }
+            out
+        };
+        let shards = (0..clients.max(1)).map(|_| gen_stream(tokens_per_client, &mut rng)).collect();
+        let eval = gen_stream(tokens_per_client / 4 + 2 * seqlen, &mut rng);
+        WordCorpus { shards, eval, seqlen, vocab }
+    }
+}
+
+fn zipf_draw(cdf: &[f64], rng: &mut Rng) -> i32 {
+    let u = rng.next_f64();
+    cdf.partition_point(|&c| c < u).min(cdf.len() - 1) as i32
+}
+
+impl Dataset for WordCorpus {
+    fn train_batch(&self, client: usize, rng: &mut Rng, batch: usize) -> Batch {
+        lm_train_batch(&self.shards[client % self.shards.len()], rng, batch, self.seqlen)
+    }
+
+    fn eval_batch(&self, index: usize, batch: usize) -> Batch {
+        lm_eval_batch(&self.eval, index, batch, self.seqlen)
+    }
+
+    fn eval_batches(&self, batch: usize) -> usize {
+        (self.eval.len() / (batch * self.seqlen)).max(1)
+    }
+
+    fn is_text(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn char_ids_in_vocab() {
+        for b in 0u8..=255 {
+            let id = char_id(b);
+            assert!((0..CHAR_VOCAB as i32).contains(&id));
+        }
+    }
+
+    #[test]
+    fn char_corpus_batches() {
+        let ds = CharCorpus::new(4, 5_000, 32, 1);
+        let mut rng = Rng::new(2);
+        let b = ds.train_batch(0, &mut rng, 16);
+        assert_eq!(b.xi.len(), 16 * 32);
+        assert_eq!(b.y.len(), 16 * 32);
+        // y is x shifted by one
+        assert_eq!(b.xi[1], b.y[0]);
+        assert!(b.xi.iter().all(|&t| (0..98).contains(&t)));
+        assert!(ds.is_text());
+    }
+
+    #[test]
+    fn char_corpus_is_shakespeare_like() {
+        // generated stream must reuse seed bigrams only
+        let ds = CharCorpus::new(1, 2_000, 32, 3);
+        let seed_ids: Vec<i32> = SHAKESPEARE_SEED.bytes().map(char_id).collect();
+        let mut seen = std::collections::HashSet::new();
+        for w in seed_ids.windows(2) {
+            seen.insert((w[0], w[1]));
+        }
+        let stream = &ds.shards[0];
+        let mut hits = 0usize;
+        for w in stream.windows(2) {
+            if seen.contains(&(w[0], w[1])) {
+                hits += 1;
+            }
+        }
+        // >95% of generated bigrams exist in the seed (dead-end restarts
+        // account for the remainder)
+        assert!(hits as f64 / (stream.len() - 1) as f64 > 0.95);
+    }
+
+    #[test]
+    fn word_corpus_zipf_and_bigram() {
+        let ds = WordCorpus::new(1000, 4, 20_000, 20, 4);
+        let stream = &ds.shards[0];
+        assert!(stream.iter().all(|&t| (0..1000).contains(&t)));
+        // rank-0 word must be much more frequent than rank-500
+        let c0 = stream.iter().filter(|&&t| t == 0).count();
+        let c500 = stream.iter().filter(|&&t| t == 500).count();
+        assert!(c0 > c500 * 3, "c0={c0} c500={c500}");
+        let b = ds.eval_batch(0, 8);
+        assert_eq!(b.xi.len(), 8 * 20);
+        assert_eq!(b.xi[1], b.y[0]);
+    }
+
+    #[test]
+    fn eval_batches_deterministic() {
+        let ds = CharCorpus::new(2, 4_000, 32, 5);
+        let a = ds.eval_batch(1, 8);
+        let b = ds.eval_batch(1, 8);
+        assert_eq!(a.xi, b.xi);
+        assert!(ds.eval_batches(8) >= 1);
+    }
+}

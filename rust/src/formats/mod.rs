@@ -1,0 +1,5 @@
+//! Hand-rolled data formats (no serde in the vendored dependency set):
+//! JSON (manifest, metrics) and a TOML subset (experiment configs).
+
+pub mod json;
+pub mod toml;

@@ -1,0 +1,33 @@
+//! # sbc — Sparse Binary Compression for distributed deep learning
+//!
+//! A production-shaped reproduction of *Sattler et al., "Sparse Binary
+//! Compression: Towards Distributed Deep Learning with minimal
+//! Communication" (2018)* as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed-training coordinator: DSGD
+//!   parameter server, communication rounds with delay, per-client
+//!   residual accumulation, pluggable compressors (SBC + every baseline
+//!   the paper compares against), bit-exact Golomb wire encoding, network
+//!   simulation, metrics and a CLI launcher.
+//! * **L2 (python/compile, build time)** — JAX model zoo lowered to HLO
+//!   text artifacts.
+//! * **L1 (python/compile/kernels, build time)** — Pallas compression
+//!   kernels lowered into the same artifacts.
+//!
+//! Python never runs at training time: the coordinator loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`runtime`) and drives
+//! everything natively. See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for the paper-vs-measured record.
+
+pub mod codec;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod formats;
+pub mod metrics;
+pub mod model;
+pub mod netsim;
+pub mod runtime;
+pub mod sgd;
+pub mod util;

@@ -1,0 +1,226 @@
+//! `sbc-train` — the launcher for distributed-training experiments.
+//!
+//! Subcommands:
+//!   train    run one distributed training (native or PJRT backend)
+//!   table1   print the theoretical compression-rate table (paper Table I)
+//!   inspect  summarize the AOT artifact manifest
+//!   golomb   print eq.-5 position-bit costs for a sparsity sweep
+//!
+//! Examples:
+//!   sbc-train train --model lenet --method sbc2 --iterations 400 --verbose
+//!   sbc-train train --backend native --method sbc3 --iterations 2000
+//!   sbc-train train --config configs/lenet_sbc2.toml
+
+use anyhow::{anyhow, bail, Result};
+
+use sbc::codec::accounting::table1_rows;
+use sbc::codec::golomb;
+use sbc::config::{self, presets};
+use sbc::coordinator::trainer::{TrainConfig, Trainer};
+use sbc::metrics::render_table;
+use sbc::model::manifest::Manifest;
+use sbc::runtime::PjrtBackend;
+use sbc::sgd::NativeMlpBackend;
+use sbc::util::timer::TIMERS;
+
+/// Minimal flag parser: --key value / --flag.
+struct Args {
+    cmd: String,
+    kv: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut kv = std::collections::BTreeMap::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let k = rest[i].trim_start_matches("--").to_string();
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                kv.insert(k, rest[i + 1].clone());
+                i += 2;
+            } else {
+                kv.insert(k, "true".into());
+                i += 1;
+            }
+        }
+        Args { cmd, kv }
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.kv.get(k).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, k: &str, d: &str) -> String {
+        self.get(k).unwrap_or(d).to_string()
+    }
+
+    fn flag(&self, k: &str) -> bool {
+        self.get(k) == Some("true")
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    let result = match args.cmd.as_str() {
+        "train" => cmd_train(&args),
+        "table1" => cmd_table1(),
+        "inspect" => cmd_inspect(&args),
+        "golomb" => cmd_golomb(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}' (try: sbc-train help)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "sbc-train — Sparse Binary Compression distributed training\n\
+         \n\
+         USAGE: sbc-train <command> [--flags]\n\
+         \n\
+         COMMANDS:\n\
+           train    --model <m> --method <name> [--iterations N] [--backend pjrt|native]\n\
+                    [--config file.toml] [--seed N] [--p F] [--delay N] [--verbose]\n\
+                    [--csv results/run.csv] [--pjrt-compress]\n\
+           table1   print theoretical compression rates (paper Table I)\n\
+           inspect  [--artifacts DIR] summarize the AOT manifest\n\
+           golomb   print eq.-5 optimal position-bit table\n\
+         \n\
+         METHODS: baseline fedavg gd sbc sbc1 sbc2 sbc3 signsgd terngrad qsgd onebit"
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg: TrainConfig = if let Some(path) = args.get("config") {
+        config::load_train_config(path)?
+    } else {
+        let model = args.get_or("model", "lenet");
+        let method = config::parse_method(
+            &args.get_or("method", "sbc2"),
+            args.get_or("p", "0.01").parse()?,
+            args.get_or("delay", "100").parse()?,
+        )?;
+        presets::preset(&model, method)
+    };
+    if let Some(it) = args.get("iterations") {
+        cfg.iterations = it.parse()?;
+        cfg.lr = presets::lr_schedule(&cfg.model, cfg.iterations);
+        cfg.eval_every_rounds = (cfg.iterations / cfg.method.delay / 20).max(1);
+    }
+    if let Some(seed) = args.get("seed") {
+        cfg.seed = seed.parse()?;
+    }
+    if args.flag("verbose") {
+        cfg.verbose = true;
+    }
+    if args.flag("pjrt-compress") {
+        cfg.use_pjrt_compress = true;
+    }
+
+    let backend_kind = args.get_or("backend", "pjrt");
+    let result = match backend_kind.as_str() {
+        "native" => {
+            let mut be = NativeMlpBackend::mnist_mlp(cfg.clients, cfg.seed);
+            cfg.model = "mlp-native".into();
+            Trainer::new(&mut be, cfg.clone()).run()
+        }
+        "pjrt" => {
+            let manifest = Manifest::load(&args.get_or("artifacts", "artifacts"))?;
+            let mut be = PjrtBackend::load(&manifest, &cfg.model, cfg.clients, cfg.seed)?;
+            println!("# platform: {}  model: {} ({} params)", be.platform(), cfg.model, be.spec.n_params);
+            Trainer::new(&mut be, cfg.clone()).run()
+        }
+        other => bail!("unknown backend '{other}'"),
+    };
+
+    println!(
+        "# {} on {}: final metric {:.4}, compression x{:.0}, upstream {:.3} MB/client, comm time {:.2}s",
+        cfg.method.label(),
+        cfg.model,
+        result.log.final_metric,
+        result.log.compression,
+        result.comm.upstream_bits as f64 / 8e6 / cfg.clients as f64,
+        result.net.total_comm_time_s,
+    );
+    if let Some(csv) = args.get("csv") {
+        result.log.append_csv(csv)?;
+        println!("# appended curve to {csv}");
+    }
+    if args.flag("timers") {
+        eprint!("{}", TIMERS.report());
+    }
+    Ok(())
+}
+
+fn cmd_table1() -> Result<()> {
+    let rows: Vec<Vec<String>> = table1_rows()
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.to_string(),
+                format!("{:.4}", r.temporal),
+                format!("{:.4}", r.gradient_sparsity),
+                format!("{:.1}", r.value_bits),
+                format!("{:.1}", r.position_bits),
+                format!("x{:.0}", r.compression_rate()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            &["method", "temporal", "grad sparsity", "value bits", "pos bits", "compression"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&args.get_or("artifacts", "artifacts"))?;
+    let rows: Vec<Vec<String>> = manifest
+        .models
+        .values()
+        .map(|m| {
+            vec![
+                m.name.clone(),
+                format!("{}", m.n_params),
+                format!("{}", m.opt_size),
+                m.optimizer.clone(),
+                format!("{:?}", m.x_shape),
+                format!("{}", m.layout.len()),
+                format!("{}", m.graphs.len()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(&["model", "params", "opt", "optimizer", "x shape", "tensors", "graphs"], &rows)
+    );
+    Ok(())
+}
+
+fn cmd_golomb() -> Result<()> {
+    let rows: Vec<Vec<String>> = [0.0001, 0.0005, 0.001, 0.005, 0.01, 0.05, 0.1]
+        .iter()
+        .map(|&p| {
+            vec![
+                format!("{p}"),
+                format!("{}", golomb::optimal_b(p)),
+                format!("{:.2}", golomb::expected_bits_per_position(p)),
+                format!("x{:.2}", 16.0 / golomb::expected_bits_per_position(p)),
+            ]
+        })
+        .collect();
+    println!("{}", render_table(&["p", "b*", "bits/pos (eq.5)", "vs fixed-16"], &rows));
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Experiment metrics: time-series logging (CSV/JSONL) + run summaries.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// One evaluation point on the training curve.
+#[derive(Clone, Debug)]
+pub struct CurvePoint {
+    pub round: usize,
+    /// Local iterations completed per client.
+    pub iterations: usize,
+    /// Cumulative upstream bits for ONE client (paper's per-client axis).
+    pub client_up_bits: u64,
+    pub train_loss: f32,
+    pub eval_loss: f32,
+    /// Accuracy for classifiers, perplexity for LMs.
+    pub metric: f32,
+}
+
+/// A full training curve plus identity/config fields.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub model: String,
+    pub method: String,
+    pub seed: u64,
+    pub points: Vec<CurvePoint>,
+    /// Final measured compression rate vs dense baseline.
+    pub compression: f64,
+    pub final_metric: f32,
+    pub wall_s: f64,
+}
+
+impl RunLog {
+    pub fn push(&mut self, p: CurvePoint) {
+        self.points.push(p);
+    }
+
+    pub fn csv_header() -> &'static str {
+        "model,method,seed,round,iterations,client_up_bits,train_loss,eval_loss,metric"
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        for p in &self.points {
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{},{:.6},{:.6},{:.6}",
+                self.model,
+                self.method,
+                self.seed,
+                p.round,
+                p.iterations,
+                p.client_up_bits,
+                p.train_loss,
+                p.eval_loss,
+                p.metric
+            );
+        }
+        out
+    }
+
+    /// Append to a CSV file (creates with header if absent).
+    pub fn append_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let new = !Path::new(path).exists();
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        if new {
+            writeln!(f, "{}", Self::csv_header())?;
+        }
+        write!(f, "{}", self.to_csv())
+    }
+}
+
+/// Render an aligned markdown-ish table (used by the bench harnesses to
+/// print paper-table reproductions).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut width: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            width[i] = width[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        let _ = write!(out, "|");
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            let _ = write!(out, " {:>w$} |", c, w = width[i]);
+        }
+        let _ = writeln!(out);
+    };
+    line(&mut out, &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    let _ = writeln!(
+        out,
+        "|{}|",
+        width.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+    );
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_fields() {
+        let mut log = RunLog { model: "mlp".into(), method: "sbc".into(), seed: 1, ..Default::default() };
+        log.push(CurvePoint {
+            round: 1,
+            iterations: 10,
+            client_up_bits: 1234,
+            train_loss: 0.5,
+            eval_loss: 0.6,
+            metric: 0.9,
+        });
+        let csv = log.to_csv();
+        assert!(csv.contains("mlp,sbc,1,1,10,1234"));
+        assert_eq!(RunLog::csv_header().split(',').count(), csv.trim().split(',').count());
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["method", "acc"],
+            &[vec!["SBC".into(), "0.99".into()], vec!["Baseline".into(), "0.991".into()]],
+        );
+        assert!(t.contains("| Baseline |"));
+        assert!(t.lines().count() == 4);
+    }
+}

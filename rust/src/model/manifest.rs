@@ -1,0 +1,160 @@
+//! `artifacts/manifest.json` loader.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::formats::json::Json;
+use crate::model::{Dtype, ModelSpec, Task, TensorLayout};
+
+/// All models exported by the AOT step.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: String,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = Path::new(dir).join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        Self::from_json(dir, &json)
+    }
+
+    pub fn from_json(dir: &str, json: &Json) -> Result<Manifest> {
+        let models_json =
+            json.get("models").and_then(Json::as_obj).ok_or_else(|| anyhow!("no models key"))?;
+        let mut models = BTreeMap::new();
+        for (name, m) in models_json {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        Ok(Manifest { dir: dir.to_string(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!("model '{name}' not in manifest (have: {:?})", self.models.keys().collect::<Vec<_>>())
+        })
+    }
+
+    /// Absolute path of one graph artifact.
+    pub fn graph_path(&self, model: &str, graph: &str) -> Result<String> {
+        let spec = self.model(model)?;
+        let file = spec
+            .graphs
+            .get(graph)
+            .ok_or_else(|| anyhow!("model '{model}' has no '{graph}' graph"))?;
+        Ok(Path::new(&self.dir).join(file).to_string_lossy().into_owned())
+    }
+}
+
+fn parse_dtype(s: &str) -> Result<Dtype> {
+    match s {
+        "f32" => Ok(Dtype::F32),
+        "i32" => Ok(Dtype::I32),
+        other => bail!("unknown dtype {other}"),
+    }
+}
+
+fn usize_arr(j: &Json) -> Vec<usize> {
+    j.as_arr().map(|a| a.iter().filter_map(Json::as_usize).collect()).unwrap_or_default()
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelSpec> {
+    let get = |k: &str| m.get(k).ok_or_else(|| anyhow!("model {name}: missing {k}"));
+    let tensors = get("tensors")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("tensors not array"))?
+        .iter()
+        .map(|t| {
+            let tname = t.get("name").and_then(Json::as_str).unwrap_or("?").to_string();
+            let shape = usize_arr(t.get("shape").unwrap_or(&Json::Null));
+            (tname, shape)
+        })
+        .collect::<Vec<_>>();
+    let layout = TensorLayout::new(tensors);
+    let n_params = get("n_params")?.as_usize().unwrap_or(0);
+    if layout.total != n_params {
+        bail!("model {name}: layout total {} != n_params {}", layout.total, n_params);
+    }
+    let meta = m.get("meta");
+    let meta_f = |k: &str| meta.and_then(|mm| mm.get(k)).and_then(Json::as_f64);
+    let graphs = get("graphs")?
+        .as_obj()
+        .ok_or_else(|| anyhow!("graphs not object"))?
+        .iter()
+        .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+        .collect();
+    Ok(ModelSpec {
+        name: name.to_string(),
+        n_params,
+        opt_size: get("opt_size")?.as_usize().unwrap_or(0),
+        optimizer: get("optimizer")?.as_str().unwrap_or("sgd").to_string(),
+        task: match get("task")?.as_str() {
+            Some("lm") => Task::Lm,
+            _ => Task::Classification,
+        },
+        x_shape: usize_arr(get("x_shape")?),
+        x_dtype: parse_dtype(get("x_dtype")?.as_str().unwrap_or("f32"))?,
+        y_shape: usize_arr(get("y_shape")?),
+        y_dtype: parse_dtype(get("y_dtype")?.as_str().unwrap_or("i32"))?,
+        default_lr: meta_f("default_lr").unwrap_or(0.01) as f32,
+        vocab: meta_f("vocab").unwrap_or(0.0) as usize,
+        classes: meta_f("classes").unwrap_or(0.0) as usize,
+        layout,
+        graphs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "models": {
+        "mlp": {
+          "n_params": 10,
+          "opt_size": 10,
+          "optimizer": "momentum",
+          "task": "classification",
+          "x_shape": [4, 2],
+          "x_dtype": "f32",
+          "y_shape": [4],
+          "y_dtype": "i32",
+          "meta": {"classes": 10, "default_lr": 0.1},
+          "tensors": [
+            {"name": "w", "shape": [2, 4]},
+            {"name": "b", "shape": [2]}
+          ],
+          "graphs": {"init": "mlp.init.hlo.txt", "step": "mlp.step.hlo.txt"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let json = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json("/tmp/a", &json).unwrap();
+        let spec = m.model("mlp").unwrap();
+        assert_eq!(spec.n_params, 10);
+        assert_eq!(spec.layout.len(), 2);
+        assert_eq!(spec.layout.range(1), 8..10);
+        assert_eq!(spec.default_lr, 0.1);
+        assert_eq!(spec.task, Task::Classification);
+        assert_eq!(spec.batch(), 4);
+        assert!(m.graph_path("mlp", "step").unwrap().ends_with("mlp.step.hlo.txt"));
+        assert!(m.graph_path("mlp", "compress").is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_mismatched_layout() {
+        let bad = SAMPLE.replace("\"n_params\": 10", "\"n_params\": 11");
+        let json = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json("/tmp/a", &json).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Model metadata: tensor layouts and specs loaded from the AOT manifest.
+//!
+//! The Rust side never re-derives model structure; it reads exactly what
+//! `python/compile/aot.py` exported, so L2 and L3 can never disagree about
+//! shapes or flat-vector offsets.
+
+pub mod manifest;
+
+use std::ops::Range;
+
+/// Named tensor segments of the flat parameter vector. Order matters: it
+/// is the flat layout the L2 graphs use.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorLayout {
+    tensors: Vec<(String, Vec<usize>)>,
+    offsets: Vec<usize>,
+    pub total: usize,
+}
+
+impl TensorLayout {
+    pub fn new(tensors: Vec<(String, Vec<usize>)>) -> Self {
+        let mut offsets = Vec::with_capacity(tensors.len() + 1);
+        let mut off = 0;
+        offsets.push(0);
+        for (_, shape) in &tensors {
+            off += shape.iter().product::<usize>();
+            offsets.push(off);
+        }
+        TensorLayout { tensors, offsets, total: off }
+    }
+
+    /// A single-segment layout covering `n` elements (global granularity).
+    pub fn flat(n: usize) -> Self {
+        TensorLayout::new(vec![("flat".into(), vec![n])])
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn name(&self, i: usize) -> &str {
+        &self.tensors[i].0
+    }
+
+    pub fn shape(&self, i: usize) -> &[usize] {
+        &self.tensors[i].1
+    }
+
+    pub fn range(&self, i: usize) -> Range<usize> {
+        self.offsets[i]..self.offsets[i + 1]
+    }
+
+    pub fn segments(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.len()).map(|i| self.range(i))
+    }
+
+    /// Which tensor a flat index belongs to (binary search).
+    pub fn tensor_of(&self, flat_idx: usize) -> usize {
+        debug_assert!(flat_idx < self.total);
+        match self.offsets.binary_search(&flat_idx) {
+            Ok(i) if i < self.len() => i,
+            Ok(i) => i - 1,
+            Err(i) => i - 1,
+        }
+    }
+}
+
+/// Everything the coordinator needs to know about one model.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_params: usize,
+    pub opt_size: usize,
+    pub optimizer: String,
+    pub task: Task,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: Dtype,
+    pub y_shape: Vec<usize>,
+    pub y_dtype: Dtype,
+    pub default_lr: f32,
+    pub vocab: usize,
+    pub classes: usize,
+    pub layout: TensorLayout,
+    /// Artifact file names keyed by graph ("init", "step", "eval", "compress").
+    pub graphs: std::collections::BTreeMap<String, String>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Classification,
+    Lm,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl ModelSpec {
+    /// Batch size = leading dim of x.
+    pub fn batch(&self) -> usize {
+        self.x_shape[0]
+    }
+
+    /// Tokens (or samples) consumed per step.
+    pub fn items_per_step(&self) -> usize {
+        self.x_shape.iter().product::<usize>() / if self.task == Task::Lm { 1 } else { self.x_shape[1..].iter().product::<usize>().max(1) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_offsets() {
+        let l = TensorLayout::new(vec![
+            ("a".into(), vec![2, 3]),
+            ("b".into(), vec![4]),
+            ("c".into(), vec![1]),
+        ]);
+        assert_eq!(l.total, 11);
+        assert_eq!(l.range(0), 0..6);
+        assert_eq!(l.range(1), 6..10);
+        assert_eq!(l.range(2), 10..11);
+        assert_eq!(l.tensor_of(0), 0);
+        assert_eq!(l.tensor_of(5), 0);
+        assert_eq!(l.tensor_of(6), 1);
+        assert_eq!(l.tensor_of(10), 2);
+        let segs: Vec<_> = l.segments().collect();
+        assert_eq!(segs.len(), 3);
+    }
+
+    #[test]
+    fn flat_layout() {
+        let l = TensorLayout::flat(100);
+        assert_eq!(l.len(), 1);
+        assert_eq!(l.total, 100);
+        assert_eq!(l.range(0), 0..100);
+    }
+}

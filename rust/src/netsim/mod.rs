@@ -1,0 +1,130 @@
+//! Network simulator: converts measured message bits into wall-clock and
+//! monetary cost under configurable link models (paper §I/§III motivation:
+//! datacenter NICs vs. mobile clients on metered plans).
+//!
+//! The coordinator feeds every encoded message through a [`NetSim`]; the
+//! examples report end-to-end communication time/cost per method.
+
+/// A link profile for one direction.
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    /// Sustained bandwidth, bits per second.
+    pub bandwidth_bps: f64,
+    /// Per-message latency, seconds.
+    pub latency_s: f64,
+    /// Cost per transferred megabyte (e.g. mobile data plan), $.
+    pub usd_per_mb: f64,
+}
+
+impl Link {
+    pub fn datacenter_10g() -> Link {
+        Link { bandwidth_bps: 10e9, latency_s: 50e-6, usd_per_mb: 0.0 }
+    }
+
+    pub fn wifi() -> Link {
+        Link { bandwidth_bps: 100e6, latency_s: 3e-3, usd_per_mb: 0.0 }
+    }
+
+    pub fn mobile_lte() -> Link {
+        Link { bandwidth_bps: 12e6, latency_s: 40e-3, usd_per_mb: 0.005 }
+    }
+
+    pub fn rural_3g() -> Link {
+        Link { bandwidth_bps: 1e6, latency_s: 150e-3, usd_per_mb: 0.02 }
+    }
+
+    /// Transfer time for a message of `bits`.
+    pub fn transfer_time(&self, bits: u64) -> f64 {
+        self.latency_s + bits as f64 / self.bandwidth_bps
+    }
+}
+
+/// Per-client accumulated communication totals.
+#[derive(Clone, Debug, Default)]
+pub struct ClientComm {
+    pub up_bits: u64,
+    pub down_bits: u64,
+    pub up_time_s: f64,
+    pub down_time_s: f64,
+    pub messages: u64,
+}
+
+/// Synchronous-round network model: per round, all clients upload in
+/// parallel (round time = slowest client) and the server broadcasts back.
+#[derive(Clone, Debug)]
+pub struct NetSim {
+    pub up: Link,
+    pub down: Link,
+    pub clients: Vec<ClientComm>,
+    /// Wall-clock spent in communication across all rounds.
+    pub total_comm_time_s: f64,
+}
+
+impl NetSim {
+    pub fn new(up: Link, down: Link, n_clients: usize) -> Self {
+        NetSim { up, down, clients: vec![ClientComm::default(); n_clients], total_comm_time_s: 0.0 }
+    }
+
+    pub fn symmetric(link: Link, n_clients: usize) -> Self {
+        Self::new(link, link, n_clients)
+    }
+
+    /// Record one synchronous round: `up_bits[i]` is client i's upload,
+    /// `down_bits` the broadcast size. Returns the round's comm time.
+    pub fn round(&mut self, up_bits: &[u64], down_bits: u64) -> f64 {
+        let mut slowest_up = 0.0f64;
+        for (c, &bits) in self.clients.iter_mut().zip(up_bits) {
+            let t = self.up.transfer_time(bits);
+            c.up_bits += bits;
+            c.up_time_s += t;
+            c.messages += 1;
+            slowest_up = slowest_up.max(t);
+        }
+        let t_down = self.down.transfer_time(down_bits);
+        for c in self.clients.iter_mut() {
+            c.down_bits += down_bits;
+            c.down_time_s += t_down;
+        }
+        let round_time = slowest_up + t_down;
+        self.total_comm_time_s += round_time;
+        round_time
+    }
+
+    /// Total upstream monetary cost across clients.
+    pub fn upstream_cost_usd(&self) -> f64 {
+        self.clients.iter().map(|c| c.up_bits as f64 / 8e6 * self.up.usd_per_mb).sum()
+    }
+
+    pub fn total_up_bits(&self) -> u64 {
+        self.clients.iter().map(|c| c.up_bits).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales() {
+        let l = Link::mobile_lte();
+        let t1 = l.transfer_time(12_000_000); // 1s of payload
+        assert!((t1 - 1.04).abs() < 1e-9);
+        assert!(l.transfer_time(0) == l.latency_s);
+    }
+
+    #[test]
+    fn round_takes_slowest_client() {
+        let mut net = NetSim::symmetric(Link { bandwidth_bps: 1e6, latency_s: 0.0, usd_per_mb: 0.0 }, 3);
+        let t = net.round(&[1_000_000, 2_000_000, 500_000], 1_000_000);
+        assert!((t - 3.0).abs() < 1e-9); // 2s slowest up + 1s down
+        assert_eq!(net.total_up_bits(), 3_500_000);
+        assert_eq!(net.clients[0].down_bits, 1_000_000);
+    }
+
+    #[test]
+    fn metered_cost() {
+        let mut net = NetSim::symmetric(Link::rural_3g(), 2);
+        net.round(&[8e6 as u64, 8e6 as u64], 0); // 1 MB each
+        assert!((net.upstream_cost_usd() - 0.04).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,194 @@
+//! [`PjrtBackend`]: the production training substrate — executes the AOT
+//! L2 graphs (init/step/eval) and the L1 Pallas compress graph via PJRT.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{EvalOut, TrainBackend};
+use crate::data::text::{CharCorpus, WordCorpus};
+use crate::data::synth_images::SynthImages;
+use crate::data::{Batch, Dataset};
+use crate::model::manifest::Manifest;
+use crate::model::{Dtype, ModelSpec, Task, TensorLayout};
+use crate::runtime::executable::{
+    lit_f32_vec, lit_i32_vec, lit_scalar_f32, lit_scalar_i32, scalar_f32, to_f32_vec, Executable,
+    Runtime,
+};
+use crate::util::rng::Rng;
+use crate::util::timer::span;
+
+pub struct PjrtBackend {
+    pub spec: ModelSpec,
+    runtime: Runtime,
+    exe_init: Executable,
+    exe_step: Executable,
+    exe_eval: Executable,
+    /// Compiled lazily on first use — the compress graph is only needed
+    /// when `--pjrt-compress` routes SBC through the Pallas kernels, and
+    /// the old XLA compiler is slow enough that eager compilation would
+    /// tax every run.
+    exe_compress: std::cell::OnceCell<Option<Executable>>,
+    compress_path: Option<String>,
+    data: Box<dyn Dataset>,
+    batch: usize,
+}
+
+impl PjrtBackend {
+    /// Load a model's artifacts and build its dataset (DESIGN.md §2
+    /// pairing: model name -> substitute dataset).
+    pub fn load(manifest: &Manifest, model: &str, clients: usize, seed: u64) -> Result<Self> {
+        let spec = manifest.model(model)?.clone();
+        let runtime = Runtime::cpu()?;
+        let exe_init = runtime.load(&manifest.graph_path(model, "init")?)?;
+        let exe_step = runtime.load(&manifest.graph_path(model, "step")?)?;
+        let exe_eval = runtime.load(&manifest.graph_path(model, "eval")?)?;
+        let compress_path = manifest.graph_path(model, "compress").ok();
+        let data = build_dataset(&spec, clients, seed)?;
+        let batch = spec.batch();
+        Ok(PjrtBackend {
+            spec,
+            runtime,
+            exe_init,
+            exe_step,
+            exe_eval,
+            exe_compress: std::cell::OnceCell::new(),
+            compress_path,
+            data,
+            batch,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    fn batch_literals(&self, b: &Batch) -> Result<(xla::Literal, xla::Literal)> {
+        let x = match self.spec.x_dtype {
+            Dtype::F32 => lit_f32_vec(&b.xf, &self.spec.x_shape)?,
+            Dtype::I32 => lit_i32_vec(&b.xi, &self.spec.x_shape)?,
+        };
+        let y = lit_i32_vec(&b.y, &self.spec.y_shape)?;
+        Ok((x, y))
+    }
+}
+
+fn build_dataset(spec: &ModelSpec, clients: usize, seed: u64) -> Result<Box<dyn Dataset>> {
+    let seqlen = if spec.task == Task::Lm { spec.x_shape[1] } else { 0 };
+    Ok(match spec.name.as_str() {
+        "mlp" | "lenet" => Box::new(SynthImages::new("mnist", clients, seed)),
+        "cifarcnn" => Box::new(SynthImages::new("cifar", clients, seed)),
+        "charlm" => Box::new(CharCorpus::new(clients, 60_000, seqlen, seed)),
+        "wordlm" => Box::new(WordCorpus::new(spec.vocab, clients, 60_000, seqlen, seed)),
+        name if name.starts_with("tinygpt") => {
+            Box::new(CharCorpus::new(clients, 120_000, seqlen, seed))
+        }
+        other => return Err(anyhow!("no dataset mapping for model '{other}'")),
+    })
+}
+
+impl TrainBackend for PjrtBackend {
+    fn n_params(&self) -> usize {
+        self.spec.n_params
+    }
+
+    fn opt_size(&self) -> usize {
+        self.spec.opt_size
+    }
+
+    fn layout(&self) -> &TensorLayout {
+        &self.spec.layout
+    }
+
+    fn is_lm(&self) -> bool {
+        self.spec.task == Task::Lm
+    }
+
+    fn init_params(&mut self, seed: u64) -> Vec<f32> {
+        let _t = span("pjrt_init");
+        let out = self
+            .exe_init
+            .run(&[lit_scalar_i32(seed as i32)])
+            .expect("init graph failed");
+        to_f32_vec(&out[0]).expect("init output")
+    }
+
+    fn local_steps(
+        &mut self,
+        params: &[f32],
+        opt: &mut [f32],
+        steps: usize,
+        lr: f32,
+        t0: usize,
+        client: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, f32) {
+        let mut p_lit = lit_f32_vec(params, &[self.spec.n_params]).expect("params literal");
+        let mut o_lit = lit_f32_vec(opt, &[self.spec.opt_size]).expect("opt literal");
+        let mut loss_sum = 0.0f32;
+        for s in 0..steps {
+            let batch = self.data.train_batch(client, rng, self.batch);
+            let (x, y) = self.batch_literals(&batch).expect("batch literals");
+            let outs = {
+                let _t = span("pjrt_step");
+                self.exe_step
+                    .run(&[
+                        p_lit,
+                        o_lit,
+                        lit_scalar_f32(lr),
+                        lit_scalar_f32((t0 + s) as f32),
+                        x,
+                        y,
+                    ])
+                    .expect("step graph failed")
+            };
+            let mut it = outs.into_iter();
+            p_lit = it.next().expect("params out");
+            o_lit = it.next().expect("opt out");
+            let loss = it.next().expect("loss out");
+            loss_sum += scalar_f32(&loss).expect("loss scalar");
+        }
+        let new_params = to_f32_vec(&p_lit).expect("params back");
+        let new_opt = to_f32_vec(&o_lit).expect("opt back");
+        opt.copy_from_slice(&new_opt);
+        (new_params, loss_sum / steps.max(1) as f32)
+    }
+
+    fn evaluate(&mut self, params: &[f32], max_batches: usize) -> EvalOut {
+        let _t = span("pjrt_eval");
+        let p_lit = lit_f32_vec(params, &[self.spec.n_params]).expect("params literal");
+        let nb = self.data.eval_batches(self.batch).min(max_batches.max(1));
+        let (mut loss_sum, mut metric_sum, mut count) = (0.0f64, 0.0f64, 0.0f64);
+        for bi in 0..nb {
+            let batch = self.data.eval_batch(bi, self.batch);
+            let (x, y) = self.batch_literals(&batch).expect("batch literals");
+            // clone params literal by re-upload (Literal is not Clone here)
+            let p = lit_f32_vec(params, &[self.spec.n_params]).expect("params literal");
+            let outs = self.exe_eval.run(&[p, x, y]).expect("eval graph failed");
+            loss_sum += scalar_f32(&outs[0]).expect("loss_sum") as f64;
+            metric_sum += scalar_f32(&outs[1]).expect("metric") as f64;
+            count += scalar_f32(&outs[2]).expect("count") as f64;
+        }
+        drop(p_lit);
+        let loss = (loss_sum / count.max(1.0)) as f32;
+        let metric = match self.spec.task {
+            Task::Classification => (metric_sum / count.max(1.0)) as f32,
+            Task::Lm => loss, // trainer converts to perplexity
+        };
+        EvalOut { loss, metric }
+    }
+
+    fn compress_pjrt(&mut self, delta: &[f32], p: f32) -> Option<(Vec<f32>, f32, f32, bool)> {
+        let exe = self
+            .exe_compress
+            .get_or_init(|| {
+                self.compress_path.as_ref().and_then(|path| self.runtime.load(path).ok())
+            })
+            .as_ref()?;
+        let d = lit_f32_vec(delta, &[self.spec.n_params]).ok()?;
+        let outs = exe.run(&[d, lit_scalar_f32(p)]).ok()?;
+        let dense = to_f32_vec(&outs[0]).ok()?;
+        let t = scalar_f32(&outs[1]).ok()?;
+        let mu = scalar_f32(&outs[2]).ok()?;
+        let side = scalar_f32(&outs[3]).ok()? > 0.5;
+        Some((dense, t, mu, side))
+    }
+}

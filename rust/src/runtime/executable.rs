@@ -1,0 +1,88 @@
+//! Thin typed wrapper over the `xla` crate's PJRT client.
+//!
+//! Interchange is HLO *text* (see DESIGN.md and /opt/xla-example/README):
+//! jax >= 0.5 serializes protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids. All graphs
+//! are lowered with `return_tuple=True`, so every execution returns one
+//! tuple buffer which we decompose on the host.
+
+use anyhow::{anyhow, Context, Result};
+
+/// Process-wide PJRT client (CPU). Creating one is cheap but not free;
+/// share it across executables.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &str) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path}: {e:?}"))?;
+        Ok(Executable { exe, path: path.to_string() })
+    }
+}
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.path))?;
+        let mut lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e:?}", self.path))?;
+        lit.decompose_tuple().map_err(|e| anyhow!("decomposing result of {}: {e:?}", self.path))
+    }
+}
+
+/// Literal construction helpers.
+pub fn lit_f32_vec(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape f32 {shape:?}: {e:?}"))
+}
+
+pub fn lit_i32_vec(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape i32 {shape:?}: {e:?}"))
+}
+
+pub fn lit_scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn lit_scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {e:?}"))
+}
+
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().context("scalar f32 from literal")
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them from
+//! the coordinator's hot path. Python never runs here — the artifacts are
+//! self-contained XLA programs.
+
+pub mod backend;
+pub mod executable;
+
+pub use backend::PjrtBackend;
+pub use executable::{Executable, Runtime};

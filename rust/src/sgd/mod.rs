@@ -1,0 +1,14 @@
+//! Pure-Rust training substrate: flat-vector optimizers and a small MLP
+//! with hand-written backprop.
+//!
+//! This backend exists for two reasons: (a) the grid experiments (paper
+//! Fig. 3/4/9) run *hundreds* of complete distributed trainings — far more
+//! than the PJRT path needs to prove; a native f32 MLP makes those sweeps
+//! cheap; (b) it lets the whole coordinator stack (rounds, residuals,
+//! codecs, aggregation) be unit/property-tested without artifacts.
+
+pub mod mlp;
+pub mod optimizer;
+
+pub use mlp::NativeMlpBackend;
+pub use optimizer::Optimizer;

@@ -1,0 +1,135 @@
+//! Flat-vector optimizers mirroring the L2 graph semantics exactly
+//! (same update equations as `python/compile/models/common.py`), so the
+//! native backend and the PJRT backend are interchangeable in the
+//! coordinator.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptKind {
+    Sgd,
+    Momentum,
+    Adam,
+}
+
+impl OptKind {
+    pub fn from_name(name: &str) -> OptKind {
+        match name {
+            "momentum" => OptKind::Momentum,
+            "adam" => OptKind::Adam,
+            _ => OptKind::Sgd,
+        }
+    }
+
+    pub fn state_size(&self, n_params: usize) -> usize {
+        match self {
+            OptKind::Sgd => 1,
+            OptKind::Momentum => n_params,
+            OptKind::Adam => 2 * n_params,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Optimizer {
+    pub kind: OptKind,
+    pub momentum: f32,
+    pub clip: Option<f32>,
+}
+
+impl Optimizer {
+    pub fn new(kind: OptKind) -> Self {
+        Optimizer {
+            kind,
+            momentum: 0.9,
+            // plain SGD gets the Zaremba global-norm clip like the L2 graphs
+            clip: if kind == OptKind::Sgd { Some(5.0) } else { None },
+        }
+    }
+
+    /// In-place update: params/opt modified, grad consumed as scratch.
+    /// `t` is the global step index (Adam bias correction).
+    pub fn step(&self, params: &mut [f32], opt: &mut [f32], grad: &mut [f32], lr: f32, t: usize) {
+        if let Some(clip) = self.clip {
+            let norm = crate::util::tensor::l2_norm(grad);
+            if norm > clip {
+                crate::util::tensor::scale(grad, clip / norm);
+            }
+        }
+        match self.kind {
+            OptKind::Sgd => {
+                for i in 0..params.len() {
+                    params[i] -= lr * grad[i];
+                }
+            }
+            OptKind::Momentum => {
+                let m = self.momentum;
+                for i in 0..params.len() {
+                    opt[i] = m * opt[i] + grad[i];
+                    params[i] -= lr * opt[i];
+                }
+            }
+            OptKind::Adam => {
+                let n = params.len();
+                let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+                let bc1 = 1.0 - b1.powi(t as i32 + 1);
+                let bc2 = 1.0 - b2.powi(t as i32 + 1);
+                let (mvec, vvec) = opt.split_at_mut(n);
+                for i in 0..n {
+                    mvec[i] = b1 * mvec[i] + (1.0 - b1) * grad[i];
+                    vvec[i] = b2 * vvec[i] + (1.0 - b2) * grad[i] * grad[i];
+                    let mhat = mvec[i] / bc1;
+                    let vhat = vvec[i] / bc2;
+                    params[i] -= lr * mhat / (vhat.sqrt() + eps);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn momentum_matches_formula() {
+        let opt = Optimizer::new(OptKind::Momentum);
+        let mut p = vec![1.0f32, 2.0];
+        let mut state = vec![0.5f32, 0.0];
+        let mut g = vec![0.1f32, -0.2];
+        opt.step(&mut p, &mut state, &mut g, 0.1, 0);
+        // v = 0.9*0.5 + 0.1 = 0.55 ; p = 1 - 0.055
+        assert!((state[0] - 0.55).abs() < 1e-6);
+        assert!((p[0] - 0.945).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_first_step_size() {
+        // with bias correction, the first Adam step is ~lr regardless of g
+        let opt = Optimizer::new(OptKind::Adam);
+        let mut p = vec![0.0f32];
+        let mut state = vec![0.0f32; 2];
+        let mut g = vec![1e-3f32];
+        opt.step(&mut p, &mut state, &mut g, 0.01, 0);
+        assert!((p[0] + 0.01).abs() < 1e-3, "{}", p[0]);
+    }
+
+    #[test]
+    fn sgd_clips_global_norm() {
+        let opt = Optimizer::new(OptKind::Sgd);
+        let mut p = vec![0.0f32; 2];
+        let mut state = vec![0.0f32];
+        let mut g = vec![30.0f32, 40.0]; // norm 50 -> scaled to 5
+        opt.step(&mut p, &mut state, &mut g, 1.0, 0);
+        assert!((p[0] + 3.0).abs() < 1e-5);
+        assert!((p[1] + 4.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn state_sizes() {
+        assert_eq!(OptKind::Sgd.state_size(10), 1);
+        assert_eq!(OptKind::Momentum.state_size(10), 10);
+        assert_eq!(OptKind::Adam.state_size(10), 20);
+        assert_eq!(OptKind::from_name("adam"), OptKind::Adam);
+        assert_eq!(OptKind::from_name("momentum"), OptKind::Momentum);
+        assert_eq!(OptKind::from_name("sgd"), OptKind::Sgd);
+    }
+}

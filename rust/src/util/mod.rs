@@ -1,0 +1,19 @@
+//! Small shared substrates: deterministic RNG, flat-tensor math, timers.
+
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+pub mod timer;
+
+/// Global bench scale factor from `SBC_BENCH_SCALE` (default 1.0). The
+/// experiment harnesses multiply their iteration budgets by this, so
+/// `SBC_BENCH_SCALE=10 cargo bench` runs the paper-faithful budgets while
+/// the default stays laptop-sized.
+pub fn bench_scale() -> f64 {
+    std::env::var("SBC_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0)
+}
+
+/// `n` scaled by [`bench_scale`], with a floor.
+pub fn scaled(n: usize, floor: usize) -> usize {
+    ((n as f64 * bench_scale()) as usize).max(floor)
+}

@@ -1,0 +1,113 @@
+//! Flat f32 vector math used throughout the coordinator hot path.
+//!
+//! Everything here operates on plain `&[f32]`/`&mut [f32]` slices — the
+//! coordinator's canonical parameter representation — and is written to
+//! auto-vectorize (simple indexed loops, no bounds checks in the kernel
+//! bodies thanks to equal-length asserts hoisted to the top).
+
+/// y += x
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for i in 0..y.len() {
+        y[i] += x[i];
+    }
+}
+
+/// y -= x
+pub fn sub_assign(y: &mut [f32], x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for i in 0..y.len() {
+        y[i] -= x[i];
+    }
+}
+
+/// y += a * x
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for i in 0..y.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// y *= a
+pub fn scale(y: &mut [f32], a: f32) {
+    for v in y.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// out = a - b (allocating)
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// out = a - b written into `out`
+pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(out.len(), a.len());
+    for i in 0..out.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+pub fn l2_norm(x: &[f32]) -> f32 {
+    x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum::<f64>() as f32
+}
+
+pub fn abs_max(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+pub fn mean(x: &[f32]) -> f32 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    (x.iter().map(|v| *v as f64).sum::<f64>() / x.len() as f64) as f32
+}
+
+pub fn count_nonzero(x: &[f32]) -> usize {
+    x.iter().filter(|v| **v != 0.0).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_and_friends() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+        sub_assign(&mut y, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![2.0, 3.0, 4.0]);
+        add_assign(&mut y, &[1.0, 0.0, 0.0]);
+        assert_eq!(y, vec![3.0, 3.0, 4.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![1.5, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(l2_norm(&[3.0, 4.0]), 5.0);
+        assert_eq!(abs_max(&[-7.0, 2.0]), 7.0);
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(mean(&[1.0, 3.0]), 2.0);
+        assert_eq!(count_nonzero(&[0.0, 1.0, 0.0, -2.0]), 2);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn sub_into_matches_sub() {
+        let a = [5.0, 7.0];
+        let b = [1.0, 2.0];
+        let mut out = [0.0; 2];
+        sub_into(&mut out, &a, &b);
+        assert_eq!(out.to_vec(), sub(&a, &b));
+    }
+}

@@ -1,0 +1,78 @@
+//! Lightweight scoped timing + aggregate counters for the perf pass.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Global (process-wide) phase timer registry. Cheap enough to leave on:
+/// one mutex lock per recorded span, and spans are per-round, not per-step.
+pub static TIMERS: Timers = Timers { inner: Mutex::new(None) };
+
+pub struct Timers {
+    inner: Mutex<Option<BTreeMap<&'static str, (u64, f64)>>>,
+}
+
+impl Timers {
+    pub fn record(&self, name: &'static str, secs: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let map = g.get_or_insert_with(BTreeMap::new);
+        let e = map.entry(name).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += secs;
+    }
+
+    pub fn snapshot(&self) -> Vec<(String, u64, f64)> {
+        let g = self.inner.lock().unwrap();
+        g.as_ref()
+            .map(|m| m.iter().map(|(k, (n, s))| (k.to_string(), *n, *s)).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn reset(&self) {
+        *self.inner.lock().unwrap() = None;
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::from("phase                          calls     total_s      avg_ms\n");
+        for (name, n, s) in self.snapshot() {
+            out.push_str(&format!("{name:<30} {n:>6} {s:>11.3} {:>11.3}\n", s * 1e3 / n as f64));
+        }
+        out
+    }
+}
+
+/// RAII span: `let _t = span("encode");`
+pub struct Span {
+    name: &'static str,
+    start: Instant,
+}
+
+pub fn span(name: &'static str) -> Span {
+    Span { name, start: Instant::now() }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        TIMERS.record(self.name, self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_accumulate() {
+        TIMERS.reset();
+        {
+            let _a = span("unit_test_phase");
+        }
+        {
+            let _a = span("unit_test_phase");
+        }
+        let snap = TIMERS.snapshot();
+        let e = snap.iter().find(|(n, _, _)| n == "unit_test_phase").unwrap();
+        assert_eq!(e.1, 2);
+        assert!(TIMERS.report().contains("unit_test_phase"));
+    }
+}

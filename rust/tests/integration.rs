@@ -1,0 +1,157 @@
+//! Cross-module integration tests over the native backend: full DSGD
+//! trainings with every method, wire-format fidelity inside the training
+//! loop, residual bookkeeping, and ablation arms. (PJRT-path integration
+//! lives in `tests/pjrt.rs` and requires `make artifacts`.)
+
+use sbc::compression::registry::{Method, MethodConfig, SelectionCfg};
+use sbc::compression::Granularity;
+use sbc::coordinator::schedule::LrSchedule;
+use sbc::coordinator::trainer::{TrainConfig, Trainer};
+use sbc::sgd::NativeMlpBackend;
+
+fn run_cfg(mut cfg: TrainConfig) -> sbc::coordinator::trainer::TrainResult {
+    let mut be = NativeMlpBackend::digits_small(cfg.clients, cfg.seed);
+    cfg.eval_every_rounds = 1000; // final point only (tests assert on it)
+    cfg.eval_batches = 4;
+    Trainer::new(&mut be, cfg).run()
+}
+
+fn run(method: MethodConfig, iters: usize) -> sbc::coordinator::trainer::TrainResult {
+    run_cfg(TrainConfig::new("digits", method, iters, LrSchedule::constant(0.1)))
+}
+
+#[test]
+fn every_method_trains_above_chance() {
+    // chance = 10%; every method must clear 40% on the small digits task
+    let methods = vec![
+        MethodConfig::baseline(),
+        MethodConfig::fedavg(10),
+        MethodConfig::gradient_dropping(),
+        MethodConfig::sbc1(),
+        MethodConfig::sbc2(),
+        MethodConfig::of(Method::Qsgd { levels: 4 }, 1),
+        MethodConfig::of(Method::TernGrad, 1),
+        MethodConfig::of(Method::OneBit, 1),
+        MethodConfig::of(Method::SignSgd { scale: 1e-3 }, 1),
+    ];
+    for m in methods {
+        let label = m.label();
+        let r = run(m, 150);
+        assert!(
+            r.log.final_metric > 0.4,
+            "{label}: accuracy {} too low",
+            r.log.final_metric
+        );
+    }
+}
+
+#[test]
+fn compression_ordering_matches_table1() {
+    // measured compression must follow the theoretical ordering:
+    // baseline < signSGD < GD < SBC1 < SBC2 < SBC3
+    let b = run(MethodConfig::baseline(), 100).log.compression;
+    let s = run(MethodConfig::of(Method::SignSgd { scale: 1e-3 }, 1), 100).log.compression;
+    let g = run(MethodConfig::gradient_dropping(), 100).log.compression;
+    let s1 = run(MethodConfig::sbc1(), 100).log.compression;
+    let s2 = run(MethodConfig::sbc2(), 100).log.compression;
+    let s3 = run(MethodConfig::sbc3(), 200).log.compression;
+    assert!(b < s && s < g && g < s1 && s1 < s2 && s2 < s3, "{b} {s} {g} {s1} {s2} {s3}");
+    // magnitudes in the right ballpark (paper Table I)
+    assert!((25.0..40.0).contains(&s), "signSGD {s}");
+    assert!(g > 300.0, "GD {g}");
+    assert!(s3 > 20_000.0, "SBC3 {s3}");
+}
+
+#[test]
+fn residual_ablation_hurts_sparse_methods() {
+    // without error feedback, aggressive sparsification loses information
+    let mut with = MethodConfig::sbc1();
+    with.residual = Some(true);
+    let mut without = MethodConfig::sbc1();
+    without.residual = Some(false);
+    let a = run(with, 150).log.final_metric;
+    let b = run(without, 150).log.final_metric;
+    assert!(a >= b - 0.02, "residual on {a} vs off {b}");
+}
+
+#[test]
+fn granularity_global_vs_per_tensor_both_work() {
+    for g in [Granularity::Global, Granularity::PerTensor] {
+        let mut m = MethodConfig::sbc2();
+        m.granularity = g;
+        let r = run(m, 100);
+        assert!(r.log.final_metric > 0.4, "{g:?}: {}", r.log.final_metric);
+    }
+}
+
+#[test]
+fn selection_strategies_agree() {
+    let mk = |sel| {
+        let mut m = MethodConfig::of(Method::Sbc { p: 0.01, selection: sel }, 10);
+        m.granularity = Granularity::Global;
+        m
+    };
+    let e = run(mk(SelectionCfg::Exact), 150).log.final_metric;
+    let h = run(mk(SelectionCfg::Hist), 150).log.final_metric;
+    let s = run(mk(SelectionCfg::Sampled(2000)), 150).log.final_metric;
+    assert!((e - h).abs() < 0.15, "exact {e} vs hist {h}");
+    assert!((e - s).abs() < 0.2, "exact {e} vs sampled {s}");
+}
+
+#[test]
+fn delay_sweep_trades_compression_for_rounds() {
+    // higher delay -> fewer messages -> more compression
+    let mut last = 0.0;
+    for delay in [1usize, 5, 25] {
+        let m = MethodConfig::fedavg(delay.max(1));
+        let r = run(m, 100);
+        assert!(r.log.compression > last, "delay {delay}");
+        last = r.log.compression;
+    }
+}
+
+#[test]
+fn curve_points_are_monotone_in_bits() {
+    let mut cfg = TrainConfig::new("digits", MethodConfig::sbc2(), 200, LrSchedule::constant(0.1));
+    cfg.eval_every_rounds = 2;
+    let mut be = NativeMlpBackend::digits_small(4, 3);
+    let r = Trainer::new(&mut be, cfg).run();
+    assert!(r.log.points.len() >= 5);
+    for w in r.log.points.windows(2) {
+        assert!(w[1].client_up_bits > w[0].client_up_bits);
+        assert!(w[1].iterations > w[0].iterations);
+    }
+}
+
+#[test]
+fn momentum_masking_runs_and_learns() {
+    let mut m = MethodConfig::sbc2();
+    m.momentum_masking = true;
+    let r = run(m, 150);
+    assert!(r.log.final_metric > 0.4, "{}", r.log.final_metric);
+}
+
+#[test]
+fn csv_log_write() {
+    let r = run(MethodConfig::sbc2(), 50);
+    let path = std::env::temp_dir().join("sbc_test_log.csv");
+    let path_s = path.to_string_lossy().to_string();
+    let _ = std::fs::remove_file(&path);
+    r.log.append_csv(&path_s).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.starts_with("model,method"));
+    assert!(text.lines().count() >= 2);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn clients_scale() {
+    for clients in [1usize, 2, 8] {
+        let mut cfg =
+            TrainConfig::new("digits", MethodConfig::sbc2(), 60, LrSchedule::constant(0.1));
+        cfg.clients = clients;
+        let r = run_cfg(cfg);
+        assert_eq!(r.net.clients.len(), clients);
+        assert!(r.log.final_metric > 0.3, "clients={clients}: {}", r.log.final_metric);
+    }
+}

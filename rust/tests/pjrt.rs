@@ -1,0 +1,99 @@
+//! PJRT-path integration tests: require `make artifacts` (skipped with a
+//! message otherwise). These exercise the production stack end to end on
+//! the smallest model (mlp) plus the L1-kernel cross-validation: the
+//! compiled Pallas compress graph against the bit-identical Rust mirror.
+
+use sbc::compression::registry::MethodConfig;
+use sbc::compression::sbc::{SbcCompressor, Selection};
+use sbc::compression::{Granularity, TensorUpdate};
+use sbc::coordinator::schedule::LrSchedule;
+use sbc::coordinator::trainer::{TrainConfig, Trainer};
+use sbc::coordinator::TrainBackend;
+use sbc::model::manifest::Manifest;
+use sbc::runtime::PjrtBackend;
+use sbc::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("skipping pjrt tests: run `make artifacts` first");
+            None
+        }
+    }
+}
+
+#[test]
+fn mlp_trains_through_pjrt_with_sbc() {
+    let Some(manifest) = manifest() else { return };
+    let mut be = PjrtBackend::load(&manifest, "mlp", 4, 42).unwrap();
+    let mut cfg =
+        TrainConfig::new("mlp", MethodConfig::sbc2(), 60, LrSchedule::constant(0.1));
+    cfg.eval_every_rounds = 3;
+    cfg.eval_batches = 2;
+    let r = Trainer::new(&mut be, cfg).run();
+    let first = r.log.points.first().unwrap();
+    let last = r.log.points.last().unwrap();
+    assert!(last.metric > first.metric, "{} -> {}", first.metric, last.metric);
+    assert!(last.metric > 0.6, "final accuracy {}", last.metric);
+    assert!(r.log.compression > 1000.0, "compression {}", r.log.compression);
+}
+
+#[test]
+fn pjrt_compress_graph_matches_rust_hist_mirror() {
+    let Some(manifest) = manifest() else { return };
+    let mut be = PjrtBackend::load(&manifest, "mlp", 1, 0).unwrap();
+    let n = be.n_params();
+    let mut rng = Rng::new(11);
+    let delta: Vec<f32> = (0..n).map(|_| rng.normal() * rng.next_f32().powi(3)).collect();
+    for p in [0.001f32, 0.01, 0.05] {
+        let (dense, t, mu, side) =
+            be.compress_pjrt(&delta, p).expect("compress graph missing");
+        // Rust mirror of the kernel math (bit-pattern histogram selection)
+        let mut c = SbcCompressor::new(p as f64, Granularity::Global, Selection::Hist, 0);
+        let TensorUpdate::SparseBinary { idx, mu: mu_r, side_pos } = c.compress_segment(&delta)
+        else {
+            panic!()
+        };
+        assert_eq!(side, side_pos, "p={p}: side mismatch");
+        // identical threshold selection -> identical support
+        let kernel_idx: Vec<u32> = dense
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| **v != 0.0)
+            .map(|(i, _)| i as u32)
+            .collect();
+        assert_eq!(kernel_idx, idx, "p={p}: support mismatch");
+        // means agree to f32 reduction tolerance
+        assert!(
+            (mu.abs() - mu_r).abs() <= 1e-5 * mu_r.max(1.0),
+            "p={p}: mu {mu} vs {mu_r}"
+        );
+        assert!(t > 0.0);
+    }
+}
+
+#[test]
+fn pjrt_init_deterministic_and_eval_sane() {
+    let Some(manifest) = manifest() else { return };
+    let mut be = PjrtBackend::load(&manifest, "mlp", 2, 1).unwrap();
+    let a = be.init_params(5);
+    let b = be.init_params(5);
+    assert_eq!(a, b);
+    let ev = be.evaluate(&a, 2);
+    assert!(ev.loss > 1.5 && ev.loss < 3.5, "untrained CE loss {}", ev.loss);
+    assert!(ev.metric < 0.35, "untrained accuracy {}", ev.metric);
+}
+
+#[test]
+fn pjrt_local_steps_reduce_loss() {
+    let Some(manifest) = manifest() else { return };
+    let mut be = PjrtBackend::load(&manifest, "mlp", 1, 3).unwrap();
+    let params = be.init_params(3);
+    let mut opt = vec![0.0f32; be.opt_size()];
+    let mut rng = Rng::new(4);
+    let (_, l1) = be.local_steps(&params, &mut opt, 5, 0.1, 0, 0, &mut rng);
+    let (w2, _) = be.local_steps(&params, &mut opt, 25, 0.1, 0, 0, &mut rng);
+    let ev = be.evaluate(&w2, 2);
+    assert!(ev.loss < l1, "eval {} vs first-steps loss {l1}", ev.loss);
+}

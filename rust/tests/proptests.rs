@@ -1,0 +1,224 @@
+//! Property-based tests (hand-rolled harness: proptest is not in the
+//! vendored dependency set) over coordinator/codec/compression invariants.
+//! Each property runs across a seeded family of random cases; failures
+//! print the seed for exact reproduction.
+
+use sbc::codec::bitio::{BitReader, BitWriter};
+use sbc::codec::golomb;
+use sbc::codec::message::{self, PosCodec};
+use sbc::compression::registry::{Method, MethodConfig, SelectionCfg};
+use sbc::compression::residual::Residual;
+use sbc::compression::sbc::{SbcCompressor, Selection};
+use sbc::compression::topk;
+use sbc::compression::{Compressor, Granularity, TensorUpdate};
+use sbc::model::TensorLayout;
+use sbc::util::rng::Rng;
+
+/// Run `prop` over `cases` seeded random instances.
+fn forall(cases: u64, prop: impl Fn(&mut Rng, u64)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0x9E37 + seed * 7919);
+        prop(&mut rng, seed);
+    }
+}
+
+fn random_delta(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let shape = rng.below(4);
+    (0..n)
+        .map(|_| match shape {
+            0 => rng.normal(),
+            1 => rng.normal() * rng.next_f32().powi(4),
+            2 => rng.normal().abs(),
+            _ => -rng.normal().abs() * rng.next_f32(),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_golomb_roundtrip_any_positions() {
+    forall(40, |rng, seed| {
+        let n = 100 + rng.below(100_000);
+        let p = [0.0005, 0.005, 0.05, 0.3][rng.below(4)];
+        let mut positions: Vec<u32> = Vec::new();
+        for i in 0..n {
+            if rng.next_f64() < p {
+                positions.push(i as u32);
+            }
+        }
+        let b = golomb::optimal_b(p);
+        let mut w = BitWriter::new();
+        golomb::encode_positions(&mut w, &positions, b);
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::new(&bytes, bits);
+        let got = golomb::decode_positions(&mut r, positions.len(), b).unwrap();
+        assert_eq!(got, positions, "seed {seed}");
+        assert_eq!(bits, golomb::measure_positions_bits(&positions, b), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_message_roundtrip_every_compressor() {
+    forall(30, |rng, seed| {
+        let n = 500 + rng.below(5_000);
+        let layout = TensorLayout::new(vec![
+            ("a".into(), vec![n / 3]),
+            ("b".into(), vec![n - n / 3]),
+        ]);
+        let delta = random_delta(rng, layout.total);
+        let configs = [
+            MethodConfig::baseline(),
+            MethodConfig::gradient_dropping(),
+            MethodConfig::sbc2(),
+            MethodConfig::of(Method::Qsgd { levels: 4 }, 1),
+            MethodConfig::of(Method::TernGrad, 1),
+            MethodConfig::of(Method::OneBit, 1),
+            MethodConfig::of(Method::SignSgd { scale: 0.5 }, 1),
+        ];
+        for cfg in configs {
+            let mut c = cfg.build(seed);
+            let msg = c.compress(&delta, &layout, 3);
+            for codec in [PosCodec::Golomb, PosCodec::Fixed16, PosCodec::Elias] {
+                let (bytes, bits) = message::encode(&msg, codec);
+                let got = message::decode(&bytes, bits)
+                    .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", c.name()));
+                assert_eq!(got, msg, "seed {seed} {} {codec:?}", c.name());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sbc_transmitted_value_is_mean_of_kept() {
+    forall(30, |rng, seed| {
+        let n = 1_000 + rng.below(50_000);
+        let delta = random_delta(rng, n);
+        let p = [0.001, 0.01, 0.05][rng.below(3)];
+        let mut c = SbcCompressor::new(p, Granularity::Global, Selection::Exact, seed);
+        match c.compress_segment(&delta) {
+            TensorUpdate::SparseBinary { idx, mu, side_pos } => {
+                if idx.is_empty() {
+                    return;
+                }
+                let vals: Vec<f32> = idx.iter().map(|&i| delta[i as usize]).collect();
+                // all kept entries share the winning sign
+                if side_pos {
+                    assert!(vals.iter().all(|&v| v > 0.0), "seed {seed}");
+                } else {
+                    assert!(vals.iter().all(|&v| v < 0.0), "seed {seed}");
+                }
+                // mu is their mean magnitude
+                let mean = vals.iter().map(|v| v.abs() as f64).sum::<f64>() / vals.len() as f64;
+                assert!(
+                    (mu as f64 - mean).abs() <= 1e-5 * mean.max(1.0),
+                    "seed {seed}: mu {mu} vs mean {mean}"
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+    });
+}
+
+#[test]
+fn prop_sbc_error_never_exceeds_input_norm() {
+    // ||acc - transmitted|| <= ||acc|| (projection property, Thm II.1)
+    forall(25, |rng, seed| {
+        let n = 1_000 + rng.below(20_000);
+        let delta = random_delta(rng, n);
+        let mut c = SbcCompressor::new(0.01, Granularity::Global, Selection::Exact, seed);
+        let tu = c.compress_segment(&delta);
+        let mut dense = vec![0.0f32; n];
+        tu.add_into(&mut dense, 1.0);
+        let err: f64 = delta
+            .iter()
+            .zip(&dense)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let norm: f64 = delta.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt();
+        // binarization is not an exact projection, but must stay bounded
+        assert!(err <= norm * 1.0001, "seed {seed}: err {err} > norm {norm}");
+    });
+}
+
+#[test]
+fn prop_residual_conservation_through_compressor() {
+    // sum(delta_t) = sum(tx_t) + R_T for any compressor with residual
+    forall(15, |rng, seed| {
+        let n = 2_000;
+        let layout = TensorLayout::flat(n);
+        let mut c = SbcCompressor::new(0.02, Granularity::Global, Selection::Exact, seed);
+        let mut res = Residual::new(n, true);
+        let mut sum_delta = vec![0.0f64; n];
+        let mut sum_tx = vec![0.0f64; n];
+        for round in 0..12 {
+            let delta = random_delta(rng, n);
+            for i in 0..n {
+                sum_delta[i] += delta[i] as f64;
+            }
+            let mut acc = delta.clone();
+            res.accumulate_into(&mut acc);
+            let msg = c.compress(&acc, &layout, round);
+            let dense = msg.to_dense(&layout, 1.0);
+            res.update(&acc, &dense);
+            for i in 0..n {
+                sum_tx[i] += dense[i] as f64;
+            }
+        }
+        let mut max_err = 0.0f64;
+        for i in 0..n {
+            let e = (sum_delta[i] - sum_tx[i] - res.as_slice()[i] as f64).abs();
+            max_err = max_err.max(e);
+        }
+        assert!(max_err < 1e-2, "seed {seed}: conservation violated by {max_err}");
+    });
+}
+
+#[test]
+fn prop_topk_exact_count_and_magnitudes() {
+    forall(30, |rng, seed| {
+        let n = 100 + rng.below(30_000);
+        let x = random_delta(rng, n);
+        let k = 1 + rng.below(n.min(500));
+        let idx = topk::topk_exact(&x, k);
+        assert_eq!(idx.len(), k, "seed {seed}");
+        // sorted, unique
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "seed {seed}");
+        // min kept magnitude >= max dropped magnitude
+        let kept: std::collections::HashSet<u32> = idx.iter().copied().collect();
+        let min_kept = idx.iter().map(|&i| x[i as usize].abs()).fold(f32::MAX, f32::min);
+        let max_dropped = (0..n as u32)
+            .filter(|i| !kept.contains(i))
+            .map(|i| x[i as usize].abs())
+            .fold(0.0f32, f32::max);
+        assert!(min_kept >= max_dropped, "seed {seed}: {min_kept} < {max_dropped}");
+    });
+}
+
+#[test]
+fn prop_hist_threshold_never_undershoots() {
+    forall(30, |rng, seed| {
+        let n = 1_000 + rng.below(100_000);
+        let x = random_delta(rng, n);
+        let k = 1 + rng.below(n / 20 + 1) as u32;
+        let (tp, tn, _) = topk::hist_thresholds(&x, k);
+        let np = x.iter().filter(|&&v| v > 0.0 && v >= tp).count() as u32;
+        let nn = x.iter().filter(|&&v| v < 0.0 && -v >= tn).count() as u32;
+        let total_pos = x.iter().filter(|&&v| v > 0.0).count() as u32;
+        let total_neg = x.iter().filter(|&&v| v < 0.0).count() as u32;
+        assert!(np >= k.min(total_pos), "seed {seed}: pos {np} < {k}");
+        assert!(nn >= k.min(total_neg), "seed {seed}: neg {nn} < {k}");
+    });
+}
+
+#[test]
+fn prop_selection_cfg_roundtrip() {
+    for sel in [SelectionCfg::Exact, SelectionCfg::Hist, SelectionCfg::Sampled(100)] {
+        let s: Selection = sel.into();
+        match (sel, s) {
+            (SelectionCfg::Exact, Selection::Exact) => {}
+            (SelectionCfg::Hist, Selection::Hist) => {}
+            (SelectionCfg::Sampled(a), Selection::Sampled(b)) => assert_eq!(a, b),
+            other => panic!("{other:?}"),
+        }
+    }
+}
