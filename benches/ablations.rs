@@ -9,8 +9,8 @@
 //!     cargo bench --bench ablations
 
 use sbc::codec::message::{self, PosCodec};
-use sbc::compression::registry::{Method, MethodConfig, SelectionCfg};
-use sbc::compression::Granularity;
+use sbc::compression::registry::MethodConfig;
+use sbc::compression::{Granularity, QuantizerCfg, Selection, SelectorCfg};
 use sbc::coordinator::schedule::LrSchedule;
 use sbc::coordinator::trainer::{TrainConfig, Trainer};
 use sbc::metrics::render_table;
@@ -97,16 +97,17 @@ fn main() {
     add("global", m, PosCodec::Golomb);
 
     // selection strategy
-    for (name, sel) in [
-        ("select exact", SelectionCfg::Exact),
-        ("select hist", SelectionCfg::Hist),
-        ("select sampled-2k", SelectionCfg::Sampled(2000)),
+    for (name, strategy) in [
+        ("select exact", Selection::Exact),
+        ("select hist", Selection::Hist),
+        ("select sampled-2k", Selection::Sampled(2000)),
     ] {
-        add(
-            name,
-            MethodConfig::of(Method::Sbc { p: 0.01, selection: sel }, 10),
-            PosCodec::Golomb,
-        );
+        let m = MethodConfig::builder()
+            .select(SelectorCfg::TwoSided { p: 0.01, strategy })
+            .quantize(QuantizerCfg::BinaryMean)
+            .delay(10)
+            .build();
+        add(name, m, PosCodec::Golomb);
     }
 
     // pos codec, end to end

@@ -9,7 +9,7 @@
 //!     cargo bench --bench fig3_sparsity_grid
 //!     env: SBC_BENCH_SCALE, SBC_FIG3_SEEDS (default 2)
 
-use sbc::compression::registry::{Method, MethodConfig, SelectionCfg};
+use sbc::compression::registry::MethodConfig;
 use sbc::coordinator::schedule::LrSchedule;
 use sbc::coordinator::trainer::{TrainConfig, Trainer};
 use sbc::sgd::NativeMlpBackend;
@@ -38,13 +38,11 @@ fn main() {
         for &p in &ps {
             let mut err_sum = 0.0f64;
             for seed in 0..seeds {
-                let method = if p >= 1.0 {
-                    MethodConfig::fedavg(delay).method
+                let mc = if p >= 1.0 {
+                    MethodConfig::fedavg(delay)
                 } else {
-                    Method::Sbc { p, selection: SelectionCfg::Exact }
+                    MethodConfig::sbc(p, delay)
                 };
-                let mut mc = MethodConfig::of(method, delay);
-                mc.delay = delay;
                 let mut cfg = TrainConfig::new(
                     "digits16",
                     mc,

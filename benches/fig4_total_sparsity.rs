@@ -8,7 +8,7 @@
 //!
 //!     cargo bench --bench fig4_total_sparsity
 
-use sbc::compression::registry::{Method, MethodConfig, SelectionCfg};
+use sbc::compression::registry::MethodConfig;
 use sbc::coordinator::schedule::LrSchedule;
 use sbc::coordinator::trainer::{TrainConfig, Trainer};
 use sbc::metrics::render_table;
@@ -56,21 +56,10 @@ fn main() {
         // purely temporal: delay k, dense
         let temporal = run_curve(MethodConfig::fedavg(k), iterations, 42);
         // purely gradient: delay 1, p = 1/k (SBC binarized)
-        let gradient = run_curve(
-            MethodConfig::of(Method::Sbc { p: total, selection: SelectionCfg::Exact }, 1),
-            iterations,
-            42,
-        );
+        let gradient = run_curve(MethodConfig::sbc(total, 1), iterations, 42);
         // hybrid: delay sqrt(k), p = 1/sqrt(k)
         let h = (k as f64).sqrt().round() as usize;
-        let hybrid = run_curve(
-            MethodConfig::of(
-                Method::Sbc { p: 1.0 / h as f64, selection: SelectionCfg::Exact },
-                h,
-            ),
-            iterations,
-            42,
-        );
+        let hybrid = run_curve(MethodConfig::sbc(1.0 / h as f64, h), iterations, 42);
         for (name, curve) in
             [("temporal", &temporal), ("gradient", &gradient), ("hybrid", &hybrid)]
         {

@@ -1,26 +1,77 @@
 //! L3 hot-path profile: per-stage cost of one coordinator round at
 //! paper-scale parameter counts (compress -> encode -> decode -> densify
-//! -> aggregate), the numbers behind EXPERIMENTS.md §Perf.
+//! -> aggregate), plus heap-allocation accounting for the full
+//! client-round (the numbers behind EXPERIMENTS.md §Perf and the
+//! zero-alloc scratch-buffer claim).
 //!
 //!     cargo bench --bench hotpath
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-use sbc::codec::message::{self, PosCodec};
+use sbc::codec::message::{self, PosCodec, WireCodec};
 use sbc::compression::registry::MethodConfig;
-use sbc::coordinator::aggregation::{aggregate, AggRule};
+use sbc::compression::UpdateMsg;
+use sbc::coordinator::aggregation::{aggregate_into, AggRule};
 use sbc::metrics::render_table;
 use sbc::model::TensorLayout;
 use sbc::util::rng::Rng;
 
-fn main() {
+/// Counting allocator: tracks bytes and call counts so the bench can
+/// report allocations per client-round for the legacy allocating path vs
+/// the scratch-buffer path.
+struct CountingAlloc;
+
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn counters() -> (u64, u64) {
+    (ALLOC_BYTES.load(Ordering::Relaxed), ALLOC_CALLS.load(Ordering::Relaxed))
+}
+
+/// Run `f` and return (bytes allocated, allocation calls).
+fn count_allocs(mut f: impl FnMut()) -> (u64, u64) {
+    let (b0, c0) = counters();
+    f();
+    let (b1, c1) = counters();
+    (b1 - b0, c1 - c0)
+}
+
+fn stage_timings() {
     println!("== coordinator hot path: per-stage cost per client round ==\n");
     let mut rows = Vec::new();
     for &n in &[266_610usize, 1_304_552, 9_968_000] {
         let mut rng = Rng::new(9);
         let delta: Vec<f32> = (0..n).map(|_| rng.normal() * rng.next_f32().powi(4)).collect();
         let layout = TensorLayout::flat(n);
-        let mut compressor = MethodConfig::sbc2().build(0);
+        let mut pipeline = MethodConfig::sbc2().build(0);
+        let mut wire = WireCodec::new(PosCodec::Golomb);
+        let mut msg = UpdateMsg::scratch();
+        let mut decoded = UpdateMsg::scratch();
+        let mut dense = vec![0.0f32; n];
+        let mut agg = vec![0.0f32; n];
 
         let reps = if n > 5_000_000 { 3 } else { 10 };
         let time = |f: &mut dyn FnMut()| {
@@ -31,29 +82,29 @@ fn main() {
             t0.elapsed().as_secs_f64() / reps as f64 * 1e3
         };
 
-        let mut msg = None;
         let t_compress = time(&mut || {
-            msg = Some(compressor.compress(&delta, &layout, 0));
+            pipeline.compress_into(&delta, &layout, 0, &mut msg);
         });
-        let msg = msg.unwrap();
-        let mut enc = None;
+        let mut bits = 0u64;
         let t_encode = time(&mut || {
-            enc = Some(message::encode(&msg, PosCodec::Golomb));
+            bits = wire.encode(&msg).1;
         });
-        let (bytes, bits) = enc.unwrap();
-        let mut dec = None;
+        let bytes = wire.encode(&msg).0.to_vec();
         let t_decode = time(&mut || {
-            dec = Some(message::decode(&bytes, bits).unwrap());
+            message::decode_into(&bytes, bits, &mut decoded).unwrap();
         });
-        let decoded = dec.unwrap();
-        let mut dense = None;
         let t_densify = time(&mut || {
-            dense = Some(decoded.to_dense(&layout, 1.0));
+            decoded.densify_into(
+                &layout,
+                sbc::compression::Granularity::Global,
+                1.0,
+                &mut dense,
+            );
         });
-        let d = dense.unwrap();
-        let updates = vec![d.clone(), d.clone(), d.clone(), d];
+        let updates = [dense.as_slice(), dense.as_slice(), dense.as_slice(), dense.as_slice()];
         let t_agg = time(&mut || {
-            std::hint::black_box(aggregate(&updates, AggRule::Mean));
+            aggregate_into(updates.iter().copied(), AggRule::Mean, &mut agg);
+            std::hint::black_box(&agg);
         });
 
         rows.push(vec![
@@ -69,9 +120,108 @@ fn main() {
     println!(
         "{}",
         render_table(
-            &["params", "compress ms", "encode ms", "decode ms", "densify ms", "agg(4) ms", "total/client ms"],
+            &[
+                "params",
+                "compress ms",
+                "encode ms",
+                "decode ms",
+                "densify ms",
+                "agg(4) ms",
+                "total/client ms"
+            ],
             &rows
         )
     );
-    println!("\n(target: coordinator overhead < 10% of a training step — steps run\n 100-1000 ms at these scales on this host, so total/client must stay <~20 ms)");
+    println!(
+        "\n(target: coordinator overhead < 10% of a training step — steps run\n \
+         100-1000 ms at these scales on this host, so total/client must stay <~20 ms)"
+    );
+}
+
+/// Compress -> encode -> decode -> densify, allocating path vs the
+/// scratch-buffer path, measured in bytes allocated per client-round.
+fn alloc_accounting() {
+    println!("\n== allocation per client-round: legacy allocating vs scratch path ==\n");
+    let n = 1_304_552usize;
+    let mut rng = Rng::new(9);
+    let delta: Vec<f32> = (0..n).map(|_| rng.normal() * rng.next_f32().powi(4)).collect();
+    let layout = TensorLayout::flat(n);
+    let rounds = 10u64;
+
+    // legacy path: every stage allocates fresh buffers
+    let mut legacy_pipeline = MethodConfig::sbc2().build(0);
+    let (legacy_bytes, legacy_calls) = count_allocs(|| {
+        for round in 0..rounds {
+            let msg = legacy_pipeline.compress(&delta, &layout, round as u32);
+            let (bytes, bits) = message::encode(&msg, PosCodec::Golomb);
+            let decoded = message::decode(&bytes, bits).unwrap();
+            let dense = decoded.to_dense(&layout, 1.0);
+            std::hint::black_box(&dense);
+        }
+    });
+
+    // scratch path: one warm-up round populates the buffers, then
+    // steady-state rounds reuse them
+    let mut pipeline = MethodConfig::sbc2().build(0);
+    let mut wire = WireCodec::new(PosCodec::Golomb);
+    let mut msg = UpdateMsg::scratch();
+    let mut decoded = UpdateMsg::scratch();
+    let mut dense = vec![0.0f32; n];
+    let mut one_round = |round: u32| {
+        pipeline.compress_into(&delta, &layout, round, &mut msg);
+        let (bytes, bits) = wire.encode(&msg);
+        message::decode_into(bytes, bits, &mut decoded).unwrap();
+        decoded.densify_into(&layout, sbc::compression::Granularity::Global, 1.0, &mut dense);
+        std::hint::black_box(&dense);
+    };
+    one_round(0); // warm up scratch capacity
+    let (scratch_bytes, scratch_calls) = count_allocs(|| {
+        for round in 1..=rounds {
+            one_round(round as u32);
+        }
+    });
+
+    // densification alone — the acceptance-criterion stage — must be
+    // allocation-free in steady state
+    let (densify_bytes, _) = count_allocs(|| {
+        for _ in 0..rounds {
+            decoded.densify_into(&layout, sbc::compression::Granularity::Global, 1.0, &mut dense);
+            std::hint::black_box(&dense);
+        }
+    });
+
+    let rows = vec![
+        vec![
+            "legacy (compress/encode/decode/to_dense)".to_string(),
+            format!("{}", legacy_bytes / rounds),
+            format!("{:.1}", legacy_calls as f64 / rounds as f64),
+        ],
+        vec![
+            "scratch (compress_into/decode_into/densify_into)".to_string(),
+            format!("{}", scratch_bytes / rounds),
+            format!("{:.1}", scratch_calls as f64 / rounds as f64),
+        ],
+        vec![
+            "densify_into alone".to_string(),
+            format!("{}", densify_bytes / rounds),
+            "0.0".to_string(),
+        ],
+    ];
+    println!("{}", render_table(&["path", "bytes/round", "allocs/round"], &rows));
+
+    assert_eq!(
+        densify_bytes, 0,
+        "residual densification must be allocation-free in steady state"
+    );
+    assert_eq!(
+        scratch_bytes, 0,
+        "scratch round (compress_into -> encode -> decode_into -> densify_into) \
+         must be allocation-free in steady state"
+    );
+    println!("\n(scratch path steady state: 0 bytes/round — the residual-densify\n hot loop never touches the heap; legacy reallocated every stage)");
+}
+
+fn main() {
+    stage_timings();
+    alloc_accounting();
 }

@@ -5,7 +5,7 @@
 
 use sbc::codec::accounting::table1_rows;
 use sbc::codec::message::{self, PosCodec};
-use sbc::compression::registry::{Method, MethodConfig};
+use sbc::compression::registry::MethodConfig;
 use sbc::metrics::render_table;
 use sbc::model::TensorLayout;
 use sbc::util::rng::Rng;
@@ -45,10 +45,10 @@ fn main() {
     let dense_bits = 32.0 * n as f64;
     let configs: Vec<(MethodConfig, f64)> = vec![
         (MethodConfig::baseline(), 1.0),
-        (MethodConfig::of(Method::SignSgd { scale: 1e-3 }, 1), 1.0),
-        (MethodConfig::of(Method::TernGrad, 1), 1.0),
-        (MethodConfig::of(Method::Qsgd { levels: 4 }, 1), 1.0),
-        (MethodConfig::of(Method::OneBit, 1), 1.0),
+        (MethodConfig::signsgd(1e-3), 1.0),
+        (MethodConfig::terngrad(), 1.0),
+        (MethodConfig::qsgd(4), 1.0),
+        (MethodConfig::onebit(), 1.0),
         (MethodConfig::gradient_dropping(), 1.0),
         // delayed methods amortize their message over `delay` iterations
         (MethodConfig::fedavg(100), 100.0),
@@ -58,8 +58,8 @@ fn main() {
     ];
     let mut rows = Vec::new();
     for (cfg, amortize) in configs {
-        let mut c = cfg.build(1);
-        let msg = c.compress(&delta, &layout, 0);
+        let mut pipeline = cfg.build(1);
+        let msg = pipeline.compress(&delta, &layout, 0);
         let (_, bits) = message::encode(&msg, PosCodec::Golomb);
         let eff = bits as f64 / amortize;
         rows.push(vec![

@@ -8,7 +8,7 @@
 //!
 //!     cargo run --release --example adaptive_sparsity
 
-use sbc::compression::registry::{Method, MethodConfig, SelectionCfg};
+use sbc::compression::registry::MethodConfig;
 use sbc::coordinator::schedule::LrSchedule;
 use sbc::coordinator::trainer::{TrainConfig, Trainer};
 use sbc::metrics::render_table;
@@ -36,8 +36,7 @@ fn run_phases(phases: &[Phase], total_iters: usize, lr: &LrSchedule, seed: u64) 
         if until <= done {
             continue;
         }
-        let method =
-            MethodConfig::of(Method::Sbc { p: ph.p, selection: SelectionCfg::Exact }, ph.delay);
+        let method = MethodConfig::sbc(ph.p, ph.delay);
         let mut cfg = TrainConfig::new("digits16", method, until - done, lr.clone());
         cfg.seed = seed;
         cfg.eval_every_rounds = 1_000_000;

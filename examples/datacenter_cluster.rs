@@ -6,7 +6,7 @@
 //!
 //!     make artifacts && cargo run --release --example datacenter_cluster
 
-use sbc::compression::registry::{Method, MethodConfig};
+use sbc::compression::registry::MethodConfig;
 use sbc::config::presets;
 use sbc::coordinator::trainer::Trainer;
 use sbc::metrics::render_table;
@@ -22,8 +22,8 @@ fn main() -> anyhow::Result<()> {
     println!("== Datacenter scenario: MLP, 8 workers, 10G fabric, delay 1 ==\n");
     let methods = vec![
         MethodConfig::baseline(),
-        MethodConfig::of(Method::SignSgd { scale: 1e-3 }, 1),
-        MethodConfig::of(Method::Qsgd { levels: 4 }, 1),
+        MethodConfig::signsgd(1e-3),
+        MethodConfig::qsgd(4),
         MethodConfig::gradient_dropping(),
         MethodConfig::sbc1(),
     ];

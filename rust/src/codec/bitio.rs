@@ -84,13 +84,27 @@ impl BitWriter {
 
     /// Finish and return (bytes, exact_bit_count).
     pub fn finish(mut self) -> (Vec<u8>, u64) {
+        let bits = self.finalize();
+        (self.buf, bits)
+    }
+
+    /// Flush and pad in place; returns the exact bit count. The buffer is
+    /// readable through [`BitWriter::bytes`] and the writer is reusable
+    /// after [`BitWriter::clear`] — the non-consuming counterpart of
+    /// [`BitWriter::finish`] for scratch-buffer reuse across rounds.
+    pub fn finalize(&mut self) -> u64 {
         self.flush_acc();
         if self.nacc > 0 {
             let pad = 8 - self.nacc;
             self.buf.push(((self.acc << pad) & 0xFF) as u8);
             self.nacc = 0;
         }
-        (self.buf, self.bits)
+        self.bits
+    }
+
+    /// The bytes written so far (complete only after [`BitWriter::finalize`]).
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
     }
 
     pub fn clear(&mut self) {

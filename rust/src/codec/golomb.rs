@@ -47,6 +47,19 @@ pub fn encode_positions(w: &mut BitWriter, positions: &[u32], b: u32) {
 /// Decode `count` positions previously encoded with `encode_positions`.
 pub fn decode_positions(r: &mut BitReader, count: usize, b: u32) -> Option<Vec<u32>> {
     let mut out = Vec::with_capacity(count);
+    decode_positions_into(r, count, b, &mut out)?;
+    Some(out)
+}
+
+/// Decode `count` positions into `out` (cleared first) — the
+/// allocation-free variant for reused scratch buffers.
+pub fn decode_positions_into(
+    r: &mut BitReader,
+    count: usize,
+    b: u32,
+    out: &mut Vec<u32>,
+) -> Option<()> {
+    out.clear();
     let mut prev: i64 = -1;
     for _ in 0..count {
         let q = r.get_unary()?;
@@ -56,7 +69,7 @@ pub fn decode_positions(r: &mut BitReader, count: usize, b: u32) -> Option<Vec<u
         out.push(pos as u32);
         prev = pos;
     }
-    Some(out)
+    Some(())
 }
 
 /// Measured encode size in bits for a gap list, without writing.

@@ -1,19 +1,26 @@
-//! Wire format for client→server update messages.
+//! Wire codec stage: the bidirectional bit-exact message format.
 //!
-//! Every message is serialized to actual bits before it is "sent" and
-//! parsed back on the server side, so reported compression rates are
-//! measured on true wire size (headers included), not estimated.
+//! This is the third stage of the compression pipeline
+//! (Select → Quantize → **Encode**): every [`UpdateMsg`] — client→server
+//! compressed updates *and* the server→client broadcast aggregate — is
+//! serialized to actual bits before it is "sent" and parsed back on the
+//! receiving side, so reported compression rates and simulated link times
+//! are measured on true wire size (headers included), not estimated.
 //!
 //! Layout (MSB-first bitstream):
 //!   header:  magic u16 = 0x5BC0, version u4, round u32, ntensors u16
 //!   per tensor:
-//!     tag u4 (TensorUpdate discriminant), nelems u32
-//!     tag-specific payload (see encode_tensor)
+//!     tag u4 (TensorUpdate discriminant), then tag-specific payload
+//!     (see `encode_tensor`)
 //!
 //! Sparse position lists use the codec selected in [`PosCodec`]; SBC uses
 //! Golomb with the eq.-5 optimal parameter derived from the *actual*
 //! sparsity of the tensor (transmitted in 6 bits so the decoder needs no
 //! side channel).
+//!
+//! The hot path uses [`WireCodec`] (a reusable encode buffer) plus
+//! [`decode_into`] (reuses the output message's buffers); the allocating
+//! [`encode`]/[`decode`] pair remains for cold paths and tests.
 
 use anyhow::{anyhow, Result};
 
@@ -22,7 +29,7 @@ use crate::codec::{golomb, varint};
 use crate::compression::{TensorUpdate, UpdateMsg};
 
 const MAGIC: u64 = 0x5BC0;
-const VERSION: u64 = 1;
+const VERSION: u64 = 2;
 
 /// Position-list codec (ablation: DESIGN.md §7.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,6 +58,35 @@ impl PosCodec {
     }
 }
 
+/// The reusable wire-codec stage: owns the encode buffer so steady-state
+/// encoding allocates nothing. Decode goes through [`decode_into`] with a
+/// caller-owned scratch message.
+pub struct WireCodec {
+    pos: PosCodec,
+    writer: BitWriter,
+}
+
+impl WireCodec {
+    pub fn new(pos: PosCodec) -> WireCodec {
+        WireCodec { pos, writer: BitWriter::with_capacity(1024) }
+    }
+
+    pub fn pos_codec(&self) -> PosCodec {
+        self.pos
+    }
+
+    /// Serialize into the internal buffer; returns (bytes, exact bits).
+    ///
+    /// Decoding needs no codec state — position codecs are tagged on the
+    /// wire — so the decode side is the free [`decode_into`].
+    pub fn encode(&mut self, msg: &UpdateMsg) -> (&[u8], u64) {
+        self.writer.clear();
+        write_message(&mut self.writer, msg, self.pos);
+        let bits = self.writer.finalize();
+        (self.writer.bytes(), bits)
+    }
+}
+
 fn tensor_tag(t: &TensorUpdate) -> u64 {
     match t {
         TensorUpdate::Dense(_) => 0,
@@ -59,6 +95,7 @@ fn tensor_tag(t: &TensorUpdate) -> u64 {
         TensorUpdate::Sign { .. } => 3,
         TensorUpdate::Ternary { .. } => 4,
         TensorUpdate::Quantized { .. } => 5,
+        TensorUpdate::SignMeans { .. } => 6,
     }
 }
 
@@ -78,18 +115,18 @@ fn write_positions(w: &mut BitWriter, idx: &[u32], n: usize, codec: PosCodec) {
     }
 }
 
-fn read_positions(r: &mut BitReader) -> Result<Vec<u32>> {
+fn read_positions_into(r: &mut BitReader, out: &mut Vec<u32>) -> Result<()> {
     let codec = PosCodec::from_tag(r.get_bits(2).ok_or_else(|| anyhow!("eof"))?)?;
     let count = r.get_bits(32).ok_or_else(|| anyhow!("eof"))? as usize;
-    let idx = match codec {
+    let ok = match codec {
         PosCodec::Golomb => {
             let b = r.get_bits(6).ok_or_else(|| anyhow!("eof"))? as u32;
-            golomb::decode_positions(r, count, b)
+            golomb::decode_positions_into(r, count, b, out)
         }
-        PosCodec::Fixed16 => varint::decode_fixed(r, count, 16),
-        PosCodec::Elias => varint::decode_elias(r, count),
+        PosCodec::Fixed16 => varint::decode_fixed_into(r, count, 16, out),
+        PosCodec::Elias => varint::decode_elias_into(r, count, out),
     };
-    idx.ok_or_else(|| anyhow!("truncated position stream"))
+    ok.ok_or_else(|| anyhow!("truncated position stream"))
 }
 
 fn encode_tensor(w: &mut BitWriter, t: &TensorUpdate, codec: PosCodec) {
@@ -118,16 +155,27 @@ fn encode_tensor(w: &mut BitWriter, t: &TensorUpdate, codec: PosCodec) {
                 w.put_bit(s);
             }
         }
+        TensorUpdate::SignMeans { signs, mu_pos, mu_neg } => {
+            w.put_bits(signs.len() as u64, 32);
+            w.put_f32(*mu_pos);
+            w.put_f32(*mu_neg);
+            for &s in signs {
+                w.put_bit(s);
+            }
+        }
         TensorUpdate::Ternary { scale, vals } => {
             w.put_bits(vals.len() as u64, 32);
             w.put_f32(*scale);
             for &v in vals {
                 // 2-bit code: 00 zero, 01 +1, 10 -1
-                w.put_bits(match v {
-                    0 => 0,
-                    1 => 1,
-                    _ => 2,
-                }, 2);
+                w.put_bits(
+                    match v {
+                        0 => 0,
+                        1 => 1,
+                        _ => 2,
+                    },
+                    2,
+                );
             }
         }
         TensorUpdate::Quantized { scale, levels, vals } => {
@@ -151,89 +199,113 @@ fn write_positions_with_n(w: &mut BitWriter, idx: &[u32], codec: PosCodec) {
     write_positions(w, idx, n, codec);
 }
 
-fn read_positions_with_n(r: &mut BitReader) -> Result<Vec<u32>> {
+fn read_positions_with_n_into(r: &mut BitReader, out: &mut Vec<u32>) -> Result<()> {
     let _n = r.get_bits(32).ok_or_else(|| anyhow!("eof"))?;
-    read_positions(r)
+    read_positions_into(r, out)
 }
 
-fn decode_tensor(r: &mut BitReader) -> Result<TensorUpdate> {
-    let tag = r.get_bits(4).ok_or_else(|| anyhow!("eof"))?;
-    Ok(match tag {
+// --- decode-side slot helpers: reuse the scratch message's buffers ------
+
+fn need<T>(v: Option<T>) -> Result<T> {
+    v.ok_or_else(|| anyhow!("eof"))
+}
+
+fn decode_tensor_into(r: &mut BitReader, slot: &mut TensorUpdate) -> Result<()> {
+    let tag = need(r.get_bits(4))?;
+    match tag {
         0 => {
-            let n = r.get_bits(32).ok_or_else(|| anyhow!("eof"))? as usize;
-            let mut v = Vec::with_capacity(n);
+            let n = need(r.get_bits(32))? as usize;
+            let v = slot.dense_slot();
+            v.reserve(n);
             for _ in 0..n {
-                v.push(r.get_f32().ok_or_else(|| anyhow!("eof"))?);
+                v.push(need(r.get_f32())?);
             }
-            TensorUpdate::Dense(v)
         }
         1 => {
-            let idx = read_positions_with_n(r)?;
-            let mut val = Vec::with_capacity(idx.len());
+            let (idx, val) = slot.sparse_f32_slot();
+            read_positions_with_n_into(r, idx)?;
+            val.reserve(idx.len());
             for _ in 0..idx.len() {
-                val.push(r.get_f32().ok_or_else(|| anyhow!("eof"))?);
+                val.push(need(r.get_f32())?);
             }
-            TensorUpdate::SparseF32 { idx, val }
         }
         2 => {
-            let idx = read_positions_with_n(r)?;
-            let mu = r.get_f32().ok_or_else(|| anyhow!("eof"))?;
-            let side_pos = r.get_bit().ok_or_else(|| anyhow!("eof"))?;
-            TensorUpdate::SparseBinary { idx, mu, side_pos }
+            let (idx, mu, side_pos) = slot.sparse_binary_slot();
+            read_positions_with_n_into(r, idx)?;
+            *mu = need(r.get_f32())?;
+            *side_pos = need(r.get_bit())?;
         }
         3 => {
-            let n = r.get_bits(32).ok_or_else(|| anyhow!("eof"))? as usize;
-            let mut signs = Vec::with_capacity(n);
+            let n = need(r.get_bits(32))? as usize;
+            let signs = slot.sign_slot();
+            signs.reserve(n);
             for _ in 0..n {
-                signs.push(r.get_bit().ok_or_else(|| anyhow!("eof"))?);
+                signs.push(need(r.get_bit())?);
             }
-            TensorUpdate::Sign { signs }
         }
         4 => {
-            let n = r.get_bits(32).ok_or_else(|| anyhow!("eof"))? as usize;
-            let scale = r.get_f32().ok_or_else(|| anyhow!("eof"))?;
-            let mut vals = Vec::with_capacity(n);
+            let n = need(r.get_bits(32))? as usize;
+            let (scale, vals) = slot.ternary_slot();
+            *scale = need(r.get_f32())?;
+            vals.reserve(n);
             for _ in 0..n {
-                vals.push(match r.get_bits(2).ok_or_else(|| anyhow!("eof"))? {
+                vals.push(match need(r.get_bits(2))? {
                     0 => 0i8,
                     1 => 1,
                     2 => -1,
                     x => return Err(anyhow!("bad ternary code {x}")),
                 });
             }
-            TensorUpdate::Ternary { scale, vals }
         }
         5 => {
-            let n = r.get_bits(32).ok_or_else(|| anyhow!("eof"))? as usize;
-            let scale = r.get_f32().ok_or_else(|| anyhow!("eof"))?;
-            let levels = r.get_bits(8).ok_or_else(|| anyhow!("eof"))? as u8;
-            let mut vals = Vec::with_capacity(n);
+            let n = need(r.get_bits(32))? as usize;
+            let (scale, levels, vals) = slot.quantized_slot();
+            *scale = need(r.get_f32())?;
+            *levels = need(r.get_bits(8))? as u8;
+            vals.reserve(n);
             for _ in 0..n {
-                let neg = r.get_bit().ok_or_else(|| anyhow!("eof"))?;
-                let mag = varint::get_elias_gamma(r).ok_or_else(|| anyhow!("eof"))? - 1;
+                let neg = need(r.get_bit())?;
+                let mag = need(varint::get_elias_gamma(r))? - 1;
                 vals.push(if neg { -(mag as i8) } else { mag as i8 });
             }
-            TensorUpdate::Quantized { scale, levels, vals }
+        }
+        6 => {
+            let n = need(r.get_bits(32))? as usize;
+            let (signs, mu_pos, mu_neg) = slot.sign_means_slot();
+            *mu_pos = need(r.get_f32())?;
+            *mu_neg = need(r.get_f32())?;
+            signs.reserve(n);
+            for _ in 0..n {
+                signs.push(need(r.get_bit())?);
+            }
         }
         t => return Err(anyhow!("bad tensor tag {t}")),
-    })
+    }
+    Ok(())
 }
 
-/// Serialize a message. Returns (bytes, exact bit count).
-pub fn encode(msg: &UpdateMsg, codec: PosCodec) -> (Vec<u8>, u64) {
-    let mut w = BitWriter::with_capacity(1024);
+fn write_message(w: &mut BitWriter, msg: &UpdateMsg, codec: PosCodec) {
     w.put_bits(MAGIC, 16);
     w.put_bits(VERSION, 4);
     w.put_bits(msg.round as u64, 32);
     w.put_bits(msg.tensors.len() as u64, 16);
     for t in &msg.tensors {
-        encode_tensor(&mut w, t, codec);
+        encode_tensor(w, t, codec);
     }
+}
+
+/// Serialize a message into a fresh buffer. Returns (bytes, exact bits).
+/// Hot paths should prefer [`WireCodec::encode`], which reuses its buffer.
+pub fn encode(msg: &UpdateMsg, codec: PosCodec) -> (Vec<u8>, u64) {
+    let mut w = BitWriter::with_capacity(1024);
+    write_message(&mut w, msg, codec);
     w.finish()
 }
 
-/// Parse a message previously produced by [`encode`].
-pub fn decode(bytes: &[u8], bits: u64) -> Result<UpdateMsg> {
+/// Parse a message into `out`, reusing `out`'s tensor buffers: a slot
+/// whose variant matches the incoming tag keeps its allocations, so
+/// steady-state decoding of a stable message shape allocates nothing.
+pub fn decode_into(bytes: &[u8], bits: u64, out: &mut UpdateMsg) -> Result<()> {
     if bits > bytes.len() as u64 * 8 {
         return Err(anyhow!("bit count {bits} exceeds buffer ({} bytes)", bytes.len()));
     }
@@ -241,14 +313,29 @@ pub fn decode(bytes: &[u8], bits: u64) -> Result<UpdateMsg> {
     if r.get_bits(16) != Some(MAGIC) {
         return Err(anyhow!("bad magic"));
     }
-    let _version = r.get_bits(4).ok_or_else(|| anyhow!("eof"))?;
-    let round = r.get_bits(32).ok_or_else(|| anyhow!("eof"))? as u32;
-    let ntensors = r.get_bits(16).ok_or_else(|| anyhow!("eof"))? as usize;
-    let mut tensors = Vec::with_capacity(ntensors);
-    for _ in 0..ntensors {
-        tensors.push(decode_tensor(&mut r)?);
+    let version = need(r.get_bits(4))?;
+    if version != VERSION {
+        // v1 carried 1-bit SGD as Sign + Dense[2] pairs, which would
+        // silently densify to wrong values under the v2 tensor set
+        return Err(anyhow!("unsupported wire version {version} (this build speaks {VERSION})"));
     }
-    Ok(UpdateMsg { round, tensors })
+    out.round = need(r.get_bits(32))? as u32;
+    let ntensors = need(r.get_bits(16))? as usize;
+    out.tensors.truncate(ntensors);
+    while out.tensors.len() < ntensors {
+        out.tensors.push(TensorUpdate::placeholder());
+    }
+    for slot in out.tensors.iter_mut() {
+        decode_tensor_into(&mut r, slot)?;
+    }
+    Ok(())
+}
+
+/// Parse a message into a fresh [`UpdateMsg`] (allocating convenience).
+pub fn decode(bytes: &[u8], bits: u64) -> Result<UpdateMsg> {
+    let mut out = UpdateMsg::scratch();
+    decode_into(bytes, bits, &mut out)?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -270,6 +357,11 @@ mod tests {
                 TensorUpdate::SparseF32 { idx: vec![3, 9, 100], val: vec![0.5, -0.25, 7.0] },
                 TensorUpdate::SparseBinary { idx: vec![0, 5, 6, 1000], mu: 0.125, side_pos: false },
                 TensorUpdate::Sign { signs: vec![true, false, true] },
+                TensorUpdate::SignMeans {
+                    signs: vec![false, true, true],
+                    mu_pos: 0.5,
+                    mu_neg: -1.5,
+                },
                 TensorUpdate::Ternary { scale: 0.3, vals: vec![-1, 0, 1, 1, 0] },
                 TensorUpdate::Quantized { scale: 1.5, levels: 8, vals: vec![-8, 0, 3, 8] },
             ],
@@ -286,6 +378,27 @@ mod tests {
             tensors: vec![TensorUpdate::SparseBinary { idx: vec![], mu: 0.0, side_pos: true }],
         };
         roundtrip(&msg, PosCodec::Golomb);
+    }
+
+    #[test]
+    fn wire_codec_reuses_buffers() {
+        let msg = UpdateMsg {
+            round: 3,
+            tensors: vec![TensorUpdate::SparseF32 { idx: vec![1, 4], val: vec![0.5, -1.0] }],
+        };
+        let mut wire = WireCodec::new(PosCodec::Golomb);
+        // decode into a dirty scratch holding a different variant: the
+        // slot must be replaced, then reused on the second pass
+        let mut scratch = UpdateMsg {
+            round: 99,
+            tensors: vec![TensorUpdate::Sign { signs: vec![true; 64] }],
+        };
+        for _ in 0..2 {
+            let (bytes, bits) = wire.encode(&msg);
+            let bytes = bytes.to_vec();
+            decode_into(&bytes, bits, &mut scratch).unwrap();
+            assert_eq!(scratch, msg);
+        }
     }
 
     #[test]

@@ -22,8 +22,20 @@ pub fn encode_fixed(w: &mut BitWriter, positions: &[u32], width: u32) {
 }
 
 pub fn decode_fixed(r: &mut BitReader, count: usize, width: u32) -> Option<Vec<u32>> {
-    let escape = (1u64 << width) - 1;
     let mut out = Vec::with_capacity(count);
+    decode_fixed_into(r, count, width, &mut out)?;
+    Some(out)
+}
+
+/// Allocation-free variant of [`decode_fixed`] for reused scratch.
+pub fn decode_fixed_into(
+    r: &mut BitReader,
+    count: usize,
+    width: u32,
+    out: &mut Vec<u32>,
+) -> Option<()> {
+    let escape = (1u64 << width) - 1;
+    out.clear();
     let mut prev: i64 = -1;
     for _ in 0..count {
         let mut v = r.get_bits(width)?;
@@ -34,7 +46,7 @@ pub fn decode_fixed(r: &mut BitReader, count: usize, width: u32) -> Option<Vec<u
         out.push(pos as u32);
         prev = pos;
     }
-    Some(out)
+    Some(())
 }
 
 /// Elias-gamma code for x >= 1: floor(log2 x) zeros, then x in binary.
@@ -69,6 +81,13 @@ pub fn encode_elias(w: &mut BitWriter, positions: &[u32]) {
 
 pub fn decode_elias(r: &mut BitReader, count: usize) -> Option<Vec<u32>> {
     let mut out = Vec::with_capacity(count);
+    decode_elias_into(r, count, &mut out)?;
+    Some(out)
+}
+
+/// Allocation-free variant of [`decode_elias`] for reused scratch.
+pub fn decode_elias_into(r: &mut BitReader, count: usize, out: &mut Vec<u32>) -> Option<()> {
+    out.clear();
     let mut prev: i64 = -1;
     for _ in 0..count {
         let d = get_elias_gamma(r)? as i64;
@@ -76,7 +95,7 @@ pub fn decode_elias(r: &mut BitReader, count: usize) -> Option<Vec<u32>> {
         out.push(pos as u32);
         prev = pos;
     }
-    Some(out)
+    Some(())
 }
 
 #[cfg(test)]

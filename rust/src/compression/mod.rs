@@ -1,22 +1,38 @@
-//! Weight-update compression framework.
+//! Weight-update compression as a staged pipeline.
 //!
-//! A [`Compressor`] turns an accumulated weight-update (residual + fresh
-//! delta, paper eq. 2) into a [`UpdateMsg`] — the exact object that goes on
-//! the wire — plus the dense approximation needed for residual bookkeeping.
-//! Compression and encoding are separate stages: compressors produce
-//! structured updates; `codec::message` serializes them bit-exactly.
+//! The paper's core observation is that every compression method is a
+//! *composition*: communication delay (coordinator) × a sparsity
+//! **selector** × a value **quantizer** × a position **wire codec**. This
+//! module exposes exactly those stages:
+//!
+//! * [`select::Selector`] — which coordinates of a segment survive
+//!   (dense passthrough, magnitude top-p, SBC's per-side top-p);
+//! * [`quantize::Quantizer`] — what is transmitted for the survivors
+//!   (full f32, one binary mean, signs, ternary, QSGD levels, 1-bit
+//!   sign+means);
+//! * [`crate::codec::message::WireCodec`] — how positions and values are
+//!   serialized bit-exactly (Golomb / fixed-16 / Elias positions).
+//!
+//! A [`pipeline::Pipeline`] composes the first two over per-tensor
+//! **segment views** (zero-copy slices of the flat update vector) and
+//! writes into caller-owned scratch ([`Pipeline::compress_into`]), so the
+//! coordinator's hot loop performs no per-round heap allocation. The
+//! [`registry::MethodConfig`] builder names the compositions; every
+//! method the paper compares against is a preset.
+//!
+//! [`Pipeline::compress_into`]: pipeline::Pipeline::compress_into
 
-pub mod fedavg;
-pub mod gradient_dropping;
 pub mod momentum_mask;
-pub mod onebit;
-pub mod qsgd;
+pub mod pipeline;
+pub mod quantize;
 pub mod registry;
 pub mod residual;
-pub mod sbc;
-pub mod signsgd;
-pub mod terngrad;
+pub mod select;
 pub mod topk;
+
+pub use pipeline::Pipeline;
+pub use quantize::QuantizerCfg;
+pub use select::{Selection, SelectorCfg};
 
 use crate::model::TensorLayout;
 
@@ -33,6 +49,9 @@ pub enum TensorUpdate {
     SparseBinary { idx: Vec<u32>, mu: f32, side_pos: bool },
     /// Dense sign quantization (signSGD): one bit per element.
     Sign { signs: Vec<bool> },
+    /// Dense 1-bit quantization with per-segment means (1-bit SGD): sign
+    /// bit per element, plus the positive-side and negative-side means.
+    SignMeans { signs: Vec<bool>, mu_pos: f32, mu_neg: f32 },
     /// Dense stochastic ternary (TernGrad): scale plus {-1,0,+1}.
     Ternary { scale: f32, vals: Vec<i8> },
     /// QSGD stochastic uniform quantization: per-tensor scale, signed
@@ -41,13 +60,19 @@ pub enum TensorUpdate {
 }
 
 impl TensorUpdate {
-    /// Number of elements the update covers when densified to length `n`.
+    /// Number of elements this update transmits values for. Sparse
+    /// variants count their index lists; `Dense`, `Ternary` and
+    /// `Quantized` count entries that densify to a non-zero contribution.
+    /// Note the dense 1-bit variants (`Sign`, `SignMeans`) count *all*
+    /// elements of the segment — every coordinate carries a sign bit, so
+    /// nothing about them is "non-zero" in the sparse sense.
     pub fn nonzeros(&self) -> usize {
         match self {
             TensorUpdate::Dense(v) => v.iter().filter(|x| **x != 0.0).count(),
             TensorUpdate::SparseF32 { idx, .. } => idx.len(),
             TensorUpdate::SparseBinary { idx, .. } => idx.len(),
             TensorUpdate::Sign { signs } => signs.len(),
+            TensorUpdate::SignMeans { signs, .. } => signs.len(),
             TensorUpdate::Ternary { vals, .. } => vals.iter().filter(|v| **v != 0).count(),
             TensorUpdate::Quantized { vals, .. } => vals.iter().filter(|v| **v != 0).count(),
         }
@@ -77,6 +102,11 @@ impl TensorUpdate {
                     *o += if *s { sign_scale } else { -sign_scale };
                 }
             }
+            TensorUpdate::SignMeans { signs, mu_pos, mu_neg } => {
+                for (o, s) in out.iter_mut().zip(signs) {
+                    *o += if *s { *mu_pos } else { *mu_neg };
+                }
+            }
             TensorUpdate::Ternary { scale, vals } => {
                 for (o, v) in out.iter_mut().zip(vals) {
                     *o += *v as f32 * scale;
@@ -90,9 +120,118 @@ impl TensorUpdate {
             }
         }
     }
+
+    /// A cheap placeholder slot (used when growing scratch messages).
+    pub fn placeholder() -> TensorUpdate {
+        TensorUpdate::Dense(Vec::new())
+    }
+
+    // --- scratch-slot accessors -----------------------------------------
+    //
+    // Reset this slot to the given variant and hand out its fields,
+    // reusing the existing buffers when the variant already matches (the
+    // allocation-free steady state). Shared by the quantizer stage
+    // (compress side) and the wire decoder (decode side) so the
+    // reset-or-replace logic exists exactly once per variant.
+
+    pub(crate) fn dense_slot(&mut self) -> &mut Vec<f32> {
+        if !matches!(self, TensorUpdate::Dense(_)) {
+            *self = TensorUpdate::Dense(Vec::new());
+        }
+        match self {
+            TensorUpdate::Dense(v) => {
+                v.clear();
+                v
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    pub(crate) fn sparse_f32_slot(&mut self) -> (&mut Vec<u32>, &mut Vec<f32>) {
+        if !matches!(self, TensorUpdate::SparseF32 { .. }) {
+            *self = TensorUpdate::SparseF32 { idx: Vec::new(), val: Vec::new() };
+        }
+        match self {
+            TensorUpdate::SparseF32 { idx, val } => {
+                idx.clear();
+                val.clear();
+                (idx, val)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    pub(crate) fn sparse_binary_slot(&mut self) -> (&mut Vec<u32>, &mut f32, &mut bool) {
+        if !matches!(self, TensorUpdate::SparseBinary { .. }) {
+            *self = TensorUpdate::SparseBinary { idx: Vec::new(), mu: 0.0, side_pos: true };
+        }
+        match self {
+            TensorUpdate::SparseBinary { idx, mu, side_pos } => {
+                idx.clear();
+                *mu = 0.0;
+                *side_pos = true;
+                (idx, mu, side_pos)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    pub(crate) fn sign_slot(&mut self) -> &mut Vec<bool> {
+        if !matches!(self, TensorUpdate::Sign { .. }) {
+            *self = TensorUpdate::Sign { signs: Vec::new() };
+        }
+        match self {
+            TensorUpdate::Sign { signs } => {
+                signs.clear();
+                signs
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    pub(crate) fn sign_means_slot(&mut self) -> (&mut Vec<bool>, &mut f32, &mut f32) {
+        if !matches!(self, TensorUpdate::SignMeans { .. }) {
+            *self = TensorUpdate::SignMeans { signs: Vec::new(), mu_pos: 0.0, mu_neg: 0.0 };
+        }
+        match self {
+            TensorUpdate::SignMeans { signs, mu_pos, mu_neg } => {
+                signs.clear();
+                (signs, mu_pos, mu_neg)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    pub(crate) fn ternary_slot(&mut self) -> (&mut f32, &mut Vec<i8>) {
+        if !matches!(self, TensorUpdate::Ternary { .. }) {
+            *self = TensorUpdate::Ternary { scale: 0.0, vals: Vec::new() };
+        }
+        match self {
+            TensorUpdate::Ternary { scale, vals } => {
+                vals.clear();
+                (scale, vals)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    pub(crate) fn quantized_slot(&mut self) -> (&mut f32, &mut u8, &mut Vec<i8>) {
+        if !matches!(self, TensorUpdate::Quantized { .. }) {
+            *self = TensorUpdate::Quantized { scale: 0.0, levels: 1, vals: Vec::new() };
+        }
+        match self {
+            TensorUpdate::Quantized { scale, levels, vals } => {
+                vals.clear();
+                (scale, levels, vals)
+            }
+            _ => unreachable!(),
+        }
+    }
 }
 
-/// A full client→server message: one update per layout segment.
+/// A full update message: one [`TensorUpdate`] per segment. Used in both
+/// directions — client→server (compressed accumulated updates) and
+/// server→client (the broadcast aggregate).
 #[derive(Clone, Debug, PartialEq)]
 pub struct UpdateMsg {
     pub round: u32,
@@ -100,12 +239,43 @@ pub struct UpdateMsg {
 }
 
 impl UpdateMsg {
-    /// Densify the whole message into a flat vector of length `layout.total`.
+    /// An empty message suitable as reusable scratch for
+    /// `compress_into`/`decode_into`.
+    pub fn scratch() -> UpdateMsg {
+        UpdateMsg { round: 0, tensors: Vec::new() }
+    }
+
+    /// Densify into `out` (zeroed first), mapping tensor `i` onto the
+    /// segment given by `granularity` over `layout`. This is the
+    /// allocation-free replacement for [`UpdateMsg::to_dense`]: the
+    /// caller owns `out` and reuses it across rounds.
+    pub fn densify_into(
+        &self,
+        layout: &TensorLayout,
+        granularity: Granularity,
+        sign_scale: f32,
+        out: &mut [f32],
+    ) {
+        // ntensors comes off the wire (u16) — never trust it to match
+        // the segmentation, or a corrupt-but-parseable message would
+        // overlap-add tensors over the same range in release builds
+        assert_eq!(
+            self.tensors.len(),
+            granularity.n_segments(layout),
+            "message tensor count does not match the {granularity:?} segmentation"
+        );
+        out.fill(0.0);
+        for (i, tu) in self.tensors.iter().enumerate() {
+            tu.add_into(&mut out[granularity.segment(layout, i)], sign_scale);
+        }
+    }
+
+    /// Densify the whole message into a fresh flat vector of length
+    /// `layout.total`, one tensor per layout segment (allocating
+    /// convenience for tests and cold paths).
     pub fn to_dense(&self, layout: &TensorLayout, sign_scale: f32) -> Vec<f32> {
         let mut out = vec![0.0f32; layout.total];
-        for (seg, tu) in layout.segments().zip(&self.tensors) {
-            tu.add_into(&mut out[seg.clone()], sign_scale);
-        }
+        self.densify_into(layout, Granularity::PerTensor, sign_scale, &mut out);
         out
     }
 }
@@ -117,25 +287,24 @@ pub enum Granularity {
     Global,
 }
 
-/// A gradient compressor. Stateless w.r.t. clients — residuals and momentum
-/// live in the coordinator's per-client state; compressors may carry
-/// method-level state (e.g. QSGD rng) via `&mut self`.
-pub trait Compressor: Send {
-    fn name(&self) -> &'static str;
-
-    /// Compress the accumulated update `acc` (layout-segmented). Returns the
-    /// message; the caller reconstructs the dense approximation via
-    /// `UpdateMsg::to_dense` for residual accounting.
-    fn compress(&mut self, acc: &[f32], layout: &TensorLayout, round: u32) -> UpdateMsg;
-
-    /// Whether this method uses residual accumulation (error feedback).
-    fn uses_residual(&self) -> bool {
-        true
+impl Granularity {
+    /// How many segments an update splits into under this granularity.
+    pub fn n_segments(&self, layout: &TensorLayout) -> usize {
+        match self {
+            Granularity::PerTensor => layout.len(),
+            Granularity::Global => 1,
+        }
     }
 
-    /// Scale applied when densifying `Sign` updates (signSGD semantics).
-    fn sign_scale(&self) -> f32 {
-        1.0
+    /// The flat-vector range of segment `i`.
+    pub fn segment(&self, layout: &TensorLayout, i: usize) -> std::ops::Range<usize> {
+        match self {
+            Granularity::PerTensor => layout.range(i),
+            Granularity::Global => {
+                debug_assert_eq!(i, 0);
+                0..layout.total
+            }
+        }
     }
 }
 
@@ -175,12 +344,51 @@ mod tests {
     }
 
     #[test]
+    fn densify_sign_means() {
+        let layout = TensorLayout::flat(4);
+        let t = TensorUpdate::SignMeans {
+            signs: vec![true, false, true, false],
+            mu_pos: 2.0,
+            mu_neg: -3.0,
+        };
+        let dense = UpdateMsg { round: 0, tensors: vec![t] }.to_dense(&layout, 1.0);
+        assert_eq!(dense, vec![2.0, -3.0, 2.0, -3.0]);
+    }
+
+    #[test]
+    fn densify_into_reuses_buffer_and_zeroes() {
+        let layout = layout2();
+        let msg = UpdateMsg {
+            round: 0,
+            tensors: vec![TensorUpdate::SparseBinary { idx: vec![3], mu: 1.0, side_pos: true }],
+        };
+        let mut out = vec![7.0f32; layout.total];
+        msg.densify_into(&layout, Granularity::Global, 1.0, &mut out);
+        assert_eq!(out, vec![0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
     fn nonzeros() {
         assert_eq!(TensorUpdate::Dense(vec![0.0, 1.0]).nonzeros(), 1);
         assert_eq!(
             TensorUpdate::SparseBinary { idx: vec![1, 2, 3], mu: 0.1, side_pos: true }.nonzeros(),
             3
         );
+        // dense 1-bit variants count every element, not non-zeros
         assert_eq!(TensorUpdate::Sign { signs: vec![true, false] }.nonzeros(), 2);
+        assert_eq!(
+            TensorUpdate::SignMeans { signs: vec![true, false, true], mu_pos: 0.0, mu_neg: 0.0 }
+                .nonzeros(),
+            3
+        );
+    }
+
+    #[test]
+    fn granularity_segments() {
+        let layout = layout2();
+        assert_eq!(Granularity::PerTensor.n_segments(&layout), 2);
+        assert_eq!(Granularity::Global.n_segments(&layout), 1);
+        assert_eq!(Granularity::PerTensor.segment(&layout, 1), 4..10);
+        assert_eq!(Granularity::Global.segment(&layout, 0), 0..10);
     }
 }

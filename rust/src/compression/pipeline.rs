@@ -1,0 +1,254 @@
+//! The staged compression pipeline: Select → Quantize over zero-copy
+//! segment views, with caller-owned output scratch.
+//!
+//! A [`Pipeline`] walks the layout's segments (or the whole vector under
+//! global granularity), runs the [`Selector`] and [`Quantizer`] stages on
+//! each segment slice, and writes one [`TensorUpdate`] per segment into a
+//! reusable [`UpdateMsg`]. Together with
+//! [`crate::codec::message::WireCodec`] (encode) and
+//! [`UpdateMsg::densify_into`] (decode side), the coordinator's hot loop
+//! reuses every buffer across rounds.
+
+use crate::compression::quantize::Quantizer;
+use crate::compression::select::Selector;
+use crate::compression::{Granularity, TensorUpdate, UpdateMsg};
+use crate::model::TensorLayout;
+
+/// A composed Select → Quantize pipeline over layout segments.
+pub struct Pipeline {
+    selector: Selector,
+    quantizer: Quantizer,
+    granularity: Granularity,
+    /// Reused index scratch for the selector stage.
+    idx: Vec<u32>,
+}
+
+impl Pipeline {
+    pub fn new(selector: Selector, quantizer: Quantizer, granularity: Granularity) -> Pipeline {
+        Pipeline { selector, quantizer, granularity, idx: Vec::new() }
+    }
+
+    pub fn granularity(&self) -> Granularity {
+        self.granularity
+    }
+
+    pub fn selector(&self) -> &Selector {
+        &self.selector
+    }
+
+    pub fn quantizer(&self) -> &Quantizer {
+        &self.quantizer
+    }
+
+    /// Short method name derived from the stage composition (labels,
+    /// logs; the human-facing label lives on `MethodConfig`).
+    pub fn name(&self) -> &'static str {
+        use crate::compression::quantize::QuantizerCfg as Q;
+        use crate::compression::select::SelectorCfg as S;
+        match (self.selector.cfg(), self.quantizer.cfg()) {
+            (S::Dense, Q::F32) => "dense",
+            (S::TopK { .. }, Q::F32) => "gradient_dropping",
+            (S::TwoSided { .. }, Q::F32) => "two_sided_f32",
+            (_, Q::BinaryMean) => "sbc",
+            (_, Q::Sign { .. }) => "signsgd",
+            (_, Q::Ternary) => "terngrad",
+            (_, Q::Qsgd { .. }) => "qsgd",
+            (_, Q::SignMeans) => "onebit",
+        }
+    }
+
+    /// Compress the accumulated update `acc` into `out`, reusing `out`'s
+    /// buffers (zero steady-state heap allocation).
+    pub fn compress_into(
+        &mut self,
+        acc: &[f32],
+        layout: &TensorLayout,
+        round: u32,
+        out: &mut UpdateMsg,
+    ) {
+        assert_eq!(acc.len(), layout.total, "update length must match layout");
+        out.round = round;
+        let nseg = self.granularity.n_segments(layout);
+        out.tensors.truncate(nseg);
+        while out.tensors.len() < nseg {
+            out.tensors.push(TensorUpdate::placeholder());
+        }
+        for i in 0..nseg {
+            let x = &acc[self.granularity.segment(layout, i)];
+            let support = self.selector.select(x, &mut self.idx);
+            self.quantizer.quantize(x, support, &self.idx, &mut out.tensors[i]);
+        }
+    }
+
+    /// Allocating convenience wrapper (tests, cold paths).
+    pub fn compress(&mut self, acc: &[f32], layout: &TensorLayout, round: u32) -> UpdateMsg {
+        let mut out = UpdateMsg::scratch();
+        self.compress_into(acc, layout, round, &mut out);
+        out
+    }
+
+    /// Compress a single segment (selection + quantization on one slice),
+    /// bypassing the layout walk — used by the PJRT kernel
+    /// cross-validation and unit tests.
+    pub fn compress_segment(&mut self, x: &[f32]) -> TensorUpdate {
+        let mut out = TensorUpdate::placeholder();
+        let support = self.selector.select(x, &mut self.idx);
+        self.quantizer.quantize(x, support, &self.idx, &mut out);
+        out
+    }
+}
+
+/// Server-side broadcast compression: represent the aggregated update
+/// sparsely when its support is small enough that positions + f32 values
+/// beat a dense block, densely otherwise. Reuses `out`'s buffers. The
+/// result goes through the same [`crate::codec::message::WireCodec`] as
+/// upstream messages, so downstream bits are *measured*, not estimated.
+pub fn compress_broadcast_into(delta: &[f32], round: u32, out: &mut UpdateMsg) {
+    out.round = round;
+    out.tensors.truncate(1);
+    if out.tensors.is_empty() {
+        out.tensors.push(TensorUpdate::placeholder());
+    }
+    let nnz = delta.iter().filter(|v| **v != 0.0).count() as u64;
+    // sparse cost ≈ 48 bits/entry (32-bit value + ~16-bit position)
+    let slot = &mut out.tensors[0];
+    if nnz * 48 + 64 < 32 * delta.len() as u64 {
+        if !matches!(slot, TensorUpdate::SparseF32 { .. }) {
+            *slot = TensorUpdate::SparseF32 { idx: Vec::new(), val: Vec::new() };
+        }
+        let TensorUpdate::SparseF32 { idx, val } = slot else { unreachable!() };
+        idx.clear();
+        val.clear();
+        for (i, &v) in delta.iter().enumerate() {
+            if v != 0.0 {
+                idx.push(i as u32);
+                val.push(v);
+            }
+        }
+    } else {
+        if !matches!(slot, TensorUpdate::Dense(_)) {
+            *slot = TensorUpdate::Dense(Vec::new());
+        }
+        let TensorUpdate::Dense(v) = slot else { unreachable!() };
+        v.clear();
+        v.extend_from_slice(delta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::quantize::QuantizerCfg;
+    use crate::compression::registry::MethodConfig;
+    use crate::compression::select::{Selection, SelectorCfg};
+    use crate::util::rng::Rng;
+
+    fn heavy(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() * rng.next_f32().powi(3)).collect()
+    }
+
+    #[test]
+    fn dense_pipeline_is_lossless() {
+        let x = vec![1.0f32, -2.0, 3.5];
+        let layout = TensorLayout::flat(3);
+        let mut p = MethodConfig::baseline().build(0);
+        let dense = p.compress(&x, &layout, 0).to_dense(&layout, 1.0);
+        assert_eq!(dense, x);
+    }
+
+    #[test]
+    fn graddrop_pipeline_keeps_exact_values() {
+        let x = vec![0.0f32, -3.0, 0.5, 2.0, -0.1];
+        let mut p = MethodConfig::builder()
+            .select(SelectorCfg::TopK { p: 0.4, strategy: Selection::Exact })
+            .quantize(QuantizerCfg::F32)
+            .granularity(Granularity::Global)
+            .build()
+            .build(0);
+        let msg = p.compress(&x, &TensorLayout::flat(5), 0);
+        match &msg.tensors[0] {
+            TensorUpdate::SparseF32 { idx, val } => {
+                assert_eq!(idx, &vec![1, 3]);
+                assert_eq!(val, &vec![-3.0, 2.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sbc_pipeline_sparsity_is_respected() {
+        let x = heavy(100_000, 7);
+        let mut p = MethodConfig::sbc(0.01, 1).with_granularity(Granularity::Global).build(0);
+        let tu = p.compress_segment(&x);
+        assert_eq!(tu.nonzeros(), 1000);
+    }
+
+    #[test]
+    fn per_tensor_granularity_one_update_per_tensor() {
+        let layout = TensorLayout::new(vec![("a".into(), vec![1000]), ("b".into(), vec![500])]);
+        let x = heavy(1500, 9);
+        let mut p = MethodConfig::sbc(0.02, 1).build(0);
+        let msg = p.compress(&x, &layout, 3);
+        assert_eq!(msg.tensors.len(), 2);
+        assert_eq!(msg.round, 3);
+        for t in &msg.tensors {
+            assert!(matches!(t, TensorUpdate::SparseBinary { .. }));
+        }
+    }
+
+    #[test]
+    fn compress_into_reuses_slots_across_rounds() {
+        let layout = TensorLayout::new(vec![("a".into(), vec![64]), ("b".into(), vec![32])]);
+        let x = heavy(96, 2);
+        let mut p = MethodConfig::sbc(0.1, 1).build(0);
+        let mut msg = UpdateMsg::scratch();
+        p.compress_into(&x, &layout, 0, &mut msg);
+        let first = msg.clone();
+        // second round over the same input must produce identical output
+        // through the reused buffers
+        p.compress_into(&x, &layout, 1, &mut msg);
+        assert_eq!(msg.tensors, first.tensors);
+        assert_eq!(msg.round, 1);
+    }
+
+    #[test]
+    fn onebit_pipeline_means_partition() {
+        let x = vec![1.0f32, 3.0, -2.0, -4.0];
+        let layout = TensorLayout::flat(4);
+        let mut p = MethodConfig::onebit().with_granularity(Granularity::Global).build(0);
+        let dense = p.compress(&x, &layout, 0).to_dense(&layout, 1.0);
+        assert_eq!(dense, vec![2.0, 2.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn signsgd_pipeline_scale_applied_on_densify() {
+        let x = vec![0.5f32, -0.1, 0.0, -7.0];
+        let layout = TensorLayout::flat(4);
+        let cfg = MethodConfig::signsgd(0.01);
+        let mut p = cfg.build(0);
+        let msg = p.compress(&x, &layout, 0);
+        let dense = msg.to_dense(&layout, cfg.sign_scale());
+        assert_eq!(dense, vec![0.01, -0.01, 0.01, -0.01]);
+    }
+
+    #[test]
+    fn broadcast_sparse_vs_dense_choice() {
+        let mut sparse_delta = vec![0.0f32; 1000];
+        sparse_delta[3] = 1.5;
+        sparse_delta[700] = -2.5;
+        let mut out = UpdateMsg::scratch();
+        compress_broadcast_into(&sparse_delta, 5, &mut out);
+        assert_eq!(out.round, 5);
+        match &out.tensors[0] {
+            TensorUpdate::SparseF32 { idx, val } => {
+                assert_eq!(idx, &vec![3, 700]);
+                assert_eq!(val, &vec![1.5, -2.5]);
+            }
+            other => panic!("{other:?}"),
+        }
+        let dense_delta = vec![1.0f32; 1000];
+        compress_broadcast_into(&dense_delta, 6, &mut out);
+        assert!(matches!(&out.tensors[0], TensorUpdate::Dense(v) if v.len() == 1000));
+    }
+}

@@ -1,0 +1,382 @@
+//! Quantizer stage: what value representation the selected coordinates
+//! are transmitted with.
+//!
+//! Each quantizer writes one [`TensorUpdate`] per segment, *reusing* the
+//! output slot's buffers (the slot keeps its allocation when the variant
+//! matches from the previous round), so the compress hot path performs no
+//! steady-state heap allocation.
+//!
+//! The paper's methods map to:
+//! * [`QuantizerCfg::F32`] — full precision (Baseline, FedAvg, GradDrop);
+//! * [`QuantizerCfg::BinaryMean`] — paper Alg. 2 lines 2-6: average each
+//!   sign's candidates, keep the stronger side, binarize to its mean;
+//! * [`QuantizerCfg::Sign`] — signSGD (scale applied at densify time);
+//! * [`QuantizerCfg::Ternary`] — TernGrad stochastic ternarization;
+//! * [`QuantizerCfg::Qsgd`] — QSGD stochastic uniform quantization;
+//! * [`QuantizerCfg::SignMeans`] — 1-bit SGD (signs + per-side means).
+
+use crate::compression::select::Support;
+use crate::compression::TensorUpdate;
+use crate::util::rng::Rng;
+use crate::util::tensor;
+
+/// Quantizer configuration — the build-time description of the stage.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QuantizerCfg {
+    /// Transmit selected values in full precision.
+    F32,
+    /// One mean for the winning sign side (SBC).
+    BinaryMean,
+    /// One bit per element; `scale` is applied when densifying.
+    Sign { scale: f32 },
+    /// Stochastic {-s, 0, +s} with s = max |x| (TernGrad).
+    Ternary,
+    /// Stochastic uniform levels with per-segment L2 scale (QSGD).
+    Qsgd { levels: u8 },
+    /// One bit per element plus per-side means (1-bit SGD).
+    SignMeans,
+}
+
+/// The stateful quantizer stage (owns the RNG for stochastic methods).
+pub struct Quantizer {
+    cfg: QuantizerCfg,
+    rng: Rng,
+}
+
+impl Quantizer {
+    pub fn new(cfg: QuantizerCfg, seed: u64) -> Quantizer {
+        if let QuantizerCfg::Qsgd { levels } = cfg {
+            // levels ride in an i8 on the wire; 128 would wrap to -128
+            // and negate with overflow for negative inputs
+            assert!((1..=127).contains(&levels), "QSGD levels must be in 1..=127");
+        }
+        Quantizer { cfg, rng: Rng::new(seed) }
+    }
+
+    pub fn cfg(&self) -> QuantizerCfg {
+        self.cfg
+    }
+
+    /// Quantize segment `x` with the selector's support into `out`,
+    /// reusing `out`'s buffers where the variant matches.
+    pub fn quantize(&mut self, x: &[f32], support: Support, idx: &[u32], out: &mut TensorUpdate) {
+        match (self.cfg, support) {
+            (QuantizerCfg::F32, Support::All) => {
+                let v = out.dense_slot();
+                v.extend_from_slice(x);
+            }
+            (QuantizerCfg::F32, Support::Sparse) => {
+                let (oi, ov) = out.sparse_f32_slot();
+                oi.extend_from_slice(idx);
+                ov.extend(idx.iter().map(|&i| x[i as usize]));
+            }
+            (QuantizerCfg::BinaryMean, _) => binary_mean(x, support, idx, out),
+            (QuantizerCfg::Sign { .. }, Support::All) => {
+                let signs = out.sign_slot();
+                signs.extend(x.iter().map(|&v| v >= 0.0));
+            }
+            (QuantizerCfg::Ternary, Support::All) => self.ternary(x, out),
+            (QuantizerCfg::Qsgd { levels }, Support::All) => self.qsgd(x, levels, out),
+            (QuantizerCfg::SignMeans, Support::All) => sign_means(x, out),
+            (cfg, Support::Sparse) => {
+                panic!("{cfg:?} is a dense quantizer; pair it with SelectorCfg::Dense")
+            }
+        }
+    }
+
+    /// TernGrad (Wen et al.): each coordinate becomes s·sign(x) with
+    /// probability |x|/s (s = max |x| per segment), else 0. Unbiased.
+    fn ternary(&mut self, x: &[f32], out: &mut TensorUpdate) {
+        let (scale, vals) = out.ternary_slot();
+        let s = tensor::abs_max(x);
+        *scale = s;
+        if s == 0.0 {
+            vals.resize(x.len(), 0);
+            return;
+        }
+        vals.extend(x.iter().map(|&v| {
+            let p = (v.abs() / s) as f64;
+            if self.rng.next_f64() < p {
+                if v >= 0.0 {
+                    1i8
+                } else {
+                    -1
+                }
+            } else {
+                0
+            }
+        }));
+    }
+
+    /// QSGD (Alistarh et al.): stochastic uniform quantization to
+    /// `levels` levels with per-segment L2 scale. Unbiased.
+    fn qsgd(&mut self, x: &[f32], levels: u8, out: &mut TensorUpdate) {
+        let (scale, lv, vals) = out.quantized_slot();
+        *lv = levels;
+        let norm = tensor::l2_norm(x);
+        *scale = norm;
+        if norm == 0.0 {
+            vals.resize(x.len(), 0);
+            return;
+        }
+        let s = levels as f32;
+        vals.extend(x.iter().map(|&v| {
+            let r = v.abs() / norm * s; // in [0, s]
+            let lo = r.floor();
+            let level = lo as i32 + if self.rng.next_f32() < r - lo { 1 } else { 0 };
+            let level = level.clamp(0, s as i32) as i8;
+            if v < 0.0 {
+                -level
+            } else {
+                level
+            }
+        }));
+    }
+}
+
+/// SBC binarization (paper Alg. 2 lines 2-6): partition the candidate set
+/// by sign, average each side, keep the stronger side at its mean. Ties
+/// resolve to the positive side (matches the kernel's `mupos >= muneg`).
+fn binary_mean(x: &[f32], support: Support, idx: &[u32], out: &mut TensorUpdate) {
+    let (oi, mu, side_pos) = out.sparse_binary_slot();
+    let (mut sp, mut np, mut sn, mut nn) = (0.0f64, 0usize, 0.0f64, 0usize);
+    let mut each = |v: f32| {
+        if v > 0.0 {
+            sp += v as f64;
+            np += 1;
+        } else if v < 0.0 {
+            sn += v as f64;
+            nn += 1;
+        }
+    };
+    match support {
+        Support::All => {
+            for &v in x {
+                each(v);
+            }
+        }
+        Support::Sparse => {
+            for &i in idx {
+                each(x[i as usize]);
+            }
+        }
+    }
+    let mu_pos = if np > 0 { (sp / np as f64) as f32 } else { 0.0 };
+    let mu_neg = if nn > 0 { (-sn / nn as f64) as f32 } else { 0.0 };
+    let pos = mu_pos >= mu_neg;
+    *mu = if pos { mu_pos } else { mu_neg };
+    *side_pos = pos;
+    let keep = |v: f32| if pos { v > 0.0 } else { v < 0.0 };
+    match support {
+        Support::All => {
+            oi.extend(x.iter().enumerate().filter(|(_, &v)| keep(v)).map(|(i, _)| i as u32))
+        }
+        Support::Sparse => oi.extend(idx.iter().copied().filter(|&i| keep(x[i as usize]))),
+    }
+}
+
+/// 1-bit SGD (Seide et al.): positive entries map to the positive mean,
+/// negative to the negative mean; the quantization error goes to the
+/// residual (this quantizer's defining feature is error feedback).
+fn sign_means(x: &[f32], out: &mut TensorUpdate) {
+    let (signs, mu_pos, mu_neg) = out.sign_means_slot();
+    let (mut sp, mut np, mut sn, mut nn) = (0.0f64, 0u32, 0.0f64, 0u32);
+    for &v in x {
+        if v >= 0.0 {
+            sp += v as f64;
+            np += 1;
+        } else {
+            sn += v as f64;
+            nn += 1;
+        }
+    }
+    *mu_pos = if np > 0 { (sp / np as f64) as f32 } else { 0.0 };
+    *mu_neg = if nn > 0 { (sn / nn as f64) as f32 } else { 0.0 };
+    signs.extend(x.iter().map(|&v| v >= 0.0));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TensorLayout;
+    use crate::compression::UpdateMsg;
+
+    fn quantize_fresh(q: &mut Quantizer, x: &[f32], support: Support, idx: &[u32]) -> TensorUpdate {
+        let mut out = TensorUpdate::placeholder();
+        q.quantize(x, support, idx, &mut out);
+        out
+    }
+
+    #[test]
+    fn f32_dense_and_sparse() {
+        let x = [1.0f32, -2.0, 3.5];
+        let mut q = Quantizer::new(QuantizerCfg::F32, 0);
+        assert_eq!(
+            quantize_fresh(&mut q, &x, Support::All, &[]),
+            TensorUpdate::Dense(vec![1.0, -2.0, 3.5])
+        );
+        assert_eq!(
+            quantize_fresh(&mut q, &x, Support::Sparse, &[0, 2]),
+            TensorUpdate::SparseF32 { idx: vec![0, 2], val: vec![1.0, 3.5] }
+        );
+    }
+
+    #[test]
+    fn binary_mean_positive_side() {
+        // candidates: top-2 per side of a positives-dominated segment
+        let x = vec![5.0f32, 4.0, -0.1, -0.2, 0.0, 3.0, -0.3, 0.05];
+        let mut q = Quantizer::new(QuantizerCfg::BinaryMean, 0);
+        match quantize_fresh(&mut q, &x, Support::Sparse, &[0, 1, 3, 6]) {
+            TensorUpdate::SparseBinary { idx, mu, side_pos } => {
+                assert!(side_pos);
+                assert_eq!(idx, vec![0, 1]);
+                assert!((mu - 4.5).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn binary_mean_negative_side() {
+        let x = vec![0.1f32, -5.0, 0.2, -4.0, 0.0, -3.0, 0.3, 0.05];
+        let mut q = Quantizer::new(QuantizerCfg::BinaryMean, 0);
+        match quantize_fresh(&mut q, &x, Support::Sparse, &[1, 2, 3, 6]) {
+            TensorUpdate::SparseBinary { idx, mu, side_pos } => {
+                assert!(!side_pos);
+                assert_eq!(idx, vec![1, 3]);
+                assert!((mu - 4.5).abs() < 1e-6);
+                let mut out = vec![0.0f32; 8];
+                TensorUpdate::SparseBinary { idx, mu, side_pos }.add_into(&mut out, 1.0);
+                assert_eq!(out[1], -4.5);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn binary_mean_empty_candidates() {
+        let x = vec![0.0f32; 16];
+        let mut q = Quantizer::new(QuantizerCfg::BinaryMean, 0);
+        match quantize_fresh(&mut q, &x, Support::Sparse, &[]) {
+            TensorUpdate::SparseBinary { idx, mu, .. } => {
+                assert!(idx.is_empty());
+                assert_eq!(mu, 0.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn signs_match_signsgd() {
+        let x = vec![0.5f32, -0.1, 0.0, -7.0];
+        let mut q = Quantizer::new(QuantizerCfg::Sign { scale: 0.01 }, 0);
+        match quantize_fresh(&mut q, &x, Support::All, &[]) {
+            TensorUpdate::Sign { signs } => assert_eq!(signs, vec![true, false, true, false]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn ternary_unbiased_in_expectation() {
+        let x = vec![0.5f32, -0.25, 0.0, 1.0];
+        let layout = TensorLayout::flat(4);
+        let mut q = Quantizer::new(QuantizerCfg::Ternary, 3);
+        let trials = 4000;
+        let mut sum = vec![0.0f64; 4];
+        for _ in 0..trials {
+            let tu = quantize_fresh(&mut q, &x, Support::All, &[]);
+            let dense = UpdateMsg { round: 0, tensors: vec![tu] }.to_dense(&layout, 1.0);
+            for i in 0..4 {
+                sum[i] += dense[i] as f64;
+            }
+        }
+        for i in 0..4 {
+            let mean = sum[i] / trials as f64;
+            assert!((mean - x[i] as f64).abs() < 0.05, "i={i}: {mean} vs {}", x[i]);
+        }
+    }
+
+    #[test]
+    fn ternary_max_element_always_kept_and_zero_segment() {
+        let mut q = Quantizer::new(QuantizerCfg::Ternary, 4);
+        match quantize_fresh(&mut q, &[0.1, -2.0, 0.3], Support::All, &[]) {
+            TensorUpdate::Ternary { scale, vals } => {
+                assert_eq!(scale, 2.0);
+                assert_eq!(vals[1], -1); // p = 1 for the absmax element
+            }
+            other => panic!("{other:?}"),
+        }
+        match quantize_fresh(&mut q, &[0.0; 10], Support::All, &[]) {
+            TensorUpdate::Ternary { scale, vals } => {
+                assert_eq!(scale, 0.0);
+                assert!(vals.iter().all(|&v| v == 0));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn qsgd_unbiased_in_expectation() {
+        let x = vec![0.3f32, -0.4, 0.0, 0.866];
+        let layout = TensorLayout::flat(4);
+        let mut q = Quantizer::new(QuantizerCfg::Qsgd { levels: 4 }, 7);
+        let trials = 4000;
+        let mut sum = vec![0.0f64; 4];
+        for _ in 0..trials {
+            let tu = quantize_fresh(&mut q, &x, Support::All, &[]);
+            let dense = UpdateMsg { round: 0, tensors: vec![tu] }.to_dense(&layout, 1.0);
+            for i in 0..4 {
+                sum[i] += dense[i] as f64;
+            }
+        }
+        for i in 0..4 {
+            let mean = sum[i] / trials as f64;
+            assert!((mean - x[i] as f64).abs() < 0.05, "i={i}: {mean} vs {}", x[i]);
+        }
+    }
+
+    #[test]
+    fn qsgd_levels_bounded() {
+        let mut rng = Rng::new(8);
+        let x: Vec<f32> = (0..1000).map(|_| rng.normal()).collect();
+        let mut q = Quantizer::new(QuantizerCfg::Qsgd { levels: 8 }, 9);
+        match quantize_fresh(&mut q, &x, Support::All, &[]) {
+            TensorUpdate::Quantized { levels, vals, .. } => {
+                assert!(vals.iter().all(|&v| v.unsigned_abs() <= levels));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sign_means_partition() {
+        let x = vec![1.0f32, 3.0, -2.0, -4.0];
+        let mut q = Quantizer::new(QuantizerCfg::SignMeans, 0);
+        match quantize_fresh(&mut q, &x, Support::All, &[]) {
+            TensorUpdate::SignMeans { signs, mu_pos, mu_neg } => {
+                assert_eq!(signs, vec![true, true, false, false]);
+                assert_eq!(mu_pos, 2.0);
+                assert_eq!(mu_neg, -3.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn slots_reuse_matching_variant() {
+        let mut out = TensorUpdate::SparseF32 { idx: vec![1, 2, 3], val: vec![0.5; 3] };
+        let mut q = Quantizer::new(QuantizerCfg::F32, 0);
+        q.quantize(&[7.0, 8.0], Support::Sparse, &[1], &mut out);
+        assert_eq!(out, TensorUpdate::SparseF32 { idx: vec![1], val: vec![8.0] });
+        // variant switch replaces the slot
+        q.quantize(&[7.0, 8.0], Support::All, &[], &mut out);
+        assert_eq!(out, TensorUpdate::Dense(vec![7.0, 8.0]));
+    }
+
+    #[test]
+    #[should_panic(expected = "dense quantizer")]
+    fn dense_quantizer_rejects_sparse_support() {
+        let mut q = Quantizer::new(QuantizerCfg::Ternary, 0);
+        quantize_fresh(&mut q, &[1.0], Support::Sparse, &[0]);
+    }
+}

@@ -1,152 +1,255 @@
-//! Method registry: configuration → boxed compressor + coordinator knobs.
+//! Method registry: stage compositions → pipelines + coordinator knobs.
 //!
-//! A [`MethodConfig`] fully describes one compression scheme including the
-//! coordinator-level settings (communication delay, residual, momentum
-//! masking); the paper's named configurations (Table II columns) are
-//! provided as constructors.
+//! A [`MethodConfig`] names one compression scheme as an explicit
+//! Select → Quantize composition plus the coordinator-level settings
+//! (communication delay, residual, momentum masking). The paper's named
+//! configurations (Table II columns) are presets; arbitrary compositions
+//! are assembled with the fluent [`MethodConfig::builder`]. Building the
+//! runtime [`Pipeline`] happens exactly once per client —
+//! [`MethodConfig::build`] passes granularity and seeds into the stage
+//! constructors and never mutates a constructed stage.
 
-use crate::compression::fedavg::DenseCompressor;
-use crate::compression::gradient_dropping::GradientDropping;
-use crate::compression::onebit::OneBitSgd;
-use crate::compression::qsgd::Qsgd;
-use crate::compression::sbc::{SbcCompressor, Selection};
-use crate::compression::signsgd::SignSgd;
-use crate::compression::terngrad::TernGrad;
-use crate::compression::{Compressor, Granularity};
+use crate::compression::pipeline::Pipeline;
+use crate::compression::quantize::{Quantizer, QuantizerCfg};
+use crate::compression::select::{Selection, Selector, SelectorCfg};
+use crate::compression::Granularity;
 
+/// Full per-run compression configuration: the stage composition plus
+/// coordinator knobs.
 #[derive(Clone, Debug, PartialEq)]
-pub enum Method {
-    /// Dense every round (DSGD baseline when delay = 1).
-    Baseline,
-    /// Dense with communication delay (McMahan et al.).
-    FedAvg,
-    /// Top-p sparsification, f32 values (Aji & Heafield / Lin et al.).
-    GradientDropping { p: f64 },
-    /// Sparse Binary Compression (this paper).
-    Sbc { p: f64, selection: SelectionCfg },
-    SignSgd { scale: f32 },
-    TernGrad,
-    Qsgd { levels: u8 },
-    OneBit,
-}
-
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SelectionCfg {
-    Exact,
-    Sampled(usize),
-    Hist,
-}
-
-impl From<SelectionCfg> for Selection {
-    fn from(c: SelectionCfg) -> Selection {
-        match c {
-            SelectionCfg::Exact => Selection::Exact,
-            SelectionCfg::Sampled(s) => Selection::Sampled(s),
-            SelectionCfg::Hist => Selection::Hist,
-        }
-    }
-}
-
-/// Full per-run compression configuration.
-#[derive(Clone, Debug)]
 pub struct MethodConfig {
-    pub method: Method,
+    /// Which coordinates survive (stage 1).
+    pub selector: SelectorCfg,
+    /// How surviving values are represented (stage 2).
+    pub quantizer: QuantizerCfg,
+    /// Per-tensor (paper default: one μ per tensor) or whole-vector.
+    pub granularity: Granularity,
     /// Local iterations per communication round (n in the paper; 1 = DSGD).
     pub delay: usize,
     /// Momentum factor masking (Lin et al.), applied by the coordinator.
     pub momentum_masking: bool,
-    /// Error feedback on/off (ablation; methods have sane defaults).
+    /// Error feedback override (ablation; `None` = method default).
     pub residual: Option<bool>,
-    pub granularity: Granularity,
+}
+
+/// Fluent builder for arbitrary stage compositions.
+#[derive(Clone, Debug)]
+pub struct MethodBuilder {
+    cfg: MethodConfig,
+}
+
+impl MethodBuilder {
+    pub fn select(mut self, selector: SelectorCfg) -> Self {
+        self.cfg.selector = selector;
+        self
+    }
+
+    pub fn quantize(mut self, quantizer: QuantizerCfg) -> Self {
+        self.cfg.quantizer = quantizer;
+        self
+    }
+
+    pub fn granularity(mut self, granularity: Granularity) -> Self {
+        self.cfg.granularity = granularity;
+        self
+    }
+
+    pub fn delay(mut self, delay: usize) -> Self {
+        self.cfg.delay = delay.max(1);
+        self
+    }
+
+    pub fn momentum_masking(mut self, on: bool) -> Self {
+        self.cfg.momentum_masking = on;
+        self
+    }
+
+    pub fn residual(mut self, on: bool) -> Self {
+        self.cfg.residual = Some(on);
+        self
+    }
+
+    /// Validate the composition and produce the config. Panics on
+    /// stage pairings with no defined wire semantics (dense quantizers
+    /// over a sparse support).
+    pub fn build(self) -> MethodConfig {
+        let cfg = self.cfg;
+        let dense_sel = matches!(cfg.selector, SelectorCfg::Dense);
+        match cfg.quantizer {
+            QuantizerCfg::Sign { .. } | QuantizerCfg::Ternary | QuantizerCfg::Qsgd { .. }
+            | QuantizerCfg::SignMeans => {
+                assert!(
+                    dense_sel,
+                    "{:?} is a dense quantizer; pair it with SelectorCfg::Dense",
+                    cfg.quantizer
+                );
+            }
+            QuantizerCfg::BinaryMean => {
+                assert!(
+                    !dense_sel,
+                    "BinaryMean needs a sparse selector (TwoSided for paper-faithful SBC)"
+                );
+            }
+            QuantizerCfg::F32 => {}
+        }
+        cfg
+    }
 }
 
 impl MethodConfig {
+    /// Start a builder: dense f32, per-tensor, delay 1 (the baseline).
+    pub fn builder() -> MethodBuilder {
+        MethodBuilder {
+            cfg: MethodConfig {
+                selector: SelectorCfg::Dense,
+                quantizer: QuantizerCfg::F32,
+                granularity: Granularity::PerTensor,
+                delay: 1,
+                momentum_masking: false,
+                residual: None,
+            },
+        }
+    }
+
+    // --- paper presets (Table I / Table II columns) ---------------------
+
+    /// Dense every round (DSGD baseline).
     pub fn baseline() -> Self {
-        Self::of(Method::Baseline, 1)
+        Self::builder().build()
+    }
+
+    /// Federated Averaging at delay n (McMahan et al.).
+    pub fn fedavg(n: usize) -> Self {
+        Self::builder().delay(n).build()
+    }
+
+    /// Gradient Dropping at the paper's p = 0.1% (Aji & Heafield), with
+    /// DGC momentum masking (Lin et al.).
+    pub fn gradient_dropping() -> Self {
+        Self::builder()
+            .select(SelectorCfg::TopK { p: 0.001, strategy: Selection::Exact })
+            .momentum_masking(true)
+            .build()
+    }
+
+    /// Sparse Binary Compression at sparsity `p` and delay `n`.
+    pub fn sbc(p: f64, delay: usize) -> Self {
+        Self::builder()
+            .select(SelectorCfg::TwoSided { p, strategy: Selection::Exact })
+            .quantize(QuantizerCfg::BinaryMean)
+            .delay(delay)
+            .build()
     }
 
     /// SBC (1): no delay, 0.1% gradient sparsity (paper §IV-B).
     pub fn sbc1() -> Self {
-        Self::of(Method::Sbc { p: 0.001, selection: SelectionCfg::Exact }, 1)
+        Self::sbc(0.001, 1)
     }
 
     /// SBC (2): delay 10, 1% sparsity.
     pub fn sbc2() -> Self {
-        Self::of(Method::Sbc { p: 0.01, selection: SelectionCfg::Exact }, 10)
+        Self::sbc(0.01, 10)
     }
 
     /// SBC (3): delay 100, 1% sparsity.
     pub fn sbc3() -> Self {
-        Self::of(Method::Sbc { p: 0.01, selection: SelectionCfg::Exact }, 100)
+        Self::sbc(0.01, 100)
     }
 
-    /// Gradient Dropping at the paper's p = 0.1%.
-    pub fn gradient_dropping() -> Self {
-        let mut c = Self::of(Method::GradientDropping { p: 0.001 }, 1);
-        c.momentum_masking = true;
-        c
+    /// signSGD (Bernstein et al.); `scale` is the server step size
+    /// applied per sign on densify.
+    pub fn signsgd(scale: f32) -> Self {
+        Self::builder()
+            .quantize(QuantizerCfg::Sign { scale })
+            .granularity(Granularity::Global)
+            .build()
     }
 
-    /// Federated Averaging at delay n.
-    pub fn fedavg(n: usize) -> Self {
-        Self::of(Method::FedAvg, n)
+    /// TernGrad (Wen et al.).
+    pub fn terngrad() -> Self {
+        Self::builder().quantize(QuantizerCfg::Ternary).build()
     }
 
-    pub fn of(method: Method, delay: usize) -> Self {
-        MethodConfig {
-            method,
-            delay: delay.max(1),
-            momentum_masking: false,
-            residual: None,
-            granularity: Granularity::PerTensor,
-        }
+    /// QSGD (Alistarh et al.) with `levels` quantization levels.
+    pub fn qsgd(levels: u8) -> Self {
+        Self::builder().quantize(QuantizerCfg::Qsgd { levels }).build()
     }
 
-    /// Human-readable label for tables.
+    /// 1-bit SGD (Seide et al.).
+    pub fn onebit() -> Self {
+        Self::builder().quantize(QuantizerCfg::SignMeans).build()
+    }
+
+    /// Chainable granularity override.
+    pub fn with_granularity(mut self, granularity: Granularity) -> Self {
+        self.granularity = granularity;
+        self
+    }
+
+    // --- derived properties --------------------------------------------
+
+    /// Human-readable label for tables, derived from the composition.
     pub fn label(&self) -> String {
-        match &self.method {
-            Method::Baseline => "Baseline".into(),
-            Method::FedAvg => format!("FedAvg(n={})", self.delay),
-            Method::GradientDropping { p } => format!("GradDrop(p={p})"),
-            Method::Sbc { p, .. } => format!("SBC(p={p},n={})", self.delay),
-            Method::SignSgd { .. } => "signSGD".into(),
-            Method::TernGrad => "TernGrad".into(),
-            Method::Qsgd { levels } => format!("QSGD({levels})"),
-            Method::OneBit => "1bitSGD".into(),
+        match (self.selector, self.quantizer) {
+            (SelectorCfg::Dense, QuantizerCfg::F32) => {
+                if self.delay > 1 {
+                    format!("FedAvg(n={})", self.delay)
+                } else {
+                    "Baseline".into()
+                }
+            }
+            (SelectorCfg::TopK { p, .. }, QuantizerCfg::F32) => format!("GradDrop(p={p})"),
+            (SelectorCfg::TwoSided { p, .. }, QuantizerCfg::BinaryMean)
+            | (SelectorCfg::TopK { p, .. }, QuantizerCfg::BinaryMean) => {
+                format!("SBC(p={p},n={})", self.delay)
+            }
+            (SelectorCfg::Dense, QuantizerCfg::Sign { .. }) => "signSGD".into(),
+            (SelectorCfg::Dense, QuantizerCfg::Ternary) => "TernGrad".into(),
+            (SelectorCfg::Dense, QuantizerCfg::Qsgd { levels }) => format!("QSGD({levels})"),
+            (SelectorCfg::Dense, QuantizerCfg::SignMeans) => "1bitSGD".into(),
+            (sel, q) => format!("{sel:?}+{q:?}(n={})", self.delay),
         }
     }
 
-    /// Instantiate the compressor (seeded for stochastic methods).
-    pub fn build(&self, seed: u64) -> Box<dyn Compressor> {
-        let g = self.granularity;
-        match &self.method {
-            Method::Baseline | Method::FedAvg => Box::new(DenseCompressor { granularity: g }),
-            Method::GradientDropping { p } => Box::new(GradientDropping::new(*p, g)),
-            Method::Sbc { p, selection } => {
-                Box::new(SbcCompressor::new(*p, g, (*selection).into(), seed))
-            }
-            Method::SignSgd { scale } => Box::new(SignSgd::new(*scale)),
-            Method::TernGrad => {
-                let mut t = TernGrad::new(seed);
-                t.granularity = g;
-                Box::new(t)
-            }
-            Method::Qsgd { levels } => {
-                let mut q = Qsgd::new(*levels, seed);
-                q.granularity = g;
-                Box::new(q)
-            }
-            Method::OneBit => {
-                let mut o = OneBitSgd::new();
-                o.granularity = g;
-                Box::new(o)
-            }
+    /// Instantiate the pipeline (seeded for stochastic stages). Stage
+    /// construction is final: granularity and strategy are constructor
+    /// arguments, never post-construction mutation.
+    pub fn build(&self, seed: u64) -> Pipeline {
+        Pipeline::new(
+            Selector::new(self.selector, seed),
+            Quantizer::new(self.quantizer, seed),
+            self.granularity,
+        )
+    }
+
+    /// Whether this method uses residual accumulation (error feedback),
+    /// resolving the ablation override against the composition default:
+    /// sparse selectors and 1-bit SGD correct their error; dense unbiased
+    /// quantizers do not.
+    pub fn use_residual(&self) -> bool {
+        let default = match (self.selector, self.quantizer) {
+            (SelectorCfg::TopK { .. } | SelectorCfg::TwoSided { .. }, _) => true,
+            (SelectorCfg::Dense, QuantizerCfg::SignMeans) => true,
+            (SelectorCfg::Dense, _) => false,
+        };
+        self.residual.unwrap_or(default)
+    }
+
+    /// Scale applied when densifying `Sign` updates (signSGD semantics).
+    pub fn sign_scale(&self) -> f32 {
+        match self.quantizer {
+            QuantizerCfg::Sign { scale } => scale,
+            _ => 1.0,
         }
     }
 
-    /// Residual on/off, resolving the ablation override.
-    pub fn use_residual(&self, compressor_default: bool) -> bool {
-        self.residual.unwrap_or(compressor_default)
+    /// The SBC sparsity, when this config is an SBC composition (used to
+    /// route through the AOT Pallas compress graph).
+    pub fn sbc_p(&self) -> Option<f64> {
+        match (self.selector, self.quantizer) {
+            (SelectorCfg::TwoSided { p, .. }, QuantizerCfg::BinaryMean) => Some(p),
+            _ => None,
+        }
     }
 }
 
@@ -159,36 +262,94 @@ mod tests {
         assert_eq!(MethodConfig::sbc1().delay, 1);
         assert_eq!(MethodConfig::sbc2().delay, 10);
         assert_eq!(MethodConfig::sbc3().delay, 100);
-        match MethodConfig::sbc1().method {
-            Method::Sbc { p, .. } => assert_eq!(p, 0.001),
-            _ => panic!(),
-        }
+        assert_eq!(MethodConfig::sbc1().sbc_p(), Some(0.001));
+        assert_eq!(MethodConfig::sbc2().sbc_p(), Some(0.01));
         assert!(MethodConfig::gradient_dropping().momentum_masking);
+        assert!(matches!(
+            MethodConfig::gradient_dropping().selector,
+            SelectorCfg::TopK { p, strategy: Selection::Exact } if p == 0.001
+        ));
     }
 
     #[test]
-    fn build_all() {
+    fn build_all_paper_methods() {
         for cfg in [
             MethodConfig::baseline(),
             MethodConfig::fedavg(100),
             MethodConfig::gradient_dropping(),
             MethodConfig::sbc1(),
-            MethodConfig::of(Method::SignSgd { scale: 0.01 }, 1),
-            MethodConfig::of(Method::TernGrad, 1),
-            MethodConfig::of(Method::Qsgd { levels: 4 }, 1),
-            MethodConfig::of(Method::OneBit, 1),
+            MethodConfig::signsgd(0.01),
+            MethodConfig::terngrad(),
+            MethodConfig::qsgd(4),
+            MethodConfig::onebit(),
         ] {
-            let c = cfg.build(0);
-            assert!(!c.name().is_empty());
+            let p = cfg.build(0);
+            assert!(!p.name().is_empty());
             assert!(!cfg.label().is_empty());
+            assert_eq!(p.granularity(), cfg.granularity);
         }
     }
 
     #[test]
-    fn residual_override() {
+    fn labels_are_stable() {
+        assert_eq!(MethodConfig::baseline().label(), "Baseline");
+        assert_eq!(MethodConfig::fedavg(100).label(), "FedAvg(n=100)");
+        assert_eq!(MethodConfig::gradient_dropping().label(), "GradDrop(p=0.001)");
+        assert_eq!(MethodConfig::sbc2().label(), "SBC(p=0.01,n=10)");
+        assert_eq!(MethodConfig::signsgd(1e-3).label(), "signSGD");
+        assert_eq!(MethodConfig::terngrad().label(), "TernGrad");
+        assert_eq!(MethodConfig::qsgd(4).label(), "QSGD(4)");
+        assert_eq!(MethodConfig::onebit().label(), "1bitSGD");
+    }
+
+    #[test]
+    fn residual_defaults_and_override() {
+        assert!(MethodConfig::sbc1().use_residual());
+        assert!(MethodConfig::gradient_dropping().use_residual());
+        assert!(MethodConfig::onebit().use_residual());
+        assert!(!MethodConfig::baseline().use_residual());
+        assert!(!MethodConfig::signsgd(0.01).use_residual());
+        assert!(!MethodConfig::terngrad().use_residual());
+        assert!(!MethodConfig::qsgd(4).use_residual());
         let mut cfg = MethodConfig::sbc1();
-        assert!(cfg.use_residual(true));
         cfg.residual = Some(false);
-        assert!(!cfg.use_residual(true));
+        assert!(!cfg.use_residual());
+    }
+
+    #[test]
+    fn builder_composes_novel_methods() {
+        // top-p selection with QSGD-style values is NOT a paper method —
+        // the builder rejects undefined pairings but accepts sparse+f32
+        let cfg = MethodConfig::builder()
+            .select(SelectorCfg::TopK { p: 0.01, strategy: Selection::Hist })
+            .quantize(QuantizerCfg::F32)
+            .delay(5)
+            .build();
+        assert_eq!(cfg.delay, 5);
+        assert!(cfg.use_residual());
+        assert!(!cfg.label().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "dense quantizer")]
+    fn builder_rejects_sparse_ternary() {
+        MethodConfig::builder()
+            .select(SelectorCfg::TopK { p: 0.01, strategy: Selection::Exact })
+            .quantize(QuantizerCfg::Ternary)
+            .build();
+    }
+
+    #[test]
+    #[should_panic(expected = "sparse selector")]
+    fn builder_rejects_dense_binary_mean() {
+        MethodConfig::builder().quantize(QuantizerCfg::BinaryMean).build();
+    }
+
+    #[test]
+    fn sign_scale_and_sbc_p() {
+        assert_eq!(MethodConfig::signsgd(0.5).sign_scale(), 0.5);
+        assert_eq!(MethodConfig::baseline().sign_scale(), 1.0);
+        assert_eq!(MethodConfig::baseline().sbc_p(), None);
+        assert_eq!(MethodConfig::sbc(0.02, 7).sbc_p(), Some(0.02));
     }
 }

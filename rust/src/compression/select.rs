@@ -1,0 +1,357 @@
+//! Selector stage: which coordinates of a segment survive compression.
+//!
+//! Three selectors cover the paper's method space:
+//! * [`SelectorCfg::Dense`] — everything survives (baseline, FedAvg, and
+//!   every dense quantizer);
+//! * [`SelectorCfg::TopK`] — the fraction-`p` largest-magnitude entries
+//!   (Gradient Dropping / DGC);
+//! * [`SelectorCfg::TwoSided`] — paper Alg. 2 line 1: the fraction-`p`
+//!   largest *positive* entries and the fraction-`p` most *negative*
+//!   entries, as one merged candidate set. The binary-mean quantizer
+//!   picks the winning side downstream.
+//!
+//! The threshold [`Selection`] strategy is pluggable: `Exact` quickselect,
+//! DGC-style `Sampled`, or `Hist` — the bit-exact mirror of the L1 Pallas
+//! kernel, used to cross-validate the PJRT compress path. The exact paths
+//! run on selector-owned scratch (magnitude copy + tie list), so
+//! steady-state selection performs no heap allocation.
+
+use crate::compression::topk::{self, hist_thresholds};
+use crate::util::rng::Rng;
+
+/// Threshold-estimation strategy for the sparse selectors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Selection {
+    Exact,
+    /// Threshold estimated from a subsample of this many elements.
+    Sampled(usize),
+    /// Bit-pattern histogram quantile (kernel mirror).
+    Hist,
+}
+
+/// Selector configuration — the build-time description of the stage.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SelectorCfg {
+    /// Keep every coordinate.
+    Dense,
+    /// Keep the fraction-`p` largest entries by |x|.
+    TopK { p: f64, strategy: Selection },
+    /// Keep the fraction-`p` largest positives and fraction-`p` most
+    /// negative entries (SBC Alg. 2).
+    TwoSided { p: f64, strategy: Selection },
+}
+
+/// What a selector produced for one segment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Support {
+    /// The whole segment; the index scratch is untouched.
+    All,
+    /// Only the indices written to the scratch (sorted, unique).
+    Sparse,
+}
+
+/// The stateful selector stage: owns the RNG for sampled thresholds and
+/// the quickselect scratch buffers.
+pub struct Selector {
+    cfg: SelectorCfg,
+    rng: Rng,
+    /// Reused magnitude copy for quickselect.
+    mags: Vec<f32>,
+    /// Reused tie-index list (threshold boundary fill).
+    ties: Vec<u32>,
+}
+
+impl Selector {
+    pub fn new(cfg: SelectorCfg, seed: u64) -> Selector {
+        Selector { cfg, rng: Rng::new(seed), mags: Vec::new(), ties: Vec::new() }
+    }
+
+    pub fn cfg(&self) -> SelectorCfg {
+        self.cfg
+    }
+
+    /// Select surviving positions of segment `x` into `idx` (cleared
+    /// first; left empty for [`Support::All`]).
+    pub fn select(&mut self, x: &[f32], idx: &mut Vec<u32>) -> Support {
+        idx.clear();
+        match self.cfg {
+            SelectorCfg::Dense => Support::All,
+            SelectorCfg::TopK { p, strategy } => {
+                let k = frac_k(p, x.len());
+                match strategy {
+                    Selection::Exact => self.topk_exact(x, k, idx),
+                    Selection::Sampled(sample) => {
+                        idx.extend(topk::topk_sampled(x, k, sample, &mut self.rng))
+                    }
+                    Selection::Hist => magnitude_hist(x, k as u32, idx),
+                }
+                Support::Sparse
+            }
+            SelectorCfg::TwoSided { p, strategy } => {
+                let k = frac_k(p, x.len());
+                match strategy {
+                    Selection::Exact => self.two_sided_exact(x, k, idx),
+                    Selection::Sampled(sample) => {
+                        // DGC-style: magnitude top-2k from a subsample,
+                        // zeros dropped (they belong to neither side)
+                        for i in topk::topk_sampled(x, 2 * k, sample, &mut self.rng) {
+                            if x[i as usize] != 0.0 {
+                                idx.push(i);
+                            }
+                        }
+                    }
+                    Selection::Hist => two_sided_hist(x, k as u32, idx),
+                }
+                Support::Sparse
+            }
+        }
+    }
+
+    /// Exact top-k by magnitude on reused scratch (same semantics as
+    /// [`topk::topk_exact`]).
+    fn topk_exact(&mut self, x: &[f32], k: usize, out: &mut Vec<u32>) {
+        let k = k.min(x.len());
+        if k == 0 {
+            return;
+        }
+        if k == x.len() {
+            out.extend(0..x.len() as u32);
+            return;
+        }
+        self.mags.clear();
+        self.mags.extend(x.iter().map(|v| v.abs()));
+        let kth = {
+            let (_, kth, _) =
+                self.mags.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+            *kth
+        };
+        self.ties.clear();
+        for (i, v) in x.iter().enumerate() {
+            let m = v.abs();
+            if m > kth {
+                out.push(i as u32);
+            } else if m == kth {
+                self.ties.push(i as u32);
+            }
+        }
+        for &t in &self.ties {
+            if out.len() >= k {
+                break;
+            }
+            out.push(t);
+        }
+        out.sort_unstable();
+    }
+
+    /// Exact per-side top-k: k largest positive values and k most
+    /// negative, merged into one sorted index list.
+    ///
+    /// Two-phase per side for speed: quickselect the k-th value on a
+    /// contiguous f32 copy (cache-friendly, no indirect compares), then
+    /// one scan collects the indices at/above the threshold.
+    fn two_sided_exact(&mut self, x: &[f32], k: usize, out: &mut Vec<u32>) {
+        for sign in [1.0f32, -1.0] {
+            let start = out.len();
+            self.mags.clear();
+            self.mags.extend(x.iter().filter_map(|&v| {
+                let s = sign * v;
+                if s > 0.0 {
+                    Some(s)
+                } else {
+                    None
+                }
+            }));
+            let k2 = k.min(self.mags.len());
+            if k2 == 0 {
+                continue;
+            }
+            let thr = if k2 < self.mags.len() {
+                let (_, kth, _) =
+                    self.mags.select_nth_unstable_by(k2 - 1, |a, b| b.partial_cmp(a).unwrap());
+                *kth
+            } else {
+                0.0 // keep every element of this side
+            };
+            self.ties.clear();
+            for (i, &v) in x.iter().enumerate() {
+                let s = sign * v;
+                if s > thr {
+                    out.push(i as u32);
+                } else if s == thr && s > 0.0 {
+                    self.ties.push(i as u32);
+                }
+            }
+            for &t in &self.ties {
+                if out.len() - start >= k2 {
+                    break;
+                }
+                out.push(t);
+            }
+        }
+        out.sort_unstable();
+    }
+}
+
+/// Per-side k for fractional sparsity `p` over a segment of `n` elements.
+fn frac_k(p: f64, n: usize) -> usize {
+    ((p * n as f64).round() as usize).max(1)
+}
+
+/// Histogram-threshold selection, both sides merged (mirrors the Pallas
+/// compress graph's threshold stage): at least k per side survive.
+fn two_sided_hist(x: &[f32], k: u32, out: &mut Vec<u32>) {
+    let (tp, tn, _am) = hist_thresholds(x, k);
+    for (i, &v) in x.iter().enumerate() {
+        if (v > 0.0 && v >= tp) || (v < 0.0 && -v >= tn) {
+            out.push(i as u32);
+        }
+    }
+}
+
+/// Histogram-threshold *magnitude* selection for [`SelectorCfg::TopK`]:
+/// one threshold over |x| (both sign histograms summed), keeping at
+/// least k entries total — not k per side, which would double the
+/// configured sparsity.
+fn magnitude_hist(x: &[f32], k: u32, out: &mut Vec<u32>) {
+    let (mut hist, hneg, absmax) = topk::signed_histograms(x);
+    for (h, n) in hist.iter_mut().zip(&hneg) {
+        *h += n;
+    }
+    let t = topk::threshold_from_hist(&hist, k, absmax);
+    for (i, &v) in x.iter().enumerate() {
+        if v != 0.0 && v.abs() >= t {
+            out.push(i as u32);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn heavy(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() * rng.next_f32().powi(3)).collect()
+    }
+
+    #[test]
+    fn dense_selects_all() {
+        let mut s = Selector::new(SelectorCfg::Dense, 0);
+        let mut idx = vec![9u32];
+        assert_eq!(s.select(&[1.0, 2.0], &mut idx), Support::All);
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn topk_exact_magnitudes() {
+        let x = vec![0.0f32, -3.0, 0.5, 2.0, -0.1];
+        let mut s = Selector::new(SelectorCfg::TopK { p: 0.4, strategy: Selection::Exact }, 0);
+        let mut idx = Vec::new();
+        assert_eq!(s.select(&x, &mut idx), Support::Sparse);
+        assert_eq!(idx, vec![1, 3]);
+    }
+
+    #[test]
+    fn topk_matches_free_function() {
+        let x = heavy(10_000, 3);
+        for p in [0.001, 0.01, 0.2] {
+            let mut s = Selector::new(SelectorCfg::TopK { p, strategy: Selection::Exact }, 0);
+            let mut idx = Vec::new();
+            s.select(&x, &mut idx);
+            let k = ((p * x.len() as f64).round() as usize).max(1);
+            assert_eq!(idx, topk::topk_exact(&x, k), "p={p}");
+        }
+    }
+
+    #[test]
+    fn two_sided_keeps_k_per_side() {
+        // top-2 positives are {0,1}; top-2 negatives are {3,6}
+        let x = vec![5.0f32, 4.0, -0.1, -0.2, 0.0, 3.0, -0.3, 0.05];
+        let mut s =
+            Selector::new(SelectorCfg::TwoSided { p: 0.25, strategy: Selection::Exact }, 0);
+        let mut idx = Vec::new();
+        s.select(&x, &mut idx);
+        assert_eq!(idx, vec![0, 1, 3, 6]);
+    }
+
+    #[test]
+    fn two_sided_respects_sparsity() {
+        let x = heavy(100_000, 7);
+        let mut s =
+            Selector::new(SelectorCfg::TwoSided { p: 0.01, strategy: Selection::Exact }, 0);
+        let mut idx = Vec::new();
+        s.select(&x, &mut idx);
+        assert_eq!(idx.len(), 2_000); // k per side
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+    }
+
+    #[test]
+    fn two_sided_one_sided_input() {
+        // every entry negative: positive side contributes nothing
+        let x: Vec<f32> = heavy(10_000, 10).iter().map(|v| -v.abs() - 1e-6).collect();
+        let mut s =
+            Selector::new(SelectorCfg::TwoSided { p: 0.01, strategy: Selection::Exact }, 0);
+        let mut idx = Vec::new();
+        s.select(&x, &mut idx);
+        assert_eq!(idx.len(), 100);
+        assert!(idx.iter().all(|&i| x[i as usize] < 0.0));
+    }
+
+    #[test]
+    fn two_sided_all_zero_segment() {
+        let x = vec![0.0f32; 1000];
+        let mut s =
+            Selector::new(SelectorCfg::TwoSided { p: 0.01, strategy: Selection::Exact }, 0);
+        let mut idx = Vec::new();
+        s.select(&x, &mut idx);
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn hist_close_to_exact() {
+        let x = heavy(100_000, 8);
+        let mut idx_e = Vec::new();
+        let mut idx_h = Vec::new();
+        Selector::new(SelectorCfg::TwoSided { p: 0.01, strategy: Selection::Exact }, 0)
+            .select(&x, &mut idx_e);
+        Selector::new(SelectorCfg::TwoSided { p: 0.01, strategy: Selection::Hist }, 0)
+            .select(&x, &mut idx_h);
+        // the histogram threshold never undershoots and overshoots by at
+        // most the boundary bin
+        assert!(idx_h.len() >= idx_e.len());
+        assert!(idx_h.len() <= idx_e.len() + idx_e.len() / 8 + 128);
+    }
+
+    #[test]
+    fn topk_hist_keeps_about_k_total() {
+        // one magnitude threshold: ~k kept in total, not ~k per side
+        let x = heavy(100_000, 12);
+        let mut s = Selector::new(SelectorCfg::TopK { p: 0.01, strategy: Selection::Hist }, 0);
+        let mut idx = Vec::new();
+        s.select(&x, &mut idx);
+        assert!(idx.len() >= 1000, "{}", idx.len());
+        // bin-granularity overshoot only — far below the ~2k a per-side
+        // threshold would keep
+        assert!(idx.len() <= 1500, "{}", idx.len());
+    }
+
+    #[test]
+    fn ties_fill_to_exactly_k() {
+        let x = [1.0f32; 10];
+        let mut s = Selector::new(SelectorCfg::TopK { p: 0.3, strategy: Selection::Exact }, 0);
+        let mut idx = Vec::new();
+        s.select(&x, &mut idx);
+        assert_eq!(idx.len(), 3);
+    }
+
+    #[test]
+    fn scratch_is_cleared_between_calls() {
+        let x = vec![1.0f32, -1.0];
+        let mut s = Selector::new(SelectorCfg::TopK { p: 0.5, strategy: Selection::Exact }, 0);
+        let mut idx = Vec::new();
+        s.select(&x, &mut idx);
+        let first = idx.clone();
+        s.select(&x, &mut idx);
+        assert_eq!(idx, first);
+    }
+}

@@ -8,8 +8,8 @@ pub mod presets;
 use anyhow::{anyhow, Result};
 
 use crate::codec::message::PosCodec;
-use crate::compression::registry::{Method, MethodConfig, SelectionCfg};
-use crate::compression::Granularity;
+use crate::compression::registry::MethodConfig;
+use crate::compression::{Granularity, QuantizerCfg, Selection, SelectorCfg};
 use crate::coordinator::schedule::LrSchedule;
 use crate::coordinator::trainer::TrainConfig;
 use crate::formats::toml::{Doc, Value};
@@ -21,19 +21,19 @@ pub fn parse_method(name: &str, p: f64, delay: usize) -> Result<MethodConfig> {
     Ok(match name {
         "baseline" => MethodConfig::baseline(),
         "fedavg" => MethodConfig::fedavg(delay.max(2)),
-        "gd" | "gradient_dropping" | "dgc" => {
-            let mut c = MethodConfig::of(Method::GradientDropping { p }, 1);
-            c.momentum_masking = true;
-            c
-        }
+        "gd" | "gradient_dropping" | "dgc" => MethodConfig::builder()
+            .select(SelectorCfg::TopK { p, strategy: Selection::Exact })
+            .quantize(QuantizerCfg::F32)
+            .momentum_masking(true)
+            .build(),
         "sbc1" => MethodConfig::sbc1(),
         "sbc2" => MethodConfig::sbc2(),
         "sbc3" => MethodConfig::sbc3(),
-        "sbc" => MethodConfig::of(Method::Sbc { p, selection: SelectionCfg::Exact }, delay),
-        "signsgd" => MethodConfig::of(Method::SignSgd { scale: 1e-3 }, 1),
-        "terngrad" => MethodConfig::of(Method::TernGrad, 1),
-        "qsgd" => MethodConfig::of(Method::Qsgd { levels: 4 }, 1),
-        "onebit" => MethodConfig::of(Method::OneBit, 1),
+        "sbc" => MethodConfig::sbc(p, delay),
+        "signsgd" => MethodConfig::signsgd(1e-3),
+        "terngrad" => MethodConfig::terngrad(),
+        "qsgd" => MethodConfig::qsgd(4),
+        "onebit" => MethodConfig::onebit(),
         other => return Err(anyhow!("unknown method '{other}'")),
     })
 }
@@ -70,9 +70,13 @@ pub fn train_config_from_doc(doc: &Doc) -> Result<TrainConfig> {
         method.granularity = Granularity::Global;
     }
     if doc.str_or("compression.selection", "exact") == "hist" {
-        if let Method::Sbc { p, .. } = method.method {
-            method.method = Method::Sbc { p, selection: SelectionCfg::Hist };
-        }
+        method.selector = match method.selector {
+            SelectorCfg::TopK { p, .. } => SelectorCfg::TopK { p, strategy: Selection::Hist },
+            SelectorCfg::TwoSided { p, .. } => {
+                SelectorCfg::TwoSided { p, strategy: Selection::Hist }
+            }
+            dense => dense,
+        };
     }
 
     let iterations = doc.i64_or("train.iterations", 1000) as usize;
@@ -146,10 +150,7 @@ mod tests {
         assert_eq!(cfg.method.delay, 20);
         assert!(cfg.method.momentum_masking);
         assert_eq!(cfg.pos_codec, PosCodec::Elias);
-        match cfg.method.method {
-            Method::Sbc { p, .. } => assert_eq!(p, 0.005),
-            _ => panic!(),
-        }
+        assert_eq!(cfg.method.sbc_p(), Some(0.005));
         assert!((cfg.uplink.bandwidth_bps - 12e6).abs() < 1.0);
         assert_eq!(cfg.lr.at(0), 0.001);
         assert!((cfg.lr.at(300) - 0.0001).abs() < 1e-9);

@@ -1,9 +1,7 @@
 //! Server-side aggregation of decoded client updates (Alg. 1 lines 16-19).
 
-use crate::compression::onebit::onebit_to_dense;
-use crate::compression::registry::{Method, MethodConfig};
-use crate::compression::{Granularity, UpdateMsg};
-use crate::model::TensorLayout;
+use crate::compression::quantize::QuantizerCfg;
+use crate::compression::registry::MethodConfig;
 
 /// How the server combines client updates.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -16,46 +14,33 @@ pub enum AggRule {
 
 impl AggRule {
     pub fn for_method(cfg: &MethodConfig) -> AggRule {
-        match cfg.method {
-            Method::SignSgd { scale } => AggRule::MajoritySign { scale },
+        match cfg.quantizer {
+            QuantizerCfg::Sign { scale } => AggRule::MajoritySign { scale },
             _ => AggRule::Mean,
         }
     }
 }
 
-/// Densify one decoded message according to the method's wire layout.
-pub fn densify(
-    msg: &UpdateMsg,
-    cfg: &MethodConfig,
-    layout: &TensorLayout,
-    sign_scale: f32,
-) -> Vec<f32> {
-    match cfg.method {
-        Method::OneBit => onebit_to_dense(msg, layout, cfg.granularity),
-        _ => {
-            // Global granularity wraps the whole vector in one segment.
-            match cfg.granularity {
-                Granularity::Global => msg.to_dense(&TensorLayout::flat(layout.total), sign_scale),
-                Granularity::PerTensor => msg.to_dense(layout, sign_scale),
-            }
-        }
-    }
-}
-
-/// Aggregate densified updates into the master delta.
-pub fn aggregate(updates: &[Vec<f32>], rule: AggRule) -> Vec<f32> {
-    assert!(!updates.is_empty());
-    let n = updates[0].len();
-    let mut out = vec![0.0f32; n];
+/// Aggregate densified updates into `out` (zeroed first) without
+/// allocating — the hot-path form; `updates` yields one dense slice per
+/// client.
+pub fn aggregate_into<'a, I>(updates: I, rule: AggRule, out: &mut [f32])
+where
+    I: IntoIterator<Item = &'a [f32]>,
+{
+    out.fill(0.0);
+    let mut count = 0usize;
     for u in updates {
-        assert_eq!(u.len(), n);
-        for i in 0..n {
+        assert_eq!(u.len(), out.len());
+        for i in 0..out.len() {
             out[i] += u[i];
         }
+        count += 1;
     }
+    assert!(count > 0, "aggregate of zero updates");
     match rule {
         AggRule::Mean => {
-            let inv = 1.0 / updates.len() as f32;
+            let inv = 1.0 / count as f32;
             for v in out.iter_mut() {
                 *v *= inv;
             }
@@ -72,13 +57,19 @@ pub fn aggregate(updates: &[Vec<f32>], rule: AggRule) -> Vec<f32> {
             }
         }
     }
+}
+
+/// Allocating convenience over [`aggregate_into`].
+pub fn aggregate(updates: &[Vec<f32>], rule: AggRule) -> Vec<f32> {
+    assert!(!updates.is_empty());
+    let mut out = vec![0.0f32; updates[0].len()];
+    aggregate_into(updates.iter().map(|u| u.as_slice()), rule, &mut out);
     out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compression::TensorUpdate;
 
     #[test]
     fn mean_aggregation() {
@@ -96,22 +87,18 @@ mod tests {
     }
 
     #[test]
-    fn densify_respects_granularity() {
-        let layout = TensorLayout::new(vec![("a".into(), vec![2]), ("b".into(), vec![2])]);
-        let mut cfg = MethodConfig::sbc1();
-        cfg.granularity = Granularity::Global;
-        let msg = UpdateMsg {
-            round: 0,
-            tensors: vec![TensorUpdate::SparseBinary { idx: vec![3], mu: 1.0, side_pos: true }],
-        };
-        let dense = densify(&msg, &cfg, &layout, 1.0);
-        assert_eq!(dense, vec![0.0, 0.0, 0.0, 1.0]);
+    fn aggregate_into_reuses_buffer() {
+        let mut out = vec![9.0f32; 2];
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, -2.0];
+        aggregate_into([&a[..], &b[..]], AggRule::Mean, &mut out);
+        assert_eq!(out, vec![2.0, 0.0]);
     }
 
     #[test]
     fn rule_for_method() {
         assert_eq!(AggRule::for_method(&MethodConfig::sbc1()), AggRule::Mean);
-        let s = MethodConfig::of(Method::SignSgd { scale: 0.01 }, 1);
+        let s = MethodConfig::signsgd(0.01);
         assert_eq!(AggRule::for_method(&s), AggRule::MajoritySign { scale: 0.01 });
     }
 }

@@ -1,7 +1,11 @@
-//! Per-client distributed-training state (paper Alg. 1 lines 6-14).
+//! Per-client distributed-training state (paper Alg. 1 lines 6-14),
+//! including the per-client scratch the hot loop reuses across rounds so
+//! compression, wire encode/decode and residual densification perform no
+//! steady-state heap allocation.
 
+use crate::codec::message::{PosCodec, WireCodec};
 use crate::compression::residual::Residual;
-use crate::compression::Compressor;
+use crate::compression::{Pipeline, UpdateMsg};
 use crate::util::rng::Rng;
 
 pub struct ClientState {
@@ -10,8 +14,19 @@ pub struct ClientState {
     pub opt: Vec<f32>,
     /// Error-feedback residual (paper eq. 2).
     pub residual: Residual,
-    /// This client's compressor instance (stateful for stochastic methods).
-    pub compressor: Box<dyn Compressor>,
+    /// This client's compression pipeline (stateful for stochastic stages).
+    pub pipeline: Pipeline,
+    /// Wire codec with its reusable encode buffer.
+    pub wire: WireCodec,
+    /// Reused outgoing-message scratch (compress_into target).
+    pub msg: UpdateMsg,
+    /// Reused server-side decode scratch (bit-true wire path).
+    pub decoded: UpdateMsg,
+    /// Reused densified update — one buffer per client across all rounds
+    /// (residual accounting and aggregation read from it).
+    pub dense: Vec<f32>,
+    /// Reused transmitted-index scratch for momentum masking.
+    pub mask_idx: Vec<u32>,
     /// Local iteration counter (Adam bias correction, schedules).
     pub iterations: usize,
     /// Client-local RNG stream (data sampling).
@@ -26,14 +41,20 @@ impl ClientState {
         n_params: usize,
         opt_size: usize,
         residual_enabled: bool,
-        compressor: Box<dyn Compressor>,
+        pipeline: Pipeline,
+        pos_codec: PosCodec,
         root_rng: &Rng,
     ) -> Self {
         ClientState {
             id,
             opt: vec![0.0; opt_size],
             residual: Residual::new(n_params, residual_enabled),
-            compressor,
+            pipeline,
+            wire: WireCodec::new(pos_codec),
+            msg: UpdateMsg::scratch(),
+            decoded: UpdateMsg::scratch(),
+            dense: vec![0.0; n_params],
+            mask_idx: Vec::new(),
             iterations: 0,
             rng: root_rng.child(0x1000 + id as u64),
             up_bits: 0,
@@ -50,19 +71,21 @@ mod tests {
     fn construction() {
         let root = Rng::new(1);
         let cfg = MethodConfig::sbc1();
-        let c = ClientState::new(2, 100, 100, true, cfg.build(7), &root);
+        let c = ClientState::new(2, 100, 100, true, cfg.build(7), PosCodec::Golomb, &root);
         assert_eq!(c.id, 2);
         assert_eq!(c.opt.len(), 100);
+        assert_eq!(c.dense.len(), 100);
         assert!(c.residual.enabled());
-        assert_eq!(c.compressor.name(), "sbc");
+        assert_eq!(c.pipeline.name(), "sbc");
+        assert_eq!(c.wire.pos_codec(), PosCodec::Golomb);
     }
 
     #[test]
     fn distinct_rng_streams() {
         let root = Rng::new(1);
         let cfg = MethodConfig::baseline();
-        let mut a = ClientState::new(0, 4, 1, false, cfg.build(0), &root);
-        let mut b = ClientState::new(1, 4, 1, false, cfg.build(0), &root);
+        let mut a = ClientState::new(0, 4, 1, false, cfg.build(0), PosCodec::Golomb, &root);
+        let mut b = ClientState::new(1, 4, 1, false, cfg.build(0), PosCodec::Golomb, &root);
         assert_ne!(a.rng.next_u64(), b.rng.next_u64());
     }
 }

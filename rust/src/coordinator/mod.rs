@@ -1,6 +1,8 @@
 //! DSGD coordinator (paper Algorithm 1): synchronous rounds with
-//! communication delay, per-client residuals and momentum, bit-true
-//! message encode/decode, server aggregation, evaluation and logging.
+//! communication delay, per-client residuals and momentum, the staged
+//! compression pipeline over bit-true wire encode/decode in both
+//! directions (client updates up, broadcast aggregate down), server
+//! aggregation, evaluation and logging.
 
 pub mod aggregation;
 pub mod client;

@@ -2,19 +2,27 @@
 //!
 //! One [`Trainer::run`] call executes a full DSGD training: every round,
 //! every participating client runs `delay` local iterations on its shard,
-//! forms the accumulated update (residual + delta), compresses it, puts
-//! the message *on the wire* (bit-exact encode), the server decodes and
-//! aggregates, and everyone synchronizes. All reported bits are measured
-//! on the encoded messages.
+//! forms the accumulated update (residual + fresh delta), runs the staged
+//! compression pipeline (Select → Quantize → Encode), puts the message
+//! *on the wire* (bit-exact encode), the server decodes and aggregates,
+//! re-encodes the aggregate for the downstream broadcast, and everyone
+//! synchronizes. All reported bits — upstream *and* downstream — are
+//! measured on the encoded messages.
+//!
+//! The round loop is allocation-free in steady state: each client owns
+//! reusable scratch (message, decode target, densified update, encode
+//! buffer — see [`ClientState`]), and the server reuses its aggregate,
+//! broadcast-message and broadcast-decode buffers across rounds.
 
 use std::time::Instant;
 
 use crate::codec::accounting::CommStats;
-use crate::codec::message::{self, PosCodec};
+use crate::codec::message::{self, PosCodec, WireCodec};
 use crate::compression::momentum_mask::mask_momentum;
-use crate::compression::registry::{Method, MethodConfig};
-use crate::compression::TensorUpdate;
-use crate::coordinator::aggregation::{aggregate, densify, AggRule};
+use crate::compression::pipeline::compress_broadcast_into;
+use crate::compression::registry::MethodConfig;
+use crate::compression::{Granularity, TensorUpdate, UpdateMsg};
+use crate::coordinator::aggregation::{aggregate_into, AggRule};
 use crate::coordinator::client::ClientState;
 use crate::coordinator::schedule::LrSchedule;
 use crate::coordinator::TrainBackend;
@@ -102,8 +110,7 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
 
         assert_eq!(initial.len(), n, "initial params length mismatch");
         let mut master = initial;
-        let default_residual = cfg.method.build(0).uses_residual();
-        let use_residual = cfg.method.use_residual(default_residual);
+        let use_residual = cfg.method.use_residual();
         let mut clients: Vec<ClientState> = (0..cfg.clients)
             .map(|i| {
                 ClientState::new(
@@ -112,13 +119,14 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
                     opt_size,
                     use_residual,
                     cfg.method.build(cfg.seed ^ (0xC11E + i as u64)),
+                    cfg.pos_codec,
                     &root,
                 )
             })
             .collect();
 
         let agg_rule = AggRule::for_method(&cfg.method);
-        let sign_scale = cfg.method.build(0).sign_scale();
+        let sign_scale = cfg.method.sign_scale();
         let delay = cfg.method.delay;
         let rounds = (cfg.iterations / delay).max(1);
         let mut comm = CommStats::default();
@@ -130,14 +138,23 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
             ..Default::default()
         };
 
-        let is_sbc_pjrt = cfg.use_pjrt_compress
-            && matches!(cfg.method.method, Method::Sbc { .. });
+        let is_sbc_pjrt = cfg.use_pjrt_compress && cfg.method.sbc_p().is_some();
+        // the PJRT compress graph emits one whole-vector tensor
+        let densify_gran =
+            if is_sbc_pjrt { Granularity::Global } else { cfg.method.granularity };
 
+        // round-persistent scratch: client accumulator, server aggregate,
+        // broadcast wire buffers — allocated once, reused every round
         let mut acc = vec![0.0f32; n];
+        let mut delta = vec![0.0f32; n];
+        let mut delta_rx = vec![0.0f32; n];
+        let mut round_up_bits = vec![0u64; cfg.clients];
+        let mut down_wire = WireCodec::new(cfg.pos_codec);
+        let mut down_msg = UpdateMsg::scratch();
+        let mut down_decoded = UpdateMsg::scratch();
+
         for round in 0..rounds {
             let lr = cfg.lr.at(round * delay);
-            let mut updates: Vec<Vec<f32>> = Vec::with_capacity(cfg.clients);
-            let mut round_up_bits = vec![0u64; cfg.clients];
             let mut train_loss = 0.0f32;
 
             for ci in 0..cfg.clients {
@@ -168,106 +185,83 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
                     tensor::sub_into(&mut acc, &w_new, &master);
                     c.residual.accumulate_into(&mut acc);
                 }
-                let msg = if is_sbc_pjrt {
+                if is_sbc_pjrt {
                     // route through the AOT Pallas kernel graph
-                    let p = match cfg.method.method {
-                        Method::Sbc { p, .. } => p as f32,
-                        _ => unreachable!(),
-                    };
+                    let p = cfg.method.sbc_p().unwrap() as f32;
                     let _t = span("compress_pjrt");
-                    let (dense, _t_thr, mu, side_pos) = self
+                    let (dense, _thr, mu, side_pos) = self
                         .backend
                         .compress_pjrt(&acc, p)
                         .expect("backend has no pjrt compress graph");
-                    let idx: Vec<u32> = dense
-                        .iter()
-                        .enumerate()
-                        .filter(|(_, v)| **v != 0.0)
-                        .map(|(i, _)| i as u32)
-                        .collect();
-                    crate::compression::UpdateMsg {
-                        round: round as u32,
-                        tensors: vec![TensorUpdate::SparseBinary { idx, mu: mu.abs(), side_pos }],
+                    c.msg.round = round as u32;
+                    c.msg.tensors.truncate(1);
+                    if c.msg.tensors.is_empty() {
+                        c.msg.tensors.push(TensorUpdate::placeholder());
                     }
+                    let (idx, mu_slot, side) = c.msg.tensors[0].sparse_binary_slot();
+                    tensor::nonzero_indices_into(&dense, idx);
+                    *mu_slot = mu.abs();
+                    *side = side_pos;
                 } else {
                     let _t = span("compress");
-                    c.compressor.compress(&acc, &layout, round as u32)
-                };
+                    c.pipeline.compress_into(&acc, &layout, round as u32, &mut c.msg);
+                }
 
-                // --- encode: the bits that actually cross the wire ---
-                let (bytes, bits) = {
-                    let _t = span("encode");
-                    message::encode(&msg, cfg.pos_codec)
+                // --- wire: the bits that actually cross, both ways ---
+                let nnz: usize = c.msg.tensors.iter().map(|t| t.nonzeros()).sum();
+                let bits = {
+                    let (bytes, bits) = {
+                        let _t = span("encode");
+                        c.wire.encode(&c.msg)
+                    };
+                    let _t = span("decode");
+                    message::decode_into(bytes, bits, &mut c.decoded)
+                        .expect("wire roundtrip failed");
+                    bits
                 };
-                let nnz: usize = msg.tensors.iter().map(|t| t.nonzeros()).sum();
                 comm.record_message(bits, nnz as u64);
                 c.up_bits += bits;
                 round_up_bits[ci] = bits;
 
-                // --- server-side decode (bit-true path) --------------
-                let decoded = {
-                    let _t = span("decode");
-                    message::decode(&bytes, bits).expect("wire roundtrip failed")
-                };
-                let mut dense = {
+                // --- server-side densify into the client's reusable
+                // buffer; residual vs exactly what was decoded ---------
+                {
                     let _t = span("densify");
-                    if is_sbc_pjrt {
-                        decoded.to_dense(&crate::model::TensorLayout::flat(n), sign_scale)
-                    } else {
-                        densify(&decoded, &cfg.method, &layout, sign_scale)
-                    }
-                };
-                // keep exactly what was decoded; residual vs transmitted
-                c.residual.update(&acc, &dense);
+                    c.decoded.densify_into(&layout, densify_gran, sign_scale, &mut c.dense);
+                }
+                c.residual.update(&acc, &c.dense);
 
                 if cfg.method.momentum_masking {
-                    let idx: Vec<u32> = dense
-                        .iter()
-                        .enumerate()
-                        .filter(|(_, v)| **v != 0.0)
-                        .map(|(i, _)| i as u32)
-                        .collect();
-                    mask_momentum(&mut c.opt, n, &idx);
+                    tensor::nonzero_indices_into(&c.dense, &mut c.mask_idx);
+                    mask_momentum(&mut c.opt, n, &c.mask_idx);
                 }
                 if matches!(agg_rule, AggRule::MajoritySign { .. }) {
                     // majority vote wants raw ±1 votes, not ±scale
-                    for v in dense.iter_mut() {
+                    for v in c.dense.iter_mut() {
                         *v = v.signum();
                     }
                 }
-                updates.push(dense);
             }
 
-            // --- server aggregation + broadcast ----------------------
-            let delta = {
+            // --- server aggregation + bit-true broadcast --------------
+            {
                 let _t = span("aggregate");
-                aggregate(&updates, agg_rule)
-            };
-            tensor::add_assign(&mut master, &delta);
-            // downstream: the server re-encodes the aggregated update —
-            // sparse (union of client supports) when that is cheaper than
-            // a dense broadcast, exactly as it would go on the wire.
+                aggregate_into(clients.iter().map(|c| c.dense.as_slice()), agg_rule, &mut delta);
+            }
+            // downstream: re-encode the aggregate exactly as it goes on
+            // the wire (sparse when the union support is small, dense
+            // otherwise), decode it back, and apply the decoded update —
+            // down_bits is the measured broadcast size, not an estimate.
             let down_bits = {
                 let _t = span("encode_down");
-                let nnz = delta.iter().filter(|v| **v != 0.0).count();
-                let sparse_estimate = nnz as u64 * (32 + 16) + 64;
-                if sparse_estimate < 32 * n as u64 {
-                    let idx: Vec<u32> = delta
-                        .iter()
-                        .enumerate()
-                        .filter(|(_, v)| **v != 0.0)
-                        .map(|(i, _)| i as u32)
-                        .collect();
-                    let val: Vec<f32> = idx.iter().map(|&i| delta[i as usize]).collect();
-                    let down_msg = crate::compression::UpdateMsg {
-                        round: round as u32,
-                        tensors: vec![TensorUpdate::SparseF32 { idx, val }],
-                    };
-                    message::encode(&down_msg, cfg.pos_codec).1
-                } else {
-                    32 * n as u64
-                }
+                compress_broadcast_into(&delta, round as u32, &mut down_msg);
+                let (bytes, bits) = down_wire.encode(&down_msg);
+                message::decode_into(bytes, bits, &mut down_decoded)
+                    .expect("downstream roundtrip failed");
+                bits
             };
+            down_decoded.densify_into(&layout, Granularity::Global, 1.0, &mut delta_rx);
+            tensor::add_assign(&mut master, &delta_rx);
             net.round(&round_up_bits, down_bits);
 
             // --- evaluation ------------------------------------------
@@ -372,5 +366,21 @@ mod tests {
         assert_eq!(r.net.clients.len(), 4);
         assert!(r.net.total_comm_time_s > 0.0);
         assert_eq!(r.net.clients[0].messages, 10);
+    }
+
+    #[test]
+    fn downstream_bits_are_measured_not_estimated() {
+        // the broadcast is re-encoded on the wire every round: a sparse
+        // method's union support must cost a small fraction of a dense
+        // method's block, and every round must broadcast something
+        let sparse = run(MethodConfig::sbc1(), 30);
+        let dense = run(MethodConfig::baseline(), 30);
+        let sparse_down = sparse.net.clients[0].down_bits;
+        let dense_down = dense.net.clients[0].down_bits;
+        assert!(sparse_down > 0 && dense_down > 0);
+        assert!(
+            sparse_down < dense_down / 4,
+            "sparse broadcast {sparse_down} vs dense {dense_down}"
+        );
     }
 }

@@ -6,9 +6,15 @@
 //!
 //! * **L3 (this crate)** — the distributed-training coordinator: DSGD
 //!   parameter server, communication rounds with delay, per-client
-//!   residual accumulation, pluggable compressors (SBC + every baseline
-//!   the paper compares against), bit-exact Golomb wire encoding, network
-//!   simulation, metrics and a CLI launcher.
+//!   residual accumulation, and a *staged compression pipeline*
+//!   (Select → Quantize → Encode, [`compression`]): every method the
+//!   paper compares against — SBC, Gradient Dropping, FedAvg, signSGD,
+//!   TernGrad, QSGD, 1-bit SGD — is a composition of a sparsity selector,
+//!   a value quantizer and the bit-exact wire codec
+//!   ([`codec::message::WireCodec`], Golomb/fixed/Elias positions), run
+//!   in both directions (client updates up, broadcast aggregate down)
+//!   over reusable scratch buffers so the hot loop does not allocate.
+//!   Plus network simulation, metrics and a CLI launcher.
 //! * **L2 (python/compile, build time)** — JAX model zoo lowered to HLO
 //!   text artifacts.
 //! * **L1 (python/compile/kernels, build time)** — Pallas compression

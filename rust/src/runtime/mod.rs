@@ -1,9 +1,28 @@
 //! PJRT runtime: loads the AOT HLO-text artifacts and executes them from
 //! the coordinator's hot path. Python never runs here — the artifacts are
 //! self-contained XLA programs.
+//!
+//! The real implementation binds the `xla` native crate and is gated
+//! behind the `pjrt` cargo feature (the xla_extension toolchain is not
+//! available everywhere). Building with the feature additionally
+//! requires making the `xla` crate available as a dependency (it cannot
+//! be declared in the offline manifest — see the feature note in
+//! Cargo.toml). Without the feature, [`PjrtBackend::load`] returns a
+//! descriptive error and the native backend remains the training
+//! substrate.
 
+#[cfg(feature = "pjrt")]
 pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod executable;
 
+#[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
+#[cfg(feature = "pjrt")]
 pub use executable::{Executable, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtBackend;

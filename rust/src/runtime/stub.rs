@@ -1,0 +1,74 @@
+//! Stub PJRT backend used when the crate is built without the `pjrt`
+//! feature: same API surface, but [`PjrtBackend::load`] always fails with
+//! an explanation. The struct is uninstantiable (it holds an
+//! [`std::convert::Infallible`]), so the trait methods are unreachable by
+//! construction.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{EvalOut, TrainBackend};
+use crate::model::manifest::Manifest;
+use crate::model::{ModelSpec, TensorLayout};
+use crate::util::rng::Rng;
+
+pub struct PjrtBackend {
+    pub spec: ModelSpec,
+    never: std::convert::Infallible,
+}
+
+impl PjrtBackend {
+    pub fn load(_manifest: &Manifest, model: &str, _clients: usize, _seed: u64) -> Result<Self> {
+        Err(anyhow!(
+            "model '{model}': this build has no PJRT runtime (enable the `pjrt` \
+             cargo feature with the xla_extension toolchain, or use --backend native)"
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+}
+
+impl TrainBackend for PjrtBackend {
+    fn n_params(&self) -> usize {
+        match self.never {}
+    }
+
+    fn opt_size(&self) -> usize {
+        match self.never {}
+    }
+
+    fn layout(&self) -> &TensorLayout {
+        match self.never {}
+    }
+
+    fn is_lm(&self) -> bool {
+        match self.never {}
+    }
+
+    fn init_params(&mut self, _seed: u64) -> Vec<f32> {
+        match self.never {}
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn local_steps(
+        &mut self,
+        _params: &[f32],
+        _opt: &mut [f32],
+        _steps: usize,
+        _lr: f32,
+        _t0: usize,
+        _client: usize,
+        _rng: &mut Rng,
+    ) -> (Vec<f32>, f32) {
+        match self.never {}
+    }
+
+    fn evaluate(&mut self, _params: &[f32], _max_batches: usize) -> EvalOut {
+        match self.never {}
+    }
+
+    fn compress_pjrt(&mut self, _delta: &[f32], _p: f32) -> Option<(Vec<f32>, f32, f32, bool)> {
+        match self.never {}
+    }
+}

@@ -75,6 +75,18 @@ pub fn count_nonzero(x: &[f32]) -> usize {
     x.iter().filter(|v| **v != 0.0).count()
 }
 
+/// Collect the indices of non-zero entries into `out` (cleared first) —
+/// the shared support scan behind momentum masking and sparse wire
+/// messages; one definition so the sites cannot drift.
+pub fn nonzero_indices_into(x: &[f32], out: &mut Vec<u32>) {
+    out.clear();
+    for (i, &v) in x.iter().enumerate() {
+        if v != 0.0 {
+            out.push(i as u32);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

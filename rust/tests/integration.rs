@@ -1,10 +1,10 @@
 //! Cross-module integration tests over the native backend: full DSGD
-//! trainings with every method, wire-format fidelity inside the training
-//! loop, residual bookkeeping, and ablation arms. (PJRT-path integration
-//! lives in `tests/pjrt.rs` and requires `make artifacts`.)
+//! trainings with every stage composition, wire-format fidelity inside
+//! the training loop, residual bookkeeping, and ablation arms. (PJRT-path
+//! integration lives in `tests/pjrt.rs` and requires `make artifacts`.)
 
-use sbc::compression::registry::{Method, MethodConfig, SelectionCfg};
-use sbc::compression::Granularity;
+use sbc::compression::registry::MethodConfig;
+use sbc::compression::{Granularity, Selection, SelectorCfg};
 use sbc::coordinator::schedule::LrSchedule;
 use sbc::coordinator::trainer::{TrainConfig, Trainer};
 use sbc::sgd::NativeMlpBackend;
@@ -29,10 +29,10 @@ fn every_method_trains_above_chance() {
         MethodConfig::gradient_dropping(),
         MethodConfig::sbc1(),
         MethodConfig::sbc2(),
-        MethodConfig::of(Method::Qsgd { levels: 4 }, 1),
-        MethodConfig::of(Method::TernGrad, 1),
-        MethodConfig::of(Method::OneBit, 1),
-        MethodConfig::of(Method::SignSgd { scale: 1e-3 }, 1),
+        MethodConfig::qsgd(4),
+        MethodConfig::terngrad(),
+        MethodConfig::onebit(),
+        MethodConfig::signsgd(1e-3),
     ];
     for m in methods {
         let label = m.label();
@@ -50,7 +50,7 @@ fn compression_ordering_matches_table1() {
     // measured compression must follow the theoretical ordering:
     // baseline < signSGD < GD < SBC1 < SBC2 < SBC3
     let b = run(MethodConfig::baseline(), 100).log.compression;
-    let s = run(MethodConfig::of(Method::SignSgd { scale: 1e-3 }, 1), 100).log.compression;
+    let s = run(MethodConfig::signsgd(1e-3), 100).log.compression;
     let g = run(MethodConfig::gradient_dropping(), 100).log.compression;
     let s1 = run(MethodConfig::sbc1(), 100).log.compression;
     let s2 = run(MethodConfig::sbc2(), 100).log.compression;
@@ -77,8 +77,7 @@ fn residual_ablation_hurts_sparse_methods() {
 #[test]
 fn granularity_global_vs_per_tensor_both_work() {
     for g in [Granularity::Global, Granularity::PerTensor] {
-        let mut m = MethodConfig::sbc2();
-        m.granularity = g;
+        let m = MethodConfig::sbc2().with_granularity(g);
         let r = run(m, 100);
         assert!(r.log.final_metric > 0.4, "{g:?}: {}", r.log.final_metric);
     }
@@ -86,14 +85,17 @@ fn granularity_global_vs_per_tensor_both_work() {
 
 #[test]
 fn selection_strategies_agree() {
-    let mk = |sel| {
-        let mut m = MethodConfig::of(Method::Sbc { p: 0.01, selection: sel }, 10);
-        m.granularity = Granularity::Global;
-        m
+    let mk = |strategy| {
+        MethodConfig::builder()
+            .select(SelectorCfg::TwoSided { p: 0.01, strategy })
+            .quantize(sbc::compression::QuantizerCfg::BinaryMean)
+            .delay(10)
+            .granularity(Granularity::Global)
+            .build()
     };
-    let e = run(mk(SelectionCfg::Exact), 150).log.final_metric;
-    let h = run(mk(SelectionCfg::Hist), 150).log.final_metric;
-    let s = run(mk(SelectionCfg::Sampled(2000)), 150).log.final_metric;
+    let e = run(mk(Selection::Exact), 150).log.final_metric;
+    let h = run(mk(Selection::Hist), 150).log.final_metric;
+    let s = run(mk(Selection::Sampled(2000)), 150).log.final_metric;
     assert!((e - h).abs() < 0.15, "exact {e} vs hist {h}");
     assert!((e - s).abs() < 0.2, "exact {e} vs sampled {s}");
 }
@@ -154,4 +156,20 @@ fn clients_scale() {
         assert_eq!(r.net.clients.len(), clients);
         assert!(r.log.final_metric > 0.3, "clients={clients}: {}", r.log.final_metric);
     }
+}
+
+#[test]
+fn downstream_traffic_tracks_method_sparsity() {
+    // the broadcast is re-encoded per round: a sparse method's union
+    // support must broadcast far fewer bits than a dense method's block
+    let sparse = run(MethodConfig::sbc1(), 60);
+    let dense = run(MethodConfig::fedavg(2), 60);
+    let per_round_sparse =
+        sparse.net.clients[0].down_bits as f64 / sparse.net.clients[0].messages as f64;
+    let per_round_dense =
+        dense.net.clients[0].down_bits as f64 / dense.net.clients[0].messages as f64;
+    assert!(
+        per_round_sparse < per_round_dense / 4.0,
+        "sparse {per_round_sparse} vs dense {per_round_dense}"
+    );
 }

@@ -4,8 +4,7 @@
 //! compiled Pallas compress graph against the bit-identical Rust mirror.
 
 use sbc::compression::registry::MethodConfig;
-use sbc::compression::sbc::{SbcCompressor, Selection};
-use sbc::compression::{Granularity, TensorUpdate};
+use sbc::compression::{Granularity, QuantizerCfg, Selection, SelectorCfg, TensorUpdate};
 use sbc::coordinator::schedule::LrSchedule;
 use sbc::coordinator::trainer::{TrainConfig, Trainer};
 use sbc::coordinator::TrainBackend;
@@ -14,6 +13,10 @@ use sbc::runtime::PjrtBackend;
 use sbc::util::rng::Rng;
 
 fn manifest() -> Option<Manifest> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping pjrt tests: built without the `pjrt` feature");
+        return None;
+    }
     match Manifest::load("artifacts") {
         Ok(m) => Some(m),
         Err(_) => {
@@ -50,8 +53,14 @@ fn pjrt_compress_graph_matches_rust_hist_mirror() {
         let (dense, t, mu, side) =
             be.compress_pjrt(&delta, p).expect("compress graph missing");
         // Rust mirror of the kernel math (bit-pattern histogram selection)
-        let mut c = SbcCompressor::new(p as f64, Granularity::Global, Selection::Hist, 0);
-        let TensorUpdate::SparseBinary { idx, mu: mu_r, side_pos } = c.compress_segment(&delta)
+        let mut mirror = MethodConfig::builder()
+            .select(SelectorCfg::TwoSided { p: p as f64, strategy: Selection::Hist })
+            .quantize(QuantizerCfg::BinaryMean)
+            .granularity(Granularity::Global)
+            .build()
+            .build(0);
+        let TensorUpdate::SparseBinary { idx, mu: mu_r, side_pos } =
+            mirror.compress_segment(&delta)
         else {
             panic!()
         };

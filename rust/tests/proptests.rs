@@ -5,12 +5,11 @@
 
 use sbc::codec::bitio::{BitReader, BitWriter};
 use sbc::codec::golomb;
-use sbc::codec::message::{self, PosCodec};
-use sbc::compression::registry::{Method, MethodConfig, SelectionCfg};
+use sbc::codec::message::{PosCodec, WireCodec};
+use sbc::compression::registry::MethodConfig;
 use sbc::compression::residual::Residual;
-use sbc::compression::sbc::{SbcCompressor, Selection};
 use sbc::compression::topk;
-use sbc::compression::{Compressor, Granularity, TensorUpdate};
+use sbc::compression::{Granularity, Selection, SelectorCfg, TensorUpdate, UpdateMsg};
 use sbc::model::TensorLayout;
 use sbc::util::rng::Rng;
 
@@ -32,6 +31,16 @@ fn random_delta(rng: &mut Rng, n: usize) -> Vec<f32> {
             _ => -rng.normal().abs() * rng.next_f32(),
         })
         .collect()
+}
+
+/// A paper-faithful SBC pipeline over the whole vector.
+fn sbc_pipeline(p: f64, strategy: Selection, seed: u64) -> sbc::compression::Pipeline {
+    MethodConfig::builder()
+        .select(SelectorCfg::TwoSided { p, strategy })
+        .quantize(sbc::compression::QuantizerCfg::BinaryMean)
+        .granularity(Granularity::Global)
+        .build()
+        .build(seed)
 }
 
 #[test]
@@ -56,32 +65,104 @@ fn prop_golomb_roundtrip_any_positions() {
     });
 }
 
+/// Random instances of every `TensorUpdate` variant, biased toward the
+/// edge cases the wire format must survive: empty index lists and
+/// single-element tensors.
+fn random_tensor_update(rng: &mut Rng, variant: usize) -> TensorUpdate {
+    let n = match rng.below(4) {
+        0 => 0usize, // empty
+        1 => 1,      // single element
+        _ => 2 + rng.below(600),
+    };
+    let sparse_idx = |rng: &mut Rng, n: usize| -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..n as u32).filter(|_| rng.next_f64() < 0.3).collect();
+        idx.dedup();
+        idx
+    };
+    match variant {
+        0 => TensorUpdate::Dense((0..n).map(|_| rng.normal()).collect()),
+        1 => {
+            let idx = sparse_idx(rng, n);
+            let val = idx.iter().map(|_| rng.normal()).collect();
+            TensorUpdate::SparseF32 { idx, val }
+        }
+        2 => TensorUpdate::SparseBinary {
+            idx: sparse_idx(rng, n),
+            mu: rng.normal().abs(),
+            side_pos: rng.below(2) == 0,
+        },
+        3 => TensorUpdate::Sign { signs: (0..n).map(|_| rng.below(2) == 0).collect() },
+        4 => TensorUpdate::SignMeans {
+            signs: (0..n).map(|_| rng.below(2) == 0).collect(),
+            mu_pos: rng.normal().abs(),
+            mu_neg: -rng.normal().abs(),
+        },
+        5 => TensorUpdate::Ternary {
+            scale: rng.normal().abs(),
+            vals: (0..n).map(|_| [0i8, 1, -1][rng.below(3)]).collect(),
+        },
+        _ => TensorUpdate::Quantized {
+            scale: rng.normal().abs(),
+            levels: 1 + rng.below(100) as u8,
+            vals: (0..n).map(|_| rng.below(9) as i8 - 4).collect(),
+        },
+    }
+}
+
 #[test]
-fn prop_message_roundtrip_every_compressor() {
+fn prop_every_variant_roundtrips_through_every_pos_codec() {
+    // satellite coverage: TensorUpdate variants x PosCodecs through the
+    // WireCodec stage, bit-exact, including empty-index and
+    // single-element tensors, decoded into dirty reused scratch
+    forall(60, |rng, seed| {
+        let msg = UpdateMsg {
+            round: rng.below(10_000) as u32,
+            tensors: (0..7).map(|v| random_tensor_update(rng, v)).collect(),
+        };
+        for codec in [PosCodec::Golomb, PosCodec::Fixed16, PosCodec::Elias] {
+            let mut wire = WireCodec::new(codec);
+            // scratch starts dirty with mismatched variants: slot reuse
+            // must replace them and still decode bit-exactly
+            let mut scratch = UpdateMsg {
+                round: 7,
+                tensors: vec![TensorUpdate::Dense(vec![9.0; 8]); 3],
+            };
+            for pass in 0..2 {
+                let (bytes, bits) = wire.encode(&msg);
+                let bytes = bytes.to_vec();
+                sbc::codec::message::decode_into(&bytes, bits, &mut scratch)
+                    .unwrap_or_else(|e| panic!("seed {seed} {codec:?} pass {pass}: {e}"));
+                assert_eq!(scratch, msg, "seed {seed} {codec:?} pass {pass}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_message_roundtrip_every_pipeline() {
     forall(30, |rng, seed| {
         let n = 500 + rng.below(5_000);
-        let layout = TensorLayout::new(vec![
-            ("a".into(), vec![n / 3]),
-            ("b".into(), vec![n - n / 3]),
-        ]);
+        let layout =
+            TensorLayout::new(vec![("a".into(), vec![n / 3]), ("b".into(), vec![n - n / 3])]);
         let delta = random_delta(rng, layout.total);
         let configs = [
             MethodConfig::baseline(),
             MethodConfig::gradient_dropping(),
             MethodConfig::sbc2(),
-            MethodConfig::of(Method::Qsgd { levels: 4 }, 1),
-            MethodConfig::of(Method::TernGrad, 1),
-            MethodConfig::of(Method::OneBit, 1),
-            MethodConfig::of(Method::SignSgd { scale: 0.5 }, 1),
+            MethodConfig::qsgd(4),
+            MethodConfig::terngrad(),
+            MethodConfig::onebit(),
+            MethodConfig::signsgd(0.5),
         ];
         for cfg in configs {
-            let mut c = cfg.build(seed);
-            let msg = c.compress(&delta, &layout, 3);
+            let mut pipeline = cfg.build(seed);
+            let msg = pipeline.compress(&delta, &layout, 3);
             for codec in [PosCodec::Golomb, PosCodec::Fixed16, PosCodec::Elias] {
-                let (bytes, bits) = message::encode(&msg, codec);
-                let got = message::decode(&bytes, bits)
-                    .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", c.name()));
-                assert_eq!(got, msg, "seed {seed} {} {codec:?}", c.name());
+                let mut wire = WireCodec::new(codec);
+                let (bytes, bits) = wire.encode(&msg);
+                let got = sbc::codec::message::decode(bytes, bits)
+                    .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", pipeline.name()));
+                assert_eq!(got, msg, "seed {seed} {} {codec:?}", pipeline.name());
             }
         }
     });
@@ -93,8 +174,8 @@ fn prop_sbc_transmitted_value_is_mean_of_kept() {
         let n = 1_000 + rng.below(50_000);
         let delta = random_delta(rng, n);
         let p = [0.001, 0.01, 0.05][rng.below(3)];
-        let mut c = SbcCompressor::new(p, Granularity::Global, Selection::Exact, seed);
-        match c.compress_segment(&delta) {
+        let mut pipeline = sbc_pipeline(p, Selection::Exact, seed);
+        match pipeline.compress_segment(&delta) {
             TensorUpdate::SparseBinary { idx, mu, side_pos } => {
                 if idx.is_empty() {
                     return;
@@ -124,8 +205,8 @@ fn prop_sbc_error_never_exceeds_input_norm() {
     forall(25, |rng, seed| {
         let n = 1_000 + rng.below(20_000);
         let delta = random_delta(rng, n);
-        let mut c = SbcCompressor::new(0.01, Granularity::Global, Selection::Exact, seed);
-        let tu = c.compress_segment(&delta);
+        let mut pipeline = sbc_pipeline(0.01, Selection::Exact, seed);
+        let tu = pipeline.compress_segment(&delta);
         let mut dense = vec![0.0f32; n];
         tu.add_into(&mut dense, 1.0);
         let err: f64 = delta
@@ -141,12 +222,12 @@ fn prop_sbc_error_never_exceeds_input_norm() {
 }
 
 #[test]
-fn prop_residual_conservation_through_compressor() {
-    // sum(delta_t) = sum(tx_t) + R_T for any compressor with residual
+fn prop_residual_conservation_through_pipeline() {
+    // sum(delta_t) = sum(tx_t) + R_T for any pipeline with residual
     forall(15, |rng, seed| {
         let n = 2_000;
         let layout = TensorLayout::flat(n);
-        let mut c = SbcCompressor::new(0.02, Granularity::Global, Selection::Exact, seed);
+        let mut pipeline = sbc_pipeline(0.02, Selection::Exact, seed);
         let mut res = Residual::new(n, true);
         let mut sum_delta = vec![0.0f64; n];
         let mut sum_tx = vec![0.0f64; n];
@@ -157,7 +238,7 @@ fn prop_residual_conservation_through_compressor() {
             }
             let mut acc = delta.clone();
             res.accumulate_into(&mut acc);
-            let msg = c.compress(&acc, &layout, round);
+            let msg = pipeline.compress(&acc, &layout, round);
             let dense = msg.to_dense(&layout, 1.0);
             res.update(&acc, &dense);
             for i in 0..n {
@@ -211,14 +292,30 @@ fn prop_hist_threshold_never_undershoots() {
 }
 
 #[test]
-fn prop_selection_cfg_roundtrip() {
-    for sel in [SelectionCfg::Exact, SelectionCfg::Hist, SelectionCfg::Sampled(100)] {
-        let s: Selection = sel.into();
-        match (sel, s) {
-            (SelectionCfg::Exact, Selection::Exact) => {}
-            (SelectionCfg::Hist, Selection::Hist) => {}
-            (SelectionCfg::Sampled(a), Selection::Sampled(b)) => assert_eq!(a, b),
-            other => panic!("{other:?}"),
+fn prop_compress_into_is_deterministic_across_buffer_reuse() {
+    // the scratch-reusing path must produce exactly what a fresh
+    // allocation would, for every deterministic stage composition
+    forall(10, |rng, seed| {
+        let n = 500 + rng.below(3_000);
+        let layout =
+            TensorLayout::new(vec![("a".into(), vec![n / 2]), ("b".into(), vec![n - n / 2])]);
+        let configs = [
+            MethodConfig::baseline(),
+            MethodConfig::gradient_dropping(),
+            MethodConfig::sbc(0.01, 1),
+            MethodConfig::onebit(),
+            MethodConfig::signsgd(0.5),
+        ];
+        for cfg in configs {
+            let mut fresh = cfg.build(seed);
+            let mut reused = cfg.build(seed);
+            let mut scratch = UpdateMsg::scratch();
+            for round in 0..4 {
+                let delta = random_delta(rng, layout.total);
+                let want = fresh.compress(&delta, &layout, round);
+                reused.compress_into(&delta, &layout, round, &mut scratch);
+                assert_eq!(scratch, want, "seed {seed} round {round} {}", fresh.name());
+            }
         }
-    }
+    });
 }
