@@ -1,0 +1,139 @@
+//! Round-loop scaling sweep: clients × worker threads.
+//!
+//! Measures full-training wall time for 1→512 simulated clients at
+//! 1/4/8 pool workers, checks every pooled run is bit-identical to its
+//! serial twin (a digest of the final master weights), prints a table,
+//! and emits machine-readable `BENCH_scale.json`.
+//!
+//!     cargo bench --bench scale_clients
+//!     SBC_SCALE_FULL=1 cargo bench --bench scale_clients   # adds 512 clients
+//!
+//! The acceptance bar for the pooled coordinator is ≥3x speedup at
+//! 8 threads / 256 clients on an 8-core host (the sweep is
+//! local-step-dominated, so the measured speedup tracks the physical
+//! core count on smaller machines).
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use sbc::compression::registry::MethodConfig;
+use sbc::coordinator::schedule::LrSchedule;
+use sbc::coordinator::trainer::{TrainConfig, Trainer};
+use sbc::metrics::render_table;
+use sbc::sgd::NativeMlpBackend;
+
+/// FNV-1a over the bit patterns of the final weights: a stable digest
+/// for cross-thread-count bit-identity checks.
+fn digest(params: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for v in params {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+struct Row {
+    clients: usize,
+    threads: usize,
+    rounds: usize,
+    wall_s: f64,
+    speedup: f64,
+    digest: u64,
+}
+
+fn run_once(clients: usize, threads: usize, iterations: usize) -> (f64, usize, u64) {
+    let method = MethodConfig::sbc(0.01, 5);
+    let mut cfg = TrainConfig::new("digits16", method, iterations, LrSchedule::constant(0.1));
+    cfg.clients = clients;
+    cfg.parallelism = threads;
+    cfg.eval_every_rounds = 1_000_000; // final eval only
+    cfg.eval_batches = 1;
+    let mut backend = NativeMlpBackend::digits_small(clients, cfg.seed);
+    let start = Instant::now();
+    let r = Trainer::new(&mut backend, cfg.clone()).run();
+    (start.elapsed().as_secs_f64(), cfg.iterations / cfg.method.delay, digest(&r.final_params))
+}
+
+fn main() {
+    let full = std::env::var("SBC_SCALE_FULL").is_ok();
+    let mut client_counts = vec![1usize, 4, 16, 64, 256];
+    if full {
+        client_counts.push(512);
+    }
+    let thread_counts = [1usize, 4, 8];
+    let iterations = 25; // 5 rounds at delay 5
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &clients in &client_counts {
+        let mut serial_wall = 0.0f64;
+        let mut serial_digest = 0u64;
+        for &threads in &thread_counts {
+            let (wall_s, rounds, d) = run_once(clients, threads, iterations);
+            if threads == 1 {
+                serial_wall = wall_s;
+                serial_digest = d;
+            } else {
+                assert_eq!(
+                    d, serial_digest,
+                    "pooled run diverged from serial at {clients} clients / {threads} threads"
+                );
+            }
+            rows.push(Row {
+                clients,
+                threads,
+                rounds,
+                wall_s,
+                speedup: serial_wall / wall_s.max(1e-12),
+                digest: d,
+            });
+            eprintln!(
+                "clients {clients:4}  threads {threads}  wall {wall_s:8.3}s  x{:.2}",
+                serial_wall / wall_s.max(1e-12)
+            );
+        }
+    }
+
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}", r.clients),
+                format!("{}", r.threads),
+                format!("{}", r.rounds),
+                format!("{:.3}", r.wall_s),
+                format!("x{:.2}", r.speedup),
+                format!("{:016x}", r.digest),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            &["clients", "threads", "rounds", "wall s", "speedup", "weights digest"],
+            &table
+        )
+    );
+    println!("(digest column: identical per clients row == pooled rounds are bit-identical)");
+
+    let mut json = String::from("{\n  \"bench\": \"scale_clients\",\n  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"clients\": {}, \"threads\": {}, \"rounds\": {}, \"wall_s\": {:.6}, \
+             \"speedup_vs_serial\": {:.4}, \"weights_digest\": \"{:016x}\"}}{}\n",
+            r.clients,
+            r.threads,
+            r.rounds,
+            r.wall_s,
+            r.speedup,
+            r.digest,
+            if i + 1 == rows.len() { "" } else { "," }
+        );
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_scale.json", &json).expect("write BENCH_scale.json");
+    println!("wrote BENCH_scale.json ({} configs)", rows.len());
+}

@@ -33,6 +33,9 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = presets::preset("mlp", method);
         cfg.iterations = iterations;
         cfg.clients = 8;
+        // pool the round loop: one worker per simulated cluster node
+        // (bit-identical to serial; PJRT backends fall back serially)
+        cfg.parallelism = 8;
         cfg.eval_every_rounds = 1_000_000;
         cfg.uplink = Link::datacenter_10g();
         cfg.downlink = Link::datacenter_10g();

@@ -4,7 +4,10 @@
 //!     cargo run --release --example quickstart
 //!
 //! Uses the pure-Rust backend so it runs in seconds with no artifacts;
-//! see `examples/federated_edge.rs` for the PJRT (AOT-artifact) path.
+//! see `examples/federated_edge.rs` for the PJRT (AOT-artifact) path and
+//! `examples/scale_fleet.rs` for the thread-pooled many-client round
+//! loop. Set `SBC_PARALLELISM=8` to pool this run's round loop — the
+//! table is bit-identical either way.
 
 use sbc::compression::registry::MethodConfig;
 use sbc::coordinator::schedule::LrSchedule;

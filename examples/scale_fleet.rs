@@ -1,0 +1,63 @@
+//! Fleet-scale round loop: hundreds of simulated clients per round on the
+//! thread-pooled coordinator.
+//!
+//! The paper's headline compression (×3531–×37208 upstream) matters at
+//! fleet scale, so the simulator must sweep large client counts at
+//! wall-clock speeds bounded by the codec, not the harness. This example
+//! runs one SBC training at a configurable client count twice — serial
+//! and pooled — verifies the two runs are **bit-identical**, and reports
+//! the speedup.
+//!
+//!     cargo run --release --example scale_fleet
+//!     SBC_FLEET_CLIENTS=256 SBC_FLEET_THREADS=8 cargo run --release --example scale_fleet
+//!
+//! See `benches/scale_clients.rs` for the full clients × threads sweep
+//! (and `BENCH_scale.json`).
+
+use sbc::compression::registry::MethodConfig;
+use sbc::coordinator::schedule::LrSchedule;
+use sbc::coordinator::trainer::{TrainConfig, Trainer};
+use sbc::sgd::NativeMlpBackend;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let clients = env_usize("SBC_FLEET_CLIENTS", 128);
+    let threads = env_usize(
+        "SBC_FLEET_THREADS",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+    );
+    let iterations = env_usize("SBC_FLEET_ITERS", 50);
+
+    println!("== Fleet scenario: {clients} clients, SBC(p=0.01,n=5), {threads} threads ==\n");
+    let run = |parallelism: usize| {
+        let method = MethodConfig::sbc(0.01, 5);
+        let mut cfg = TrainConfig::new("digits16", method, iterations, LrSchedule::constant(0.1));
+        cfg.clients = clients;
+        cfg.parallelism = parallelism;
+        cfg.eval_every_rounds = 1_000_000; // final eval only
+        cfg.eval_batches = 4;
+        let mut backend = NativeMlpBackend::digits_small(cfg.clients, cfg.seed);
+        let start = std::time::Instant::now();
+        let r = Trainer::new(&mut backend, cfg).run();
+        (r, start.elapsed().as_secs_f64())
+    };
+
+    let (serial, t_serial) = run(1);
+    let (pooled, t_pooled) = run(threads);
+
+    assert_eq!(
+        serial.final_params, pooled.final_params,
+        "pooled round loop must be bit-identical to serial"
+    );
+    println!("serial  ({} clients, 1 thread):  {t_serial:.2}s", clients);
+    println!("pooled  ({} clients, {threads} threads): {t_pooled:.2}s", clients);
+    println!(
+        "speedup x{:.2}   accuracy {:.3}   compression x{:.0}   (bit-identical: yes)",
+        t_serial / t_pooled.max(1e-9),
+        pooled.log.final_metric,
+        pooled.log.compression,
+    );
+}

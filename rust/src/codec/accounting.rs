@@ -13,6 +13,7 @@ use crate::codec::golomb;
 /// rate vs. the 32-bit dense baseline.
 #[derive(Clone, Debug)]
 pub struct MethodCost {
+    /// Method label (Table I row name).
     pub name: &'static str,
     /// Fraction of iterations with communication (1/n for delay n).
     pub temporal: f64,
@@ -70,6 +71,9 @@ pub struct CommStats {
 }
 
 impl CommStats {
+    /// Account one encoded upstream message (order-independent: the
+    /// counters are pure sums, so serial and pooled coordinators record
+    /// identical totals).
     pub fn record_message(&mut self, wire_bits: u64, nonzeros: u64) {
         self.upstream_bits += wire_bits;
         self.messages += 1;
@@ -90,6 +94,7 @@ impl CommStats {
         self.baseline_bits as f64 / self.upstream_bits as f64
     }
 
+    /// Total upstream traffic in megabytes.
     pub fn upstream_megabytes(&self) -> f64 {
         self.upstream_bits as f64 / 8e6
     }

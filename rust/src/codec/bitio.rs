@@ -4,6 +4,7 @@
 //! an exact bit count so compression rates are measured on true wire size,
 //! not approximations.
 
+/// MSB-first bit stream writer over a growable byte buffer.
 #[derive(Default, Clone, Debug)]
 pub struct BitWriter {
     buf: Vec<u8>,
@@ -15,10 +16,12 @@ pub struct BitWriter {
 }
 
 impl BitWriter {
+    /// An empty writer.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// An empty writer with `bytes` of buffer pre-reserved.
     pub fn with_capacity(bytes: usize) -> Self {
         BitWriter { buf: Vec::with_capacity(bytes), acc: 0, nacc: 0, bits: 0 }
     }
@@ -37,6 +40,7 @@ impl BitWriter {
         }
     }
 
+    /// Append one bit.
     #[inline]
     pub fn put_bit(&mut self, bit: bool) {
         self.acc = (self.acc << 1) | bit as u64;
@@ -78,6 +82,7 @@ impl BitWriter {
         self.put_bits(((1u64 << q) - 1) << 1, q as u32 + 1);
     }
 
+    /// Append an f32 as its 32 raw bits.
     pub fn put_f32(&mut self, x: f32) {
         self.put_bits(x.to_bits() as u64, 32);
     }
@@ -107,6 +112,7 @@ impl BitWriter {
         &self.buf
     }
 
+    /// Reset to empty, keeping the buffer allocation (scratch reuse).
     pub fn clear(&mut self) {
         self.buf.clear();
         self.acc = 0;
@@ -115,6 +121,8 @@ impl BitWriter {
     }
 }
 
+/// MSB-first bit stream reader over a borrowed byte buffer with an exact
+/// bit length (padding bits past `len_bits` are unreadable).
 #[derive(Clone, Debug)]
 pub struct BitReader<'a> {
     buf: &'a [u8],
@@ -123,16 +131,19 @@ pub struct BitReader<'a> {
 }
 
 impl<'a> BitReader<'a> {
+    /// A reader over the first `len_bits` bits of `buf`.
     pub fn new(buf: &'a [u8], len_bits: u64) -> Self {
         debug_assert!(len_bits <= buf.len() as u64 * 8);
         BitReader { buf, pos: 0, len_bits }
     }
 
+    /// Bits left to read.
     #[inline]
     pub fn remaining(&self) -> u64 {
         self.len_bits - self.pos
     }
 
+    /// Read one bit (`None` at end of stream).
     #[inline]
     pub fn get_bit(&mut self) -> Option<bool> {
         if self.pos >= self.len_bits {
@@ -193,6 +204,7 @@ impl<'a> BitReader<'a> {
         }
     }
 
+    /// Read an f32 from 32 raw bits.
     pub fn get_f32(&mut self) -> Option<f32> {
         Some(f32::from_bits(self.get_bits(32)? as u32))
     }

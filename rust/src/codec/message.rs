@@ -31,11 +31,14 @@ use crate::compression::{TensorUpdate, UpdateMsg};
 const MAGIC: u64 = 0x5BC0;
 const VERSION: u64 = 2;
 
-/// Position-list codec (ablation: DESIGN.md §7.2).
+/// Position-list codec (ablation: ARCHITECTURE.md §Wire format).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PosCodec {
+    /// Golomb-Rice gaps at the eq.-5 optimal parameter (paper default).
     Golomb,
+    /// Fixed 16-bit gaps with escape (the paper's naive comparator).
     Fixed16,
+    /// Elias-gamma gaps (parameter-free universal code).
     Elias,
 }
 
@@ -67,10 +70,12 @@ pub struct WireCodec {
 }
 
 impl WireCodec {
+    /// A codec using `pos` for sparse position lists.
     pub fn new(pos: PosCodec) -> WireCodec {
         WireCodec { pos, writer: BitWriter::with_capacity(1024) }
     }
 
+    /// The configured position-list codec.
     pub fn pos_codec(&self) -> PosCodec {
         self.pos
     }

@@ -1,4 +1,5 @@
-//! Comparator position codecs for the ablation study (DESIGN.md §7.2):
+//! Comparator position codecs for the ablation study (ARCHITECTURE.md
+//! §Wire format):
 //! fixed-width gap coding (the "naive 16-bit" scheme the paper compares
 //! against) and Elias-gamma, a parameter-free universal code.
 
@@ -21,6 +22,7 @@ pub fn encode_fixed(w: &mut BitWriter, positions: &[u32], width: u32) {
     }
 }
 
+/// Decode `count` positions written by [`encode_fixed`] (allocating).
 pub fn decode_fixed(r: &mut BitReader, count: usize, width: u32) -> Option<Vec<u32>> {
     let mut out = Vec::with_capacity(count);
     decode_fixed_into(r, count, width, &mut out)?;
@@ -59,6 +61,7 @@ pub fn put_elias_gamma(w: &mut BitWriter, x: u64) {
     w.put_bits(x, nbits);
 }
 
+/// Read one Elias-gamma value written by [`put_elias_gamma`].
 pub fn get_elias_gamma(r: &mut BitReader) -> Option<u64> {
     let mut zeros = 0u32;
     loop {
@@ -71,6 +74,7 @@ pub fn get_elias_gamma(r: &mut BitReader) -> Option<u64> {
     Some((1u64 << zeros) | rest)
 }
 
+/// Elias-gamma gap coding of sorted positions (parameter-free).
 pub fn encode_elias(w: &mut BitWriter, positions: &[u32]) {
     let mut prev: i64 = -1;
     for &pos in positions {
@@ -79,6 +83,7 @@ pub fn encode_elias(w: &mut BitWriter, positions: &[u32]) {
     }
 }
 
+/// Decode `count` positions written by [`encode_elias`] (allocating).
 pub fn decode_elias(r: &mut BitReader, count: usize) -> Option<Vec<u32>> {
     let mut out = Vec::with_capacity(count);
     decode_elias_into(r, count, &mut out)?;

@@ -43,20 +43,54 @@ pub enum TensorUpdate {
     /// Dense f32 — the baseline and Federated Averaging.
     Dense(Vec<f32>),
     /// Sparse with full-precision values (Gradient Dropping / DGC).
-    SparseF32 { idx: Vec<u32>, val: Vec<f32> },
+    SparseF32 {
+        /// Sorted surviving positions.
+        idx: Vec<u32>,
+        /// Their full-precision values, aligned with `idx`.
+        val: Vec<f32>,
+    },
     /// Sparse binary (SBC, paper Alg. 2): positions + one mean; the sign
     /// is carried by `side_pos`.
-    SparseBinary { idx: Vec<u32>, mu: f32, side_pos: bool },
+    SparseBinary {
+        /// Sorted surviving positions (all on the winning side).
+        idx: Vec<u32>,
+        /// Mean magnitude of the winning side.
+        mu: f32,
+        /// Whether the winning side is positive.
+        side_pos: bool,
+    },
     /// Dense sign quantization (signSGD): one bit per element.
-    Sign { signs: Vec<bool> },
+    Sign {
+        /// One sign bit per segment element (`true` = positive).
+        signs: Vec<bool>,
+    },
     /// Dense 1-bit quantization with per-segment means (1-bit SGD): sign
     /// bit per element, plus the positive-side and negative-side means.
-    SignMeans { signs: Vec<bool>, mu_pos: f32, mu_neg: f32 },
+    SignMeans {
+        /// One sign bit per segment element.
+        signs: Vec<bool>,
+        /// Mean of the non-negative entries.
+        mu_pos: f32,
+        /// Mean of the negative entries (≤ 0).
+        mu_neg: f32,
+    },
     /// Dense stochastic ternary (TernGrad): scale plus {-1,0,+1}.
-    Ternary { scale: f32, vals: Vec<i8> },
+    Ternary {
+        /// Per-segment scale (max |x|).
+        scale: f32,
+        /// Ternary codes, one per element.
+        vals: Vec<i8>,
+    },
     /// QSGD stochastic uniform quantization: per-tensor scale, signed
     /// integer levels in [-s, s].
-    Quantized { scale: f32, levels: u8, vals: Vec<i8> },
+    Quantized {
+        /// Per-segment L2 scale.
+        scale: f32,
+        /// Quantization level count `s`.
+        levels: u8,
+        /// Signed levels in `[-s, s]`, one per element.
+        vals: Vec<i8>,
+    },
 }
 
 impl TensorUpdate {
@@ -234,7 +268,9 @@ impl TensorUpdate {
 /// server→client (the broadcast aggregate).
 #[derive(Clone, Debug, PartialEq)]
 pub struct UpdateMsg {
+    /// Communication round this message belongs to.
     pub round: u32,
+    /// One update per segment (layout tensor, or one global segment).
     pub tensors: Vec<TensorUpdate>,
 }
 
@@ -283,7 +319,9 @@ impl UpdateMsg {
 /// Compression granularity (paper compresses per tensor: one μ per tensor).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Granularity {
+    /// One segment per layout tensor (paper default).
     PerTensor,
+    /// One whole-vector segment.
     Global,
 }
 

@@ -24,18 +24,22 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
+    /// Compose a pipeline from its two stages and the segmentation.
     pub fn new(selector: Selector, quantizer: Quantizer, granularity: Granularity) -> Pipeline {
         Pipeline { selector, quantizer, granularity, idx: Vec::new() }
     }
 
+    /// The segmentation this pipeline compresses at.
     pub fn granularity(&self) -> Granularity {
         self.granularity
     }
 
+    /// The selection stage.
     pub fn selector(&self) -> &Selector {
         &self.selector
     }
 
+    /// The quantization stage.
     pub fn quantizer(&self) -> &Quantizer {
         &self.quantizer
     }

@@ -28,11 +28,18 @@ pub enum QuantizerCfg {
     /// One mean for the winning sign side (SBC).
     BinaryMean,
     /// One bit per element; `scale` is applied when densifying.
-    Sign { scale: f32 },
+    Sign {
+        /// Server step size per sign (signSGD hyperparameter).
+        scale: f32,
+    },
     /// Stochastic {-s, 0, +s} with s = max |x| (TernGrad).
     Ternary,
     /// Stochastic uniform levels with per-segment L2 scale (QSGD).
-    Qsgd { levels: u8 },
+    Qsgd {
+        /// Level count `s` (values quantize to `[-s, s]`); must be
+        /// in `1..=127`.
+        levels: u8,
+    },
     /// One bit per element plus per-side means (1-bit SGD).
     SignMeans,
 }
@@ -44,6 +51,7 @@ pub struct Quantizer {
 }
 
 impl Quantizer {
+    /// Instantiate the stage (seeded for the stochastic quantizers).
     pub fn new(cfg: QuantizerCfg, seed: u64) -> Quantizer {
         if let QuantizerCfg::Qsgd { levels } = cfg {
             // levels ride in an i8 on the wire; 128 would wrap to -128
@@ -53,6 +61,7 @@ impl Quantizer {
         Quantizer { cfg, rng: Rng::new(seed) }
     }
 
+    /// The build-time configuration this stage was constructed from.
     pub fn cfg(&self) -> QuantizerCfg {
         self.cfg
     }

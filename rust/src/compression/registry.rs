@@ -39,31 +39,37 @@ pub struct MethodBuilder {
 }
 
 impl MethodBuilder {
+    /// Set the selection stage (which coordinates survive).
     pub fn select(mut self, selector: SelectorCfg) -> Self {
         self.cfg.selector = selector;
         self
     }
 
+    /// Set the quantization stage (how survivors are represented).
     pub fn quantize(mut self, quantizer: QuantizerCfg) -> Self {
         self.cfg.quantizer = quantizer;
         self
     }
 
+    /// Set the segmentation (per-tensor or whole-vector).
     pub fn granularity(mut self, granularity: Granularity) -> Self {
         self.cfg.granularity = granularity;
         self
     }
 
+    /// Set the communication delay (local iterations per round, ≥ 1).
     pub fn delay(mut self, delay: usize) -> Self {
         self.cfg.delay = delay.max(1);
         self
     }
 
+    /// Enable/disable DGC momentum factor masking.
     pub fn momentum_masking(mut self, on: bool) -> Self {
         self.cfg.momentum_masking = on;
         self
     }
 
+    /// Override the residual (error feedback) default.
     pub fn residual(mut self, on: bool) -> Self {
         self.cfg.residual = Some(on);
         self
@@ -114,17 +120,39 @@ impl MethodConfig {
     // --- paper presets (Table I / Table II columns) ---------------------
 
     /// Dense every round (DSGD baseline).
+    ///
+    /// ```
+    /// use sbc::compression::registry::MethodConfig;
+    /// let cfg = MethodConfig::baseline();
+    /// assert_eq!(cfg.label(), "Baseline");
+    /// assert_eq!(cfg.delay, 1);
+    /// assert!(!cfg.use_residual()); // nothing is lost, nothing to feed back
+    /// ```
     pub fn baseline() -> Self {
         Self::builder().build()
     }
 
     /// Federated Averaging at delay n (McMahan et al.).
+    ///
+    /// ```
+    /// use sbc::compression::registry::MethodConfig;
+    /// let cfg = MethodConfig::fedavg(100);
+    /// assert_eq!(cfg.label(), "FedAvg(n=100)");
+    /// assert_eq!(cfg.delay, 100); // dense updates, 1 round per 100 iters
+    /// ```
     pub fn fedavg(n: usize) -> Self {
         Self::builder().delay(n).build()
     }
 
     /// Gradient Dropping at the paper's p = 0.1% (Aji & Heafield), with
     /// DGC momentum masking (Lin et al.).
+    ///
+    /// ```
+    /// use sbc::compression::registry::MethodConfig;
+    /// let cfg = MethodConfig::gradient_dropping();
+    /// assert_eq!(cfg.label(), "GradDrop(p=0.001)");
+    /// assert!(cfg.momentum_masking && cfg.use_residual());
+    /// ```
     pub fn gradient_dropping() -> Self {
         Self::builder()
             .select(SelectorCfg::TopK { p: 0.001, strategy: Selection::Exact })
@@ -133,6 +161,19 @@ impl MethodConfig {
     }
 
     /// Sparse Binary Compression at sparsity `p` and delay `n`.
+    ///
+    /// ```
+    /// use sbc::compression::registry::MethodConfig;
+    /// use sbc::compression::TensorUpdate;
+    /// use sbc::model::TensorLayout;
+    ///
+    /// let cfg = MethodConfig::sbc(0.25, 4);
+    /// assert_eq!(cfg.sbc_p(), Some(0.25));
+    /// // the built pipeline emits the SparseBinary wire variant
+    /// let mut pipeline = cfg.build(7);
+    /// let msg = pipeline.compress(&[1.0, -0.5, 3.0, 0.25], &TensorLayout::flat(4), 0);
+    /// assert!(matches!(msg.tensors[0], TensorUpdate::SparseBinary { .. }));
+    /// ```
     pub fn sbc(p: f64, delay: usize) -> Self {
         Self::builder()
             .select(SelectorCfg::TwoSided { p, strategy: Selection::Exact })
@@ -142,22 +183,48 @@ impl MethodConfig {
     }
 
     /// SBC (1): no delay, 0.1% gradient sparsity (paper §IV-B).
+    ///
+    /// ```
+    /// # use sbc::compression::registry::MethodConfig;
+    /// assert_eq!(MethodConfig::sbc1().label(), "SBC(p=0.001,n=1)");
+    /// ```
     pub fn sbc1() -> Self {
         Self::sbc(0.001, 1)
     }
 
     /// SBC (2): delay 10, 1% sparsity.
+    ///
+    /// ```
+    /// # use sbc::compression::registry::MethodConfig;
+    /// assert_eq!(MethodConfig::sbc2().label(), "SBC(p=0.01,n=10)");
+    /// ```
     pub fn sbc2() -> Self {
         Self::sbc(0.01, 10)
     }
 
     /// SBC (3): delay 100, 1% sparsity.
+    ///
+    /// ```
+    /// # use sbc::compression::registry::MethodConfig;
+    /// assert_eq!(MethodConfig::sbc3().label(), "SBC(p=0.01,n=100)");
+    /// ```
     pub fn sbc3() -> Self {
         Self::sbc(0.01, 100)
     }
 
     /// signSGD (Bernstein et al.); `scale` is the server step size
     /// applied per sign on densify.
+    ///
+    /// ```
+    /// use sbc::compression::registry::MethodConfig;
+    /// use sbc::model::TensorLayout;
+    ///
+    /// let cfg = MethodConfig::signsgd(0.01);
+    /// assert_eq!(cfg.sign_scale(), 0.01);
+    /// // one bit per coordinate; densify applies ±scale
+    /// let msg = cfg.build(0).compress(&[0.5, -2.0], &TensorLayout::flat(2), 0);
+    /// assert_eq!(msg.to_dense(&TensorLayout::flat(2), cfg.sign_scale()), vec![0.01, -0.01]);
+    /// ```
     pub fn signsgd(scale: f32) -> Self {
         Self::builder()
             .quantize(QuantizerCfg::Sign { scale })
@@ -166,16 +233,35 @@ impl MethodConfig {
     }
 
     /// TernGrad (Wen et al.).
+    ///
+    /// ```
+    /// use sbc::compression::registry::MethodConfig;
+    /// let cfg = MethodConfig::terngrad();
+    /// assert_eq!(cfg.label(), "TernGrad");
+    /// assert!(!cfg.use_residual()); // unbiased quantizer: no error feedback
+    /// ```
     pub fn terngrad() -> Self {
         Self::builder().quantize(QuantizerCfg::Ternary).build()
     }
 
     /// QSGD (Alistarh et al.) with `levels` quantization levels.
+    ///
+    /// ```
+    /// use sbc::compression::registry::MethodConfig;
+    /// assert_eq!(MethodConfig::qsgd(4).label(), "QSGD(4)");
+    /// ```
     pub fn qsgd(levels: u8) -> Self {
         Self::builder().quantize(QuantizerCfg::Qsgd { levels }).build()
     }
 
     /// 1-bit SGD (Seide et al.).
+    ///
+    /// ```
+    /// use sbc::compression::registry::MethodConfig;
+    /// let cfg = MethodConfig::onebit();
+    /// assert_eq!(cfg.label(), "1bitSGD");
+    /// assert!(cfg.use_residual()); // error feedback is its defining feature
+    /// ```
     pub fn onebit() -> Self {
         Self::builder().quantize(QuantizerCfg::SignMeans).build()
     }

@@ -6,6 +6,7 @@
 
 use crate::util::tensor;
 
+/// One client's error-feedback residual vector.
 #[derive(Clone, Debug)]
 pub struct Residual {
     r: Vec<f32>,
@@ -13,10 +14,13 @@ pub struct Residual {
 }
 
 impl Residual {
+    /// A zero residual over `n` parameters (a disabled residual stays
+    /// zero forever — the no-error-feedback ablation arm).
     pub fn new(n: usize, enabled: bool) -> Self {
         Residual { r: vec![0.0; n], enabled }
     }
 
+    /// Whether error feedback is active.
     pub fn enabled(&self) -> bool {
         self.enabled
     }
@@ -37,10 +41,12 @@ impl Residual {
         tensor::sub_into(&mut self.r, acc, transmitted);
     }
 
+    /// L2 norm of the residual (how much error is in flight).
     pub fn norm(&self) -> f32 {
         tensor::l2_norm(&self.r)
     }
 
+    /// The raw residual vector.
     pub fn as_slice(&self) -> &[f32] {
         &self.r
     }

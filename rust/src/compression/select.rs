@@ -22,6 +22,7 @@ use crate::util::rng::Rng;
 /// Threshold-estimation strategy for the sparse selectors.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Selection {
+    /// Exact quickselect threshold.
     Exact,
     /// Threshold estimated from a subsample of this many elements.
     Sampled(usize),
@@ -35,10 +36,20 @@ pub enum SelectorCfg {
     /// Keep every coordinate.
     Dense,
     /// Keep the fraction-`p` largest entries by |x|.
-    TopK { p: f64, strategy: Selection },
+    TopK {
+        /// Fraction of entries kept.
+        p: f64,
+        /// Threshold-estimation strategy.
+        strategy: Selection,
+    },
     /// Keep the fraction-`p` largest positives and fraction-`p` most
     /// negative entries (SBC Alg. 2).
-    TwoSided { p: f64, strategy: Selection },
+    TwoSided {
+        /// Fraction kept per side.
+        p: f64,
+        /// Threshold-estimation strategy.
+        strategy: Selection,
+    },
 }
 
 /// What a selector produced for one segment.
@@ -62,10 +73,12 @@ pub struct Selector {
 }
 
 impl Selector {
+    /// Instantiate the stage (seeded for the sampled strategy).
     pub fn new(cfg: SelectorCfg, seed: u64) -> Selector {
         Selector { cfg, rng: Rng::new(seed), mags: Vec::new(), ties: Vec::new() }
     }
 
+    /// The build-time configuration this stage was constructed from.
     pub fn cfg(&self) -> SelectorCfg {
         self.cfg
     }

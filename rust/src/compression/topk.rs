@@ -1,4 +1,4 @@
-//! Top-k magnitude selection — three strategies (ablated, DESIGN.md §7.1):
+//! Top-k magnitude selection — three ablated strategies:
 //!
 //! * `exact`: Floyd-Rivest-style quickselect on magnitudes, O(n);
 //! * `sampled`: DGC-style threshold estimated from a random subsample;
@@ -66,8 +66,11 @@ pub fn topk_sampled(x: &[f32], k: usize, sample: usize, rng: &mut Rng) -> Vec<u3
 
 // --- bit-pattern histogram (mirror of python/compile/kernels) -------------
 
+/// Exponent octaves the histogram spans below the max magnitude.
 pub const OCTAVES: i32 = 16;
+/// Mantissa sub-bins per octave (top 6 mantissa bits).
 pub const SUBBINS: i32 = 64;
+/// Total histogram bins (matches the Pallas kernel exactly).
 pub const NBINS: usize = ((OCTAVES + 1) * SUBBINS) as usize; // 1088
 
 #[inline]

@@ -97,6 +97,9 @@ pub fn train_config_from_doc(doc: &Doc) -> Result<TrainConfig> {
 
     let mut cfg = TrainConfig::new(&model, method, iterations, lr);
     cfg.clients = doc.i64_or("train.clients", 4) as usize;
+    // default: keep whatever TrainConfig::new resolved (SBC_PARALLELISM
+    // env override or 1); results are bit-identical at any setting
+    cfg.parallelism = doc.i64_or("train.parallelism", cfg.parallelism as i64).max(1) as usize;
     cfg.eval_every_rounds = doc.i64_or("train.eval_every_rounds", 10) as usize;
     cfg.eval_batches = doc.i64_or("train.eval_batches", 4) as usize;
     cfg.seed = doc.i64_or("seed", 42) as u64;
@@ -113,6 +116,7 @@ pub fn train_config_from_doc(doc: &Doc) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
+/// Read and parse a TOML config file into a [`TrainConfig`].
 pub fn load_train_config(path: &str) -> Result<TrainConfig> {
     let text = std::fs::read_to_string(path)?;
     train_config_from_doc(&Doc::parse(&text)?)
@@ -132,6 +136,7 @@ mod tests {
             iterations = 500
             lr = 0.001
             clients = 4
+            parallelism = 8
             decay_at = [300]
             [compression]
             method = "sbc"
@@ -147,6 +152,7 @@ mod tests {
         let cfg = train_config_from_doc(&doc).unwrap();
         assert_eq!(cfg.model, "lenet");
         assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.parallelism, 8);
         assert_eq!(cfg.method.delay, 20);
         assert!(cfg.method.momentum_masking);
         assert_eq!(cfg.pos_codec, PosCodec::Elias);

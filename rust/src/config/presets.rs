@@ -1,7 +1,6 @@
 //! Paper-faithful experiment presets (Table III hyperparameters, scaled
-//! to this sandbox — see DESIGN.md §2). Each preset returns the base
-//! TrainConfig for one model; benches/examples override iterations and
-//! method as needed.
+//! to this sandbox). Each preset returns the base TrainConfig for one
+//! model; benches/examples override iterations and method as needed.
 
 use crate::compression::registry::MethodConfig;
 use crate::coordinator::schedule::LrSchedule;

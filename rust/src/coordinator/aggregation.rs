@@ -1,7 +1,21 @@
-//! Server-side aggregation of decoded client updates (Alg. 1 lines 16-19).
+//! Server-side aggregation of decoded client updates (Alg. 1 lines 16-19),
+//! serial and sharded-parallel.
+//!
+//! # Determinism invariant
+//!
+//! The reduction order of floating-point sums is part of this module's
+//! contract: element `i` of the aggregate is always accumulated over
+//! clients in **client-index order** (`c = 0, 1, 2, …`), never in thread
+//! or arrival order. [`aggregate_sharded`] parallelizes over *parameter
+//! ranges* — each shard performs exactly the serial per-element fold on a
+//! disjoint slice of the output — so its result is bit-identical to
+//! [`aggregate_into`] at any thread count. The `prop_sharded_aggregate_*`
+//! proptests and the coordinator's `SBC_PARALLELISM` CI run enforce this
+//! bit-for-bit.
 
 use crate::compression::quantize::QuantizerCfg;
 use crate::compression::registry::MethodConfig;
+use crate::coordinator::pool::WorkerPool;
 
 /// How the server combines client updates.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -9,10 +23,15 @@ pub enum AggRule {
     /// Plain averaging (paper Alg. 1: ΔW = mean of client updates).
     Mean,
     /// signSGD majority vote: sign of the summed signs, times `scale`.
-    MajoritySign { scale: f32 },
+    MajoritySign {
+        /// Server step size applied per aggregated sign.
+        scale: f32,
+    },
 }
 
 impl AggRule {
+    /// The aggregation rule a method's stage composition calls for
+    /// (majority vote for sign quantizers, mean otherwise).
     pub fn for_method(cfg: &MethodConfig) -> AggRule {
         match cfg.quantizer {
             QuantizerCfg::Sign { scale } => AggRule::MajoritySign { scale },
@@ -21,23 +40,8 @@ impl AggRule {
     }
 }
 
-/// Aggregate densified updates into `out` (zeroed first) without
-/// allocating — the hot-path form; `updates` yields one dense slice per
-/// client.
-pub fn aggregate_into<'a, I>(updates: I, rule: AggRule, out: &mut [f32])
-where
-    I: IntoIterator<Item = &'a [f32]>,
-{
-    out.fill(0.0);
-    let mut count = 0usize;
-    for u in updates {
-        assert_eq!(u.len(), out.len());
-        for i in 0..out.len() {
-            out[i] += u[i];
-        }
-        count += 1;
-    }
-    assert!(count > 0, "aggregate of zero updates");
+/// Apply the post-sum reduction (mean scaling / majority sign) in place.
+fn apply_rule(rule: AggRule, count: usize, out: &mut [f32]) {
     match rule {
         AggRule::Mean => {
             let inv = 1.0 / count as f32;
@@ -59,6 +63,90 @@ where
     }
 }
 
+/// Aggregate densified updates into `out` (zeroed first) without
+/// allocating — the serial reference path; `updates` yields one dense
+/// slice per client, in client-index order.
+pub fn aggregate_into<'a, I>(updates: I, rule: AggRule, out: &mut [f32])
+where
+    I: IntoIterator<Item = &'a [f32]>,
+{
+    out.fill(0.0);
+    let mut count = 0usize;
+    for u in updates {
+        assert_eq!(u.len(), out.len());
+        for i in 0..out.len() {
+            out[i] += u[i];
+        }
+        count += 1;
+    }
+    assert!(count > 0, "aggregate of zero updates");
+    apply_rule(rule, count, out);
+}
+
+/// Indexed access to the round's densified client updates, `Sync` so
+/// shard workers can read any client's slice concurrently. Implemented
+/// for plain slice-of-slices (tests, benches) and by the trainer over its
+/// client list, which avoids collecting a per-round vector of references.
+pub trait UpdateSource: Sync {
+    /// Number of client updates this round.
+    fn count(&self) -> usize;
+
+    /// Client `i`'s densified update (same length for every client).
+    fn update(&self, i: usize) -> &[f32];
+}
+
+impl<'a> UpdateSource for [&'a [f32]] {
+    fn count(&self) -> usize {
+        self.len()
+    }
+
+    fn update(&self, i: usize) -> &[f32] {
+        self[i]
+    }
+}
+
+impl UpdateSource for [Vec<f32>] {
+    fn count(&self) -> usize {
+        self.len()
+    }
+
+    fn update(&self, i: usize) -> &[f32] {
+        &self[i]
+    }
+}
+
+/// Sharded tree aggregation: the pool splits the parameter range into
+/// disjoint contiguous shards (one per worker), each worker reduces every
+/// client's slice of its shard into the shard's partial sum, and the
+/// partials merge into `out` by construction (disjoint writes, position =
+/// shard offset).
+///
+/// Within a shard, clients are folded in client-index order — the exact
+/// order [`aggregate_into`] uses — so the result is **bit-identical to
+/// the serial path at any thread count**: shard boundaries change which
+/// worker computes an element, never the order of the additions that
+/// produce it.
+pub fn aggregate_sharded<U>(updates: &U, rule: AggRule, pool: &WorkerPool, out: &mut [f32])
+where
+    U: UpdateSource + ?Sized,
+{
+    let count = updates.count();
+    assert!(count > 0, "aggregate of zero updates");
+    for c in 0..count {
+        assert_eq!(updates.update(c).len(), out.len(), "client {c} update length mismatch");
+    }
+    pool.run_shards(out, |range, shard| {
+        shard.fill(0.0);
+        for c in 0..count {
+            let u = &updates.update(c)[range.clone()];
+            for (o, &v) in shard.iter_mut().zip(u) {
+                *o += v;
+            }
+        }
+        apply_rule(rule, count, shard);
+    });
+}
+
 /// Allocating convenience over [`aggregate_into`].
 pub fn aggregate(updates: &[Vec<f32>], rule: AggRule) -> Vec<f32> {
     assert!(!updates.is_empty());
@@ -70,6 +158,7 @@ pub fn aggregate(updates: &[Vec<f32>], rule: AggRule) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn mean_aggregation() {
@@ -100,5 +189,43 @@ mod tests {
         assert_eq!(AggRule::for_method(&MethodConfig::sbc1()), AggRule::Mean);
         let s = MethodConfig::signsgd(0.01);
         assert_eq!(AggRule::for_method(&s), AggRule::MajoritySign { scale: 0.01 });
+    }
+
+    #[test]
+    fn sharded_matches_serial_bit_for_bit() {
+        // adversarial values: wide magnitude spread so any reordering of
+        // the fold would actually flip low-order bits
+        let mut rng = Rng::new(0xA55);
+        for &(clients, n) in &[(1usize, 17usize), (3, 257), (7, 1000), (16, 64)] {
+            let updates: Vec<Vec<f32>> = (0..clients)
+                .map(|_| (0..n).map(|_| rng.normal() * 10f32.powi(rng.below(9) as i32 - 4)).collect())
+                .collect();
+            for rule in [AggRule::Mean, AggRule::MajoritySign { scale: 0.25 }] {
+                let mut serial = vec![0.0f32; n];
+                aggregate_into(updates.iter().map(|u| u.as_slice()), rule, &mut serial);
+                for threads in [1usize, 2, 3, 8, 64] {
+                    let pool = WorkerPool::new(threads);
+                    let mut parallel = vec![1.0f32; n]; // dirty buffer on purpose
+                    aggregate_sharded(&updates[..], rule, &pool, &mut parallel);
+                    let a: Vec<u32> = serial.iter().map(|v| v.to_bits()).collect();
+                    let b: Vec<u32> = parallel.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(a, b, "clients={clients} n={n} threads={threads} rule={rule:?}");
+                    // the slice-of-slices UpdateSource must agree too
+                    let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+                    let mut via_refs = vec![f32::NAN; n];
+                    aggregate_sharded(&refs[..], rule, &pool, &mut via_refs);
+                    let c: Vec<u32> = via_refs.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(a, c, "slice-of-slices source diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "zero updates")]
+    fn sharded_rejects_empty() {
+        let pool = WorkerPool::new(2);
+        let updates: Vec<Vec<f32>> = vec![];
+        aggregate_sharded(&updates[..], AggRule::Mean, &pool, &mut [0.0f32; 4]);
     }
 }

@@ -2,13 +2,22 @@
 //! including the per-client scratch the hot loop reuses across rounds so
 //! compression, wire encode/decode and residual densification perform no
 //! steady-state heap allocation.
+//!
+//! A `ClientState` is self-contained and `Send`: under a pooled round
+//! loop ([`crate::coordinator::pool::WorkerPool`]) each worker takes
+//! exclusive `&mut` access to its chunk of clients, and the coordinator
+//! reads the per-round outputs (`round_loss` / `round_bits` /
+//! `round_nnz`) back on the main thread in client-index order, which
+//! keeps accounting and logging deterministic at any parallelism.
 
 use crate::codec::message::{PosCodec, WireCodec};
 use crate::compression::residual::Residual;
 use crate::compression::{Pipeline, UpdateMsg};
 use crate::util::rng::Rng;
 
+/// All state one simulated client owns across a training run.
 pub struct ClientState {
+    /// Stable client index (shard selection, RNG stream derivation).
     pub id: usize,
     /// Flat optimizer state, layout identical to the L2 graphs'.
     pub opt: Vec<f32>,
@@ -33,9 +42,18 @@ pub struct ClientState {
     pub rng: Rng,
     /// Cumulative upstream bits this client has sent.
     pub up_bits: u64,
+    /// Mean training loss of the most recent round (worker output; read
+    /// back by the coordinator in client-index order).
+    pub round_loss: f32,
+    /// Wire bits this client sent in the most recent round.
+    pub round_bits: u64,
+    /// Non-zero elements this client transmitted in the most recent round.
+    pub round_nnz: u64,
 }
 
 impl ClientState {
+    /// Build the state for client `id`, deriving its RNG stream from the
+    /// run's root RNG.
     pub fn new(
         id: usize,
         n_params: usize,
@@ -58,6 +76,9 @@ impl ClientState {
             iterations: 0,
             rng: root_rng.child(0x1000 + id as u64),
             up_bits: 0,
+            round_loss: 0.0,
+            round_bits: 0,
+            round_nnz: 0,
         }
     }
 }
@@ -78,6 +99,7 @@ mod tests {
         assert!(c.residual.enabled());
         assert_eq!(c.pipeline.name(), "sbc");
         assert_eq!(c.wire.pos_codec(), PosCodec::Golomb);
+        assert_eq!((c.round_loss, c.round_bits, c.round_nnz), (0.0, 0, 0));
     }
 
     #[test]
@@ -87,5 +109,11 @@ mod tests {
         let mut a = ClientState::new(0, 4, 1, false, cfg.build(0), PosCodec::Golomb, &root);
         let mut b = ClientState::new(1, 4, 1, false, cfg.build(0), PosCodec::Golomb, &root);
         assert_ne!(a.rng.next_u64(), b.rng.next_u64());
+    }
+
+    #[test]
+    fn client_state_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<ClientState>();
     }
 }

@@ -1,11 +1,22 @@
 //! DSGD coordinator (paper Algorithm 1): synchronous rounds with
 //! communication delay, per-client residuals and momentum, the staged
 //! compression pipeline over bit-true wire encode/decode in both
-//! directions (client updates up, broadcast aggregate down), server
-//! aggregation, evaluation and logging.
+//! directions (client updates up, broadcast aggregate down), sharded
+//! server aggregation, evaluation and logging.
+//!
+//! The round loop is **thread-pooled**: with
+//! [`trainer::TrainConfig::parallelism`] > 1, per-client work (local
+//! steps → compress → wire encode/decode → densify → residual) runs on a
+//! scoped worker pool ([`pool::WorkerPool`]), each worker owning a forked
+//! backend ([`TrainBackend::fork`]) and its own accumulator scratch, and
+//! the server reduces decoded updates with sharded aggregation
+//! ([`aggregation::aggregate_sharded`]). Results are bit-identical to the
+//! serial loop at any thread count — see `ARCHITECTURE.md` §Determinism
+//! for the invariants that make that hold.
 
 pub mod aggregation;
 pub mod client;
+pub mod pool;
 pub mod schedule;
 pub mod trainer;
 
@@ -16,7 +27,9 @@ use crate::util::rng::Rng;
 /// classifiers, perplexity for LMs — see [`crate::model::Task`]).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EvalOut {
+    /// Mean held-out loss.
     pub loss: f32,
+    /// Accuracy for classifiers, perplexity for LMs.
     pub metric: f32,
 }
 
@@ -28,8 +41,11 @@ pub struct EvalOut {
 /// coordinator owns all distributed state (master weights, residuals,
 /// per-client optimizer state, compression, accounting).
 pub trait TrainBackend {
+    /// Flat parameter-vector length.
     fn n_params(&self) -> usize;
+    /// Flat optimizer-state length (see [`crate::sgd::Optimizer`]).
     fn opt_size(&self) -> usize;
+    /// Tensor layout of the flat parameter vector.
     fn layout(&self) -> &TensorLayout;
     /// Accuracy-type or perplexity-type metric?
     fn is_lm(&self) -> bool;
@@ -60,4 +76,38 @@ pub trait TrainBackend {
     fn compress_pjrt(&mut self, _delta: &[f32], _p: f32) -> Option<(Vec<f32>, f32, f32, bool)> {
         None
     }
+
+    /// Fork an independent worker instance for thread-pooled client
+    /// rounds ([`trainer::TrainConfig::parallelism`]).
+    ///
+    /// A fork must produce bit-identical [`WorkerBackend::local_steps`]
+    /// results to `self` for the same inputs: the dataset and model
+    /// definition are shared (or deterministically replicated), while
+    /// internal scratch is private to the fork. Backends that cannot be
+    /// replicated — e.g. a backend bound to a single PJRT device — keep
+    /// the default `None`, and the coordinator falls back to the serial
+    /// loop.
+    fn fork(&self) -> Option<Box<dyn WorkerBackend>> {
+        None
+    }
+}
+
+/// The slice of [`TrainBackend`] a pool worker needs: local training
+/// only. Compression, wire coding and densification live in per-client
+/// state ([`client::ClientState`]) and need no backend. `Send` because
+/// forks move onto scoped worker threads; the coordinator never shares
+/// one fork between two workers.
+pub trait WorkerBackend: Send {
+    /// Same contract as [`TrainBackend::local_steps`].
+    #[allow(clippy::too_many_arguments)]
+    fn local_steps(
+        &mut self,
+        params: &[f32],
+        opt: &mut [f32],
+        steps: usize,
+        lr: f32,
+        t0: usize,
+        client: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, f32);
 }

@@ -1,0 +1,183 @@
+//! Fork-join worker pool for the coordinator's round loop.
+//!
+//! [`WorkerPool`] is a *scoped* pool built on [`std::thread::scope`]: each
+//! parallel region spawns its workers, joins them before returning, and
+//! borrows the data it operates on directly — no `Arc`, no channels, no
+//! `'static` bounds, no dependencies beyond `std`. With `parallelism = 1`
+//! (the default) every region runs inline on the caller's thread, so the
+//! serial path is the parallel path with one worker rather than a separate
+//! code path.
+//!
+//! # Determinism invariants
+//!
+//! Nothing observable may depend on the thread schedule. The two region
+//! shapes below guarantee that structurally:
+//!
+//! * [`WorkerPool::for_each`] gives each job exclusive `&mut` access to
+//!   its own state. Jobs share no mutable state, so the schedule cannot
+//!   influence any result; the caller reads the outputs back in job-index
+//!   order after the join.
+//! * [`WorkerPool::run_shards`] splits one output slice into disjoint
+//!   contiguous shards. Shard boundaries are a pure function of the slice
+//!   length and the worker count, and each element is written by exactly
+//!   one worker — so as long as the per-element computation itself is
+//!   deterministic (see [`crate::coordinator::aggregation`], which reduces
+//!   every element in client-index order), the result is bit-identical at
+//!   any thread count.
+
+/// A scoped fork-join thread pool of fixed width.
+///
+/// Construction is free (no threads are kept alive between regions); each
+/// call to [`WorkerPool::for_each`] / [`WorkerPool::run_shards`] spawns at
+/// most `parallelism` scoped threads and joins them before returning.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerPool {
+    parallelism: usize,
+}
+
+impl WorkerPool {
+    /// A pool running `parallelism` concurrent workers per region
+    /// (clamped to at least 1; 1 means strictly inline execution).
+    pub fn new(parallelism: usize) -> WorkerPool {
+        WorkerPool { parallelism: parallelism.max(1) }
+    }
+
+    /// Worker count per parallel region.
+    pub fn parallelism(&self) -> usize {
+        self.parallelism
+    }
+
+    /// Whether this pool runs everything inline on the caller's thread.
+    pub fn is_serial(&self) -> bool {
+        self.parallelism == 1
+    }
+
+    /// Contiguous chunk length that splits `len` items into at most
+    /// `parallelism` chunks (the chunking used by the trainer to assign
+    /// clients to workers).
+    pub fn chunk_len(&self, len: usize) -> usize {
+        len.div_ceil(self.parallelism).max(1)
+    }
+
+    /// Run `f(job_index, job)` for every job, concurrently when the pool
+    /// is parallel. Callers pass at most one job per worker (see
+    /// [`WorkerPool::chunk_len`]); each job owns its state exclusively,
+    /// which is what makes the schedule unobservable.
+    pub fn for_each<J, F>(&self, jobs: &mut [J], f: F)
+    where
+        J: Send,
+        F: Fn(usize, &mut J) + Sync,
+    {
+        if self.parallelism == 1 || jobs.len() <= 1 {
+            for (i, job) in jobs.iter_mut().enumerate() {
+                f(i, job);
+            }
+            return;
+        }
+        debug_assert!(
+            jobs.len() <= self.parallelism,
+            "for_each spawns one thread per job: pass at most `parallelism` jobs \
+             (chunk the work with chunk_len), got {} jobs for {} workers",
+            jobs.len(),
+            self.parallelism
+        );
+        std::thread::scope(|s| {
+            for (i, job) in jobs.iter_mut().enumerate() {
+                let f = &f;
+                s.spawn(move || f(i, job));
+            }
+        });
+    }
+
+    /// Split `out` into at most `parallelism` disjoint contiguous shards
+    /// and run `f(global_range, shard)` on each, concurrently when the
+    /// pool is parallel. Shard boundaries depend only on `out.len()` and
+    /// the worker count — and since every element belongs to exactly one
+    /// shard, a deterministic `f` yields bit-identical output at any
+    /// parallelism.
+    pub fn run_shards<F>(&self, out: &mut [f32], f: F)
+    where
+        F: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
+    {
+        let n = out.len();
+        if self.parallelism == 1 || n <= 1 {
+            f(0..n, out);
+            return;
+        }
+        let shard_len = n.div_ceil(self.parallelism);
+        std::thread::scope(|s| {
+            for (i, shard) in out.chunks_mut(shard_len).enumerate() {
+                let f = &f;
+                let start = i * shard_len;
+                s.spawn(move || f(start..start + shard.len(), shard));
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert!(pool.is_serial());
+        let main_thread = std::thread::current().id();
+        let mut jobs = vec![0usize; 4];
+        pool.for_each(&mut jobs, |i, j| {
+            assert_eq!(std::thread::current().id(), main_thread);
+            *j = i + 1;
+        });
+        assert_eq!(jobs, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_for_each_reaches_every_job() {
+        let pool = WorkerPool::new(4);
+        let mut jobs: Vec<usize> = vec![0; 7];
+        pool.for_each(&mut jobs, |i, j| *j = i * 10);
+        assert_eq!(jobs, vec![0, 10, 20, 30, 40, 50, 60]);
+    }
+
+    #[test]
+    fn run_shards_covers_whole_range_once() {
+        for threads in [1, 2, 3, 8] {
+            let pool = WorkerPool::new(threads);
+            let mut out = vec![0.0f32; 37];
+            pool.run_shards(&mut out, |range, shard| {
+                assert_eq!(range.len(), shard.len());
+                for (off, v) in shard.iter_mut().enumerate() {
+                    // each element written exactly once with its own index
+                    assert_eq!(*v, 0.0);
+                    *v = (range.start + off) as f32;
+                }
+            });
+            let want: Vec<f32> = (0..37).map(|i| i as f32).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_shards_empty_slice() {
+        let pool = WorkerPool::new(8);
+        let mut out: Vec<f32> = vec![];
+        pool.run_shards(&mut out, |range, shard| {
+            assert_eq!(range, 0..0);
+            assert!(shard.is_empty());
+        });
+    }
+
+    #[test]
+    fn chunk_len_bounds_worker_count() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.chunk_len(8), 2);
+        assert_eq!(pool.chunk_len(9), 3);
+        assert_eq!(pool.chunk_len(3), 1);
+        assert_eq!(pool.chunk_len(0), 1);
+        // at most `parallelism` chunks for any length
+        for len in 1..64usize {
+            assert!(len.div_ceil(pool.chunk_len(len)) <= 4, "len={len}");
+        }
+    }
+}

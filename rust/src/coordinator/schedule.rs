@@ -2,8 +2,10 @@
 //! iteration milestones). Schedules are evaluated on *local iterations*,
 //! matching the paper's iteration-count axis.
 
+/// Stepwise learning-rate decay schedule.
 #[derive(Clone, Debug)]
 pub struct LrSchedule {
+    /// Learning rate before the first milestone.
     pub base: f32,
     /// Multiplicative factor applied at each milestone.
     pub decay: f32,
@@ -12,14 +14,17 @@ pub struct LrSchedule {
 }
 
 impl LrSchedule {
+    /// A constant learning rate.
     pub fn constant(base: f32) -> Self {
         LrSchedule { base, decay: 1.0, milestones: vec![] }
     }
 
+    /// `base`, multiplied by `decay` at each milestone iteration.
     pub fn step(base: f32, decay: f32, milestones: Vec<usize>) -> Self {
         LrSchedule { base, decay, milestones }
     }
 
+    /// The learning rate at a local-iteration count.
     pub fn at(&self, iteration: usize) -> f32 {
         let hits = self.milestones.iter().filter(|&&m| iteration >= m).count();
         self.base * self.decay.powi(hits as i32)

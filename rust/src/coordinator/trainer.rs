@@ -9,10 +9,28 @@
 //! synchronizes. All reported bits — upstream *and* downstream — are
 //! measured on the encoded messages.
 //!
-//! The round loop is allocation-free in steady state: each client owns
-//! reusable scratch (message, decode target, densified update, encode
-//! buffer — see [`ClientState`]), and the server reuses its aggregate,
-//! broadcast-message and broadcast-decode buffers across rounds.
+//! # Thread-pooled rounds
+//!
+//! With [`TrainConfig::parallelism`] > 1 the per-client phase (local
+//! steps → compress → wire → densify → residual) runs on a scoped
+//! [`WorkerPool`]: clients are split into contiguous chunks, each chunk
+//! is driven by one worker owning a forked backend
+//! ([`TrainBackend::fork`]) and a private accumulator, and the server
+//! reduces the decoded updates with sharded aggregation
+//! ([`aggregate_sharded`]). Per-client outputs (loss, wire bits,
+//! non-zeros) are written into each [`ClientState`] and read back on the
+//! main thread in client-index order, so accounting, logging and the
+//! float reductions are **bit-identical to the serial loop at any thread
+//! count**. Backends that cannot fork (single PJRT device, or the
+//! `--pjrt-compress` kernel route) fall back to the serial path.
+//!
+//! The round loop is allocation-free in steady state on the per-client
+//! path: each client owns reusable scratch (message, decode target,
+//! densified update, encode buffer — see [`ClientState`]), each worker
+//! owns its accumulator, and the server reuses its aggregate,
+//! broadcast-message and broadcast-decode buffers across rounds. (The
+//! pooled path allocates one small job vector per round — worker-count
+//! entries, not parameter-sized.)
 
 use std::time::Instant;
 
@@ -22,39 +40,73 @@ use crate::compression::momentum_mask::mask_momentum;
 use crate::compression::pipeline::compress_broadcast_into;
 use crate::compression::registry::MethodConfig;
 use crate::compression::{Granularity, TensorUpdate, UpdateMsg};
-use crate::coordinator::aggregation::{aggregate_into, AggRule};
+use crate::coordinator::aggregation::{aggregate_sharded, AggRule, UpdateSource};
 use crate::coordinator::client::ClientState;
+use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::schedule::LrSchedule;
-use crate::coordinator::TrainBackend;
+use crate::coordinator::{TrainBackend, WorkerBackend};
 use crate::metrics::{CurvePoint, RunLog};
-use crate::model::Task;
+use crate::model::{Task, TensorLayout};
 use crate::netsim::{Link, NetSim};
 use crate::util::rng::Rng;
 use crate::util::tensor;
 use crate::util::timer::span;
 
+/// Default round-loop parallelism: the `SBC_PARALLELISM` environment
+/// variable when set to a positive integer, else 1 (serial). The env
+/// override lets CI run the entire unchanged test suite through the
+/// pooled path — results are bit-identical by construction.
+fn default_parallelism() -> usize {
+    std::env::var("SBC_PARALLELISM")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&p| p >= 1)
+        .unwrap_or(1)
+}
+
+/// Everything one training run needs to know (model, method, schedule,
+/// clients, links, knobs). Built directly, via
+/// [`crate::config::train_config_from_doc`] (TOML), or from
+/// [`crate::config::presets`].
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Model name (artifact lookup for PJRT, label for logs).
     pub model: String,
+    /// The compression method (stage composition + coordinator knobs).
     pub method: MethodConfig,
+    /// Number of simulated clients.
     pub clients: usize,
     /// Total local iterations per client (paper's x-axis). Rounds =
     /// iterations / delay.
     pub iterations: usize,
+    /// Learning-rate schedule, evaluated on local iterations.
     pub lr: LrSchedule,
     /// Evaluate every this many *rounds* (also logs a curve point).
     pub eval_every_rounds: usize,
+    /// Held-out batches per evaluation.
     pub eval_batches: usize,
+    /// Root seed: init, data order, stochastic stages all derive from it.
     pub seed: u64,
+    /// Position-list codec for sparse tensors on the wire.
     pub pos_codec: PosCodec,
     /// Route SBC compression through the AOT Pallas graph when available.
     pub use_pjrt_compress: bool,
+    /// Client→server link model.
     pub uplink: Link,
+    /// Server→client link model.
     pub downlink: Link,
+    /// Print per-eval progress lines to stderr.
     pub verbose: bool,
+    /// Worker threads for the round loop (1 = serial). Any value yields
+    /// bit-identical results — see the module docs and
+    /// `ARCHITECTURE.md` §Determinism. Defaults to `SBC_PARALLELISM`
+    /// from the environment, else 1.
+    pub parallelism: usize,
 }
 
 impl TrainConfig {
+    /// A config with the paper's defaults (4 clients, WiFi links, Golomb
+    /// positions, eval every 10 rounds).
     pub fn new(model: &str, method: MethodConfig, iterations: usize, lr: LrSchedule) -> Self {
         TrainConfig {
             model: model.to_string(),
@@ -70,28 +122,140 @@ impl TrainConfig {
             uplink: Link::wifi(),
             downlink: Link::wifi(),
             verbose: false,
+            parallelism: default_parallelism(),
         }
     }
 }
 
 /// Result of one training run.
 pub struct TrainResult {
+    /// The training curve plus summary fields.
     pub log: RunLog,
+    /// Measured communication counters (wire bits, messages, baseline).
     pub comm: CommStats,
+    /// Per-client simulated network totals.
     pub net: NetSim,
+    /// Final master weights.
     pub final_params: Vec<f32>,
 }
 
+/// Drives one full distributed training over a [`TrainBackend`].
 pub struct Trainer<'a, B: TrainBackend> {
+    /// The training substrate (dataset + model execution).
     pub backend: &'a mut B,
+    /// The run configuration.
     pub cfg: TrainConfig,
 }
 
+/// Round-constant context shared (immutably) by the serial loop and all
+/// pool workers.
+#[derive(Clone, Copy)]
+struct RoundCtx<'a> {
+    layout: &'a TensorLayout,
+    master: &'a [f32],
+    round: u32,
+    lr: f32,
+    delay: usize,
+    densify_gran: Granularity,
+    sign_scale: f32,
+    momentum_masking: bool,
+    majority_vote: bool,
+}
+
+/// One pool worker: a forked backend plus the accumulator scratch that
+/// replaces the serial loop's shared buffer.
+struct PoolWorker {
+    backend: Box<dyn WorkerBackend>,
+    acc: Vec<f32>,
+}
+
+/// The trainer's zero-copy view of the round's densified client updates
+/// for sharded aggregation.
+struct ClientUpdates<'a>(&'a [ClientState]);
+
+impl UpdateSource for ClientUpdates<'_> {
+    fn count(&self) -> usize {
+        self.0.len()
+    }
+
+    fn update(&self, i: usize) -> &[f32] {
+        &self.0[i].dense
+    }
+}
+
+/// One client's complete round, given a way to run its local steps
+/// (`local_steps(c, master)` → (new_params, loss)): local training,
+/// accumulate (residual + fresh delta), compress through the pipeline,
+/// then [`finish_client_round`]. Shared by the serial branch and every
+/// pool worker so the two phase-1 paths cannot drift — the PJRT
+/// kernel-compress route is the one remaining serial-only body.
+fn run_client_round(
+    ctx: &RoundCtx,
+    c: &mut ClientState,
+    acc: &mut [f32],
+    local_steps: &mut dyn FnMut(&mut ClientState, &[f32]) -> (Vec<f32>, f32),
+) {
+    let (w_new, loss) = {
+        let _t = span("local_steps");
+        local_steps(c, ctx.master)
+    };
+    c.iterations += ctx.delay;
+    {
+        let _t = span("compress");
+        tensor::sub_into(acc, &w_new, ctx.master);
+        c.residual.accumulate_into(acc);
+        c.pipeline.compress_into(acc, ctx.layout, ctx.round, &mut c.msg);
+    }
+    finish_client_round(ctx, c, acc, loss);
+}
+
+/// Everything after a client's message is in `c.msg`: wire encode +
+/// decode (the bits that actually cross), server-side densify into the
+/// client's reusable buffer, residual update against exactly what was
+/// decoded, momentum masking, and the majority-vote sign reduction.
+/// Writes the round outputs (`round_loss`/`round_bits`/`round_nnz`) into
+/// `c`; the coordinator reads them back in client-index order.
+fn finish_client_round(ctx: &RoundCtx, c: &mut ClientState, acc: &[f32], loss: f32) {
+    let nnz: usize = c.msg.tensors.iter().map(|t| t.nonzeros()).sum();
+    let bits = {
+        let (bytes, bits) = {
+            let _t = span("encode");
+            c.wire.encode(&c.msg)
+        };
+        let _t = span("decode");
+        message::decode_into(bytes, bits, &mut c.decoded).expect("wire roundtrip failed");
+        bits
+    };
+    c.up_bits += bits;
+    c.round_bits = bits;
+    c.round_nnz = nnz as u64;
+    c.round_loss = loss;
+
+    {
+        let _t = span("densify");
+        c.decoded.densify_into(ctx.layout, ctx.densify_gran, ctx.sign_scale, &mut c.dense);
+    }
+    c.residual.update(acc, &c.dense);
+
+    if ctx.momentum_masking {
+        tensor::nonzero_indices_into(&c.dense, &mut c.mask_idx);
+        mask_momentum(&mut c.opt, acc.len(), &c.mask_idx);
+    }
+    if ctx.majority_vote {
+        // majority vote wants raw ±1 votes, not ±scale
+        for v in c.dense.iter_mut() {
+            *v = v.signum();
+        }
+    }
+}
+
 impl<'a, B: TrainBackend> Trainer<'a, B> {
+    /// Pair a backend with a config.
     pub fn new(backend: &'a mut B, cfg: TrainConfig) -> Self {
         Trainer { backend, cfg }
     }
 
+    /// Run the full training from freshly initialized parameters.
     pub fn run(&mut self) -> TrainResult {
         let seed = self.cfg.seed;
         let init = self.backend.init_params(seed);
@@ -126,6 +290,7 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
             .collect();
 
         let agg_rule = AggRule::for_method(&cfg.method);
+        let majority_vote = matches!(agg_rule, AggRule::MajoritySign { .. });
         let sign_scale = cfg.method.sign_scale();
         let delay = cfg.method.delay;
         let rounds = (cfg.iterations / delay).max(1);
@@ -143,8 +308,44 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
         let densify_gran =
             if is_sbc_pjrt { Granularity::Global } else { cfg.method.granularity };
 
-        // round-persistent scratch: client accumulator, server aggregate,
-        // broadcast wire buffers — allocated once, reused every round
+        // the worker pool: clients split into at most `parallelism`
+        // chunks, each driven by a backend fork; empty `workers` means
+        // the serial path (parallelism 1, un-forkable backend, or the
+        // PJRT kernel-compress route, which is bound to the main backend)
+        let pool = WorkerPool::new(cfg.parallelism.min(cfg.clients.max(1)));
+        let mut workers: Vec<PoolWorker> = Vec::new();
+        if !pool.is_serial() && !is_sbc_pjrt {
+            for _ in 0..pool.parallelism() {
+                match self.backend.fork() {
+                    Some(backend) => workers.push(PoolWorker { backend, acc: vec![0.0f32; n] }),
+                    None => {
+                        workers.clear();
+                        break;
+                    }
+                }
+            }
+            if workers.is_empty() && cfg.verbose {
+                eprintln!(
+                    "[{}] backend cannot fork; running the round loop serially",
+                    cfg.method.label()
+                );
+            }
+        }
+        // aggregation shards with the same pool — unless phase 1 fell
+        // back to serial, or the model is small enough that per-round
+        // thread spawns cost more than the reduction itself. The result
+        // is bit-identical either way (same per-element fold); this is
+        // spawn cost only.
+        const SHARDING_MIN_PARAMS: usize = 1 << 14;
+        let agg_pool = if workers.is_empty() || n < SHARDING_MIN_PARAMS {
+            WorkerPool::new(1)
+        } else {
+            pool
+        };
+
+        // round-persistent scratch: client accumulator (serial path),
+        // server aggregate, broadcast wire buffers — allocated once,
+        // reused every round
         let mut acc = vec![0.0f32; n];
         let mut delta = vec![0.0f32; n];
         let mut delta_rx = vec![0.0f32; n];
@@ -155,98 +356,114 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
 
         for round in 0..rounds {
             let lr = cfg.lr.at(round * delay);
-            let mut train_loss = 0.0f32;
 
-            for ci in 0..cfg.clients {
-                // --- local training ---------------------------------
-                let (w_new, loss) = {
-                    let _t = span("local_steps");
-                    let c = &mut clients[ci];
-                    self.backend.local_steps(
-                        &master,
-                        &mut c.opt,
-                        delay,
-                        lr,
-                        c.iterations,
-                        ci,
-                        &mut c.rng,
-                    )
+            // --- phase 1: per-client local training + compress + wire ---
+            {
+                let ctx = RoundCtx {
+                    layout: &layout,
+                    master: &master,
+                    round: round as u32,
+                    lr,
+                    delay,
+                    densify_gran,
+                    sign_scale,
+                    momentum_masking: cfg.method.momentum_masking,
+                    majority_vote,
                 };
-                train_loss += loss;
-                let c = &mut clients[ci];
-                c.iterations += delay;
-                for _ in 0..delay {
-                    comm.record_baseline_iter(n);
-                }
-
-                // --- accumulate + compress --------------------------
-                {
-                    let _t = span("compress");
-                    tensor::sub_into(&mut acc, &w_new, &master);
-                    c.residual.accumulate_into(&mut acc);
-                }
-                if is_sbc_pjrt {
-                    // route through the AOT Pallas kernel graph
-                    let p = cfg.method.sbc_p().unwrap() as f32;
-                    let _t = span("compress_pjrt");
-                    let (dense, _thr, mu, side_pos) = self
-                        .backend
-                        .compress_pjrt(&acc, p)
-                        .expect("backend has no pjrt compress graph");
-                    c.msg.round = round as u32;
-                    c.msg.tensors.truncate(1);
-                    if c.msg.tensors.is_empty() {
-                        c.msg.tensors.push(TensorUpdate::placeholder());
+                if workers.is_empty() && is_sbc_pjrt {
+                    // serial-only: SBC through the AOT Pallas kernel
+                    // graph, which is bound to the main backend
+                    for c in clients.iter_mut() {
+                        let (w_new, loss) = {
+                            let _t = span("local_steps");
+                            self.backend.local_steps(
+                                ctx.master,
+                                &mut c.opt,
+                                delay,
+                                lr,
+                                c.iterations,
+                                c.id,
+                                &mut c.rng,
+                            )
+                        };
+                        c.iterations += delay;
+                        {
+                            let _t = span("compress");
+                            tensor::sub_into(&mut acc, &w_new, ctx.master);
+                            c.residual.accumulate_into(&mut acc);
+                        }
+                        let p = cfg.method.sbc_p().unwrap() as f32;
+                        {
+                            let _t = span("compress_pjrt");
+                            let (dense, _thr, mu, side_pos) = self
+                                .backend
+                                .compress_pjrt(&acc, p)
+                                .expect("backend has no pjrt compress graph");
+                            c.msg.round = round as u32;
+                            c.msg.tensors.truncate(1);
+                            if c.msg.tensors.is_empty() {
+                                c.msg.tensors.push(TensorUpdate::placeholder());
+                            }
+                            let (idx, mu_slot, side) = c.msg.tensors[0].sparse_binary_slot();
+                            tensor::nonzero_indices_into(&dense, idx);
+                            *mu_slot = mu.abs();
+                            *side = side_pos;
+                        }
+                        finish_client_round(&ctx, c, &acc, loss);
                     }
-                    let (idx, mu_slot, side) = c.msg.tensors[0].sparse_binary_slot();
-                    tensor::nonzero_indices_into(&dense, idx);
-                    *mu_slot = mu.abs();
-                    *side = side_pos;
+                } else if workers.is_empty() {
+                    let backend = &mut *self.backend;
+                    for c in clients.iter_mut() {
+                        run_client_round(&ctx, c, &mut acc, &mut |c, master| {
+                            backend.local_steps(
+                                master,
+                                &mut c.opt,
+                                delay,
+                                lr,
+                                c.iterations,
+                                c.id,
+                                &mut c.rng,
+                            )
+                        });
+                    }
                 } else {
-                    let _t = span("compress");
-                    c.pipeline.compress_into(&acc, &layout, round as u32, &mut c.msg);
-                }
-
-                // --- wire: the bits that actually cross, both ways ---
-                let nnz: usize = c.msg.tensors.iter().map(|t| t.nonzeros()).sum();
-                let bits = {
-                    let (bytes, bits) = {
-                        let _t = span("encode");
-                        c.wire.encode(&c.msg)
-                    };
-                    let _t = span("decode");
-                    message::decode_into(bytes, bits, &mut c.decoded)
-                        .expect("wire roundtrip failed");
-                    bits
-                };
-                comm.record_message(bits, nnz as u64);
-                c.up_bits += bits;
-                round_up_bits[ci] = bits;
-
-                // --- server-side densify into the client's reusable
-                // buffer; residual vs exactly what was decoded ---------
-                {
-                    let _t = span("densify");
-                    c.decoded.densify_into(&layout, densify_gran, sign_scale, &mut c.dense);
-                }
-                c.residual.update(&acc, &c.dense);
-
-                if cfg.method.momentum_masking {
-                    tensor::nonzero_indices_into(&c.dense, &mut c.mask_idx);
-                    mask_momentum(&mut c.opt, n, &c.mask_idx);
-                }
-                if matches!(agg_rule, AggRule::MajoritySign { .. }) {
-                    // majority vote wants raw ±1 votes, not ±scale
-                    for v in c.dense.iter_mut() {
-                        *v = v.signum();
-                    }
+                    let chunk_len = pool.chunk_len(clients.len());
+                    let mut jobs: Vec<(&mut [ClientState], &mut PoolWorker)> =
+                        clients.chunks_mut(chunk_len).zip(workers.iter_mut()).collect();
+                    pool.for_each(&mut jobs, |_, (chunk, w)| {
+                        let PoolWorker { backend, acc } = &mut **w;
+                        for c in chunk.iter_mut() {
+                            run_client_round(&ctx, c, acc, &mut |c, master| {
+                                backend.local_steps(
+                                    master,
+                                    &mut c.opt,
+                                    ctx.delay,
+                                    ctx.lr,
+                                    c.iterations,
+                                    c.id,
+                                    &mut c.rng,
+                                )
+                            });
+                        }
+                    });
                 }
             }
 
-            // --- server aggregation + bit-true broadcast --------------
+            // --- deterministic read-back: accounting in client order ----
+            let mut train_loss = 0.0f32;
+            for (ci, c) in clients.iter().enumerate() {
+                for _ in 0..delay {
+                    comm.record_baseline_iter(n);
+                }
+                comm.record_message(c.round_bits, c.round_nnz);
+                round_up_bits[ci] = c.round_bits;
+                train_loss += c.round_loss;
+            }
+
+            // --- phase 2: sharded server aggregation --------------------
             {
                 let _t = span("aggregate");
-                aggregate_into(clients.iter().map(|c| c.dense.as_slice()), agg_rule, &mut delta);
+                aggregate_sharded(&ClientUpdates(&clients), agg_rule, &agg_pool, &mut delta);
             }
             // downstream: re-encode the aggregate exactly as it goes on
             // the wire (sparse when the union support is small, dense
@@ -311,6 +528,7 @@ pub fn better(task: Task, a: f32, b: f32) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::EvalOut;
     use crate::sgd::NativeMlpBackend;
 
     fn tiny_backend() -> NativeMlpBackend {
@@ -318,10 +536,15 @@ mod tests {
     }
 
     fn run(method: MethodConfig, iters: usize) -> TrainResult {
+        run_par(method, iters, 1)
+    }
+
+    fn run_par(method: MethodConfig, iters: usize, parallelism: usize) -> TrainResult {
         let mut be = tiny_backend();
         let mut cfg = TrainConfig::new("mlp-small", method, iters, LrSchedule::constant(0.1));
         cfg.eval_every_rounds = 50;
         cfg.eval_batches = 2;
+        cfg.parallelism = parallelism;
         Trainer::new(&mut be, cfg).run()
     }
 
@@ -382,5 +605,94 @@ mod tests {
             sparse_down < dense_down / 4,
             "sparse broadcast {sparse_down} vs dense {dense_down}"
         );
+    }
+
+    /// The tentpole invariant: pooled rounds + sharded aggregation are
+    /// bit-identical to the serial loop, for methods covering mean and
+    /// majority-vote aggregation, residuals, momentum masking and delay.
+    #[test]
+    fn parallel_rounds_bit_identical_to_serial() {
+        for method in [
+            MethodConfig::sbc2(),
+            MethodConfig::signsgd(1e-3),
+            MethodConfig::gradient_dropping(),
+        ] {
+            let serial = run_par(method.clone(), 40, 1);
+            for threads in [2usize, 3, 8] {
+                let par = run_par(method.clone(), 40, threads);
+                let a: Vec<u32> = serial.final_params.iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = par.final_params.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "{} threads={threads}", method.label());
+                assert_eq!(serial.comm.upstream_bits, par.comm.upstream_bits);
+                assert_eq!(serial.comm.nonzeros, par.comm.nonzeros);
+                assert_eq!(serial.net.total_up_bits(), par.net.total_up_bits());
+                for (ps, pp) in serial.log.points.iter().zip(&par.log.points) {
+                    assert_eq!(ps.train_loss.to_bits(), pp.train_loss.to_bits());
+                    assert_eq!(ps.metric.to_bits(), pp.metric.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallelism_beyond_client_count_is_clamped() {
+        let serial = run_par(MethodConfig::sbc1(), 20, 1);
+        let par = run_par(MethodConfig::sbc1(), 20, 64); // 4 clients only
+        assert_eq!(serial.final_params, par.final_params);
+    }
+
+    /// A backend that refuses to fork must fall back to the serial loop
+    /// (and still produce identical results).
+    struct NoFork(NativeMlpBackend);
+
+    impl TrainBackend for NoFork {
+        fn n_params(&self) -> usize {
+            self.0.n_params()
+        }
+        fn opt_size(&self) -> usize {
+            self.0.opt_size()
+        }
+        fn layout(&self) -> &TensorLayout {
+            self.0.layout()
+        }
+        fn is_lm(&self) -> bool {
+            self.0.is_lm()
+        }
+        fn init_params(&mut self, seed: u64) -> Vec<f32> {
+            self.0.init_params(seed)
+        }
+        #[allow(clippy::too_many_arguments)]
+        fn local_steps(
+            &mut self,
+            params: &[f32],
+            opt: &mut [f32],
+            steps: usize,
+            lr: f32,
+            t0: usize,
+            client: usize,
+            rng: &mut Rng,
+        ) -> (Vec<f32>, f32) {
+            self.0.local_steps(params, opt, steps, lr, t0, client, rng)
+        }
+        fn evaluate(&mut self, params: &[f32], max_batches: usize) -> EvalOut {
+            self.0.evaluate(params, max_batches)
+        }
+    }
+
+    #[test]
+    fn unforkable_backend_falls_back_to_serial() {
+        let mut cfg = TrainConfig::new(
+            "mlp-small",
+            MethodConfig::sbc1(),
+            20,
+            LrSchedule::constant(0.1),
+        );
+        cfg.eval_every_rounds = 50;
+        cfg.eval_batches = 2;
+        cfg.parallelism = 4;
+        let mut be = NoFork(tiny_backend());
+        let r = Trainer::new(&mut be, cfg).run();
+        let serial = run_par(MethodConfig::sbc1(), 20, 1);
+        assert_eq!(r.final_params, serial.final_params);
     }
 }

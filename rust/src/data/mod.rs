@@ -1,4 +1,5 @@
-//! Synthetic/small datasets + client sharding (DESIGN.md §2 substitutions).
+//! Synthetic/small datasets + client sharding (dataset substitutions —
+//! see the module docs below and ARCHITECTURE.md §Module map).
 //!
 //! The paper trains on MNIST/CIFAR/ImageNet/PTB/Shakespeare; this sandbox
 //! has no datasets, so each benchmark gets the closest generatable
@@ -16,7 +17,9 @@ pub mod text;
 pub struct Batch {
     /// Flattened x (f32) — image pixels, or token ids cast to i32 via `xi`.
     pub xf: Vec<f32>,
+    /// Flattened x as token ids (text datasets; empty for images).
     pub xi: Vec<i32>,
+    /// Labels (class ids, or next-token ids for LMs).
     pub y: Vec<i32>,
 }
 

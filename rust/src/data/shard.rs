@@ -4,6 +4,7 @@
 
 use crate::util::rng::Rng;
 
+/// Per-client class-sampling distributions (IID or Dirichlet non-IID).
 #[derive(Clone, Debug)]
 pub struct Sharding {
     /// Per-client class-sampling distribution (clients × classes CDF).
@@ -45,6 +46,7 @@ impl Sharding {
         cdf.iter().position(|&c| u < c).unwrap_or(cdf.len() - 1)
     }
 
+    /// Number of client shards.
     pub fn clients(&self) -> usize {
         self.cdfs.len()
     }

@@ -10,11 +10,16 @@ use crate::data::shard::Sharding;
 use crate::data::{Batch, Dataset};
 use crate::util::rng::Rng;
 
+/// Deterministic teacher-template image classification dataset.
 #[derive(Clone, Debug)]
 pub struct SynthImages {
+    /// Image height.
     pub h: usize,
+    /// Image width.
     pub w: usize,
+    /// Channels.
     pub c: usize,
+    /// Number of classes.
     pub classes: usize,
     templates: Vec<Vec<f32>>, // classes × (h*w*c)
     noise: f32,
@@ -36,6 +41,8 @@ impl SynthImages {
         Self::with_dims(h, w, c, 10, clients, 0.35, seed)
     }
 
+    /// Fully parameterized construction (dimensions, classes, clients,
+    /// pixel-noise level, seed).
     pub fn with_dims(
         h: usize,
         w: usize,

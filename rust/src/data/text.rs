@@ -71,6 +71,7 @@ pub fn char_id(b: u8) -> i32 {
     }
 }
 
+/// Markov-expanded Shakespeare-like character corpus (CharLSTM stand-in).
 pub struct CharCorpus {
     /// token streams per client + eval tail
     shards: Vec<Vec<i32>>,
@@ -79,6 +80,8 @@ pub struct CharCorpus {
 }
 
 impl CharCorpus {
+    /// Generate `clients` shards of `tokens_per_client` characters plus a
+    /// held-out eval stream, deterministically from `seed`.
     pub fn new(clients: usize, tokens_per_client: usize, seqlen: usize, seed: u64) -> Self {
         // fit order-2 markov on the seed
         let seed_ids: Vec<i32> = SHAKESPEARE_SEED.bytes().map(char_id).collect();
@@ -163,14 +166,18 @@ impl Dataset for CharCorpus {
     }
 }
 
+/// Zipf-bigram word stream (PTB stand-in for the word-LM benchmark).
 pub struct WordCorpus {
     shards: Vec<Vec<i32>>,
     eval: Vec<i32>,
     seqlen: usize,
+    /// Vocabulary size (token ids are `0..vocab`).
     pub vocab: usize,
 }
 
 impl WordCorpus {
+    /// Generate `clients` shards of `tokens_per_client` words plus a
+    /// held-out eval stream, deterministically from `seed`.
     pub fn new(vocab: usize, clients: usize, tokens_per_client: usize, seqlen: usize, seed: u64) -> Self {
         let mut rng = Rng::new(seed ^ 0xbead);
         // Zipf CDF over ranks

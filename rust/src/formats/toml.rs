@@ -8,16 +8,23 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+/// A parsed TOML value (the subset the configs use).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// Quoted string.
     Str(String),
+    /// Integer literal.
     Int(i64),
+    /// Float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// Flat array of values.
     Arr(Vec<Value>),
 }
 
 impl Value {
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -25,6 +32,7 @@ impl Value {
         }
     }
 
+    /// The integer payload, if this is an integer.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -32,6 +40,7 @@ impl Value {
         }
     }
 
+    /// The numeric payload (floats, and integers widened to f64).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -40,6 +49,7 @@ impl Value {
         }
     }
 
+    /// The boolean payload, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -51,10 +61,12 @@ impl Value {
 /// Flat document: keys are `section.key` (or bare `key` for the root).
 #[derive(Clone, Debug, Default)]
 pub struct Doc {
+    /// All parsed entries, keyed by dotted path.
     pub entries: BTreeMap<String, Value>,
 }
 
 impl Doc {
+    /// Parse TOML text into a flat document.
     pub fn parse(text: &str) -> Result<Doc> {
         let mut entries = BTreeMap::new();
         let mut section = String::new();
@@ -83,22 +95,27 @@ impl Doc {
         Ok(Doc { entries })
     }
 
+    /// Look up a value by dotted key (`"train.clients"`).
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.entries.get(key)
     }
 
+    /// String at `key`, or `default` when absent/mistyped.
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).and_then(Value::as_str).unwrap_or(default)
     }
 
+    /// Integer at `key`, or `default` when absent/mistyped.
     pub fn i64_or(&self, key: &str, default: i64) -> i64 {
         self.get(key).and_then(Value::as_i64).unwrap_or(default)
     }
 
+    /// Float at `key`, or `default` when absent/mistyped.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(Value::as_f64).unwrap_or(default)
     }
 
+    /// Boolean at `key`, or `default` when absent/mistyped.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(Value::as_bool).unwrap_or(default)
     }

@@ -5,8 +5,11 @@
 //! Communication" (2018)* as a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the distributed-training coordinator: DSGD
-//!   parameter server, communication rounds with delay, per-client
-//!   residual accumulation, and a *staged compression pipeline*
+//!   parameter server with a **thread-pooled round loop** and **sharded
+//!   aggregation** ([`coordinator`]) — per-client work runs on a scoped
+//!   worker pool, bit-identical to the serial loop at any thread count —
+//!   communication rounds with delay, per-client residual accumulation,
+//!   and a *staged compression pipeline*
 //!   (Select → Quantize → Encode, [`compression`]): every method the
 //!   paper compares against — SBC, Gradient Dropping, FedAvg, signSGD,
 //!   TernGrad, QSGD, 1-bit SGD — is a composition of a sparsity selector,
@@ -21,9 +24,12 @@
 //!   kernels lowered into the same artifacts.
 //!
 //! Python never runs at training time: the coordinator loads
-//! `artifacts/*.hlo.txt` through the PJRT C API (`runtime`) and drives
-//! everything natively. See DESIGN.md for the system inventory and
-//! EXPERIMENTS.md for the paper-vs-measured record.
+//! `artifacts/*.hlo.txt` through the PJRT C API ([`runtime`]) and drives
+//! everything natively. See `README.md` for a runnable quickstart and
+//! `ARCHITECTURE.md` for the module map, the round dataflow, the
+//! determinism/threading invariants, and the wire format v2 layout.
+
+#![warn(missing_docs)]
 
 pub mod codec;
 pub mod compression;

@@ -90,7 +90,9 @@ fn print_help() {
          COMMANDS:\n\
            train    --model <m> --method <name> [--iterations N] [--backend pjrt|native]\n\
                     [--config file.toml] [--seed N] [--p F] [--delay N] [--verbose]\n\
-                    [--csv results/run.csv] [--pjrt-compress]\n\
+                    [--csv results/run.csv] [--pjrt-compress] [--parallelism N]\n\
+                    (--parallelism N pools the round loop over N threads;\n\
+                     results are bit-identical at any N)\n\
            table1   print theoretical compression rates (paper Table I)\n\
            inspect  [--artifacts DIR] summarize the AOT manifest\n\
            golomb   print eq.-5 optimal position-bit table\n\
@@ -118,6 +120,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(seed) = args.get("seed") {
         cfg.seed = seed.parse()?;
+    }
+    if let Some(par) = args.get("parallelism") {
+        cfg.parallelism = par.parse::<usize>()?.max(1);
     }
     if args.flag("verbose") {
         cfg.verbose = true;

@@ -7,12 +7,15 @@ use std::path::Path;
 /// One evaluation point on the training curve.
 #[derive(Clone, Debug)]
 pub struct CurvePoint {
+    /// Communication round index.
     pub round: usize,
     /// Local iterations completed per client.
     pub iterations: usize,
     /// Cumulative upstream bits for ONE client (paper's per-client axis).
     pub client_up_bits: u64,
+    /// Mean per-client training loss of the round.
     pub train_loss: f32,
+    /// Held-out loss at this point.
     pub eval_loss: f32,
     /// Accuracy for classifiers, perplexity for LMs.
     pub metric: f32,
@@ -21,25 +24,34 @@ pub struct CurvePoint {
 /// A full training curve plus identity/config fields.
 #[derive(Clone, Debug, Default)]
 pub struct RunLog {
+    /// Model name.
     pub model: String,
+    /// Method label (see `MethodConfig::label`).
     pub method: String,
+    /// Root seed of the run.
     pub seed: u64,
+    /// The curve, one entry per logged evaluation.
     pub points: Vec<CurvePoint>,
     /// Final measured compression rate vs dense baseline.
     pub compression: f64,
+    /// Metric of the last curve point.
     pub final_metric: f32,
+    /// Total training wall-clock, seconds.
     pub wall_s: f64,
 }
 
 impl RunLog {
+    /// Append one curve point.
     pub fn push(&mut self, p: CurvePoint) {
         self.points.push(p);
     }
 
+    /// Column names matching [`RunLog::to_csv`].
     pub fn csv_header() -> &'static str {
         "model,method,seed,round,iterations,client_up_bits,train_loss,eval_loss,metric"
     }
 
+    /// Render every curve point as CSV rows (no header).
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         for p in &self.points {

@@ -11,11 +11,14 @@ use crate::model::{Dtype, ModelSpec, Task, TensorLayout};
 /// All models exported by the AOT step.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Artifact directory the manifest was loaded from.
     pub dir: String,
+    /// Model specs keyed by model name.
     pub models: BTreeMap<String, ModelSpec>,
 }
 
 impl Manifest {
+    /// Read and parse `<dir>/manifest.json`.
     pub fn load(dir: &str) -> Result<Manifest> {
         let path = Path::new(dir).join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -24,6 +27,7 @@ impl Manifest {
         Self::from_json(dir, &json)
     }
 
+    /// Build a manifest from already-parsed JSON (tests, embedding).
     pub fn from_json(dir: &str, json: &Json) -> Result<Manifest> {
         let models_json =
             json.get("models").and_then(Json::as_obj).ok_or_else(|| anyhow!("no models key"))?;
@@ -34,6 +38,7 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_string(), models })
     }
 
+    /// Look up one model's spec by name.
     pub fn model(&self, name: &str) -> Result<&ModelSpec> {
         self.models.get(name).ok_or_else(|| {
             anyhow!("model '{name}' not in manifest (have: {:?})", self.models.keys().collect::<Vec<_>>())

@@ -14,10 +14,12 @@ use std::ops::Range;
 pub struct TensorLayout {
     tensors: Vec<(String, Vec<usize>)>,
     offsets: Vec<usize>,
+    /// Total element count across all tensors (flat-vector length).
     pub total: usize,
 }
 
 impl TensorLayout {
+    /// Build a layout from `(name, shape)` pairs in flat-vector order.
     pub fn new(tensors: Vec<(String, Vec<usize>)>) -> Self {
         let mut offsets = Vec::with_capacity(tensors.len() + 1);
         let mut off = 0;
@@ -34,26 +36,32 @@ impl TensorLayout {
         TensorLayout::new(vec![("flat".into(), vec![n])])
     }
 
+    /// Number of tensors.
     pub fn len(&self) -> usize {
         self.tensors.len()
     }
 
+    /// Whether the layout has no tensors.
     pub fn is_empty(&self) -> bool {
         self.tensors.is_empty()
     }
 
+    /// Name of tensor `i`.
     pub fn name(&self, i: usize) -> &str {
         &self.tensors[i].0
     }
 
+    /// Shape of tensor `i`.
     pub fn shape(&self, i: usize) -> &[usize] {
         &self.tensors[i].1
     }
 
+    /// Flat-vector range of tensor `i`.
     pub fn range(&self, i: usize) -> Range<usize> {
         self.offsets[i]..self.offsets[i + 1]
     }
 
+    /// All tensor ranges in layout order.
     pub fn segments(&self) -> impl Iterator<Item = Range<usize>> + '_ {
         (0..self.len()).map(|i| self.range(i))
     }
@@ -72,32 +80,51 @@ impl TensorLayout {
 /// Everything the coordinator needs to know about one model.
 #[derive(Clone, Debug)]
 pub struct ModelSpec {
+    /// Model name (manifest key).
     pub name: String,
+    /// Flat parameter count.
     pub n_params: usize,
+    /// Flat optimizer-state length.
     pub opt_size: usize,
+    /// Optimizer name ("sgd", "momentum", "adam").
     pub optimizer: String,
+    /// Classification or language modeling.
     pub task: Task,
+    /// Input tensor shape (leading dim = batch).
     pub x_shape: Vec<usize>,
+    /// Input element type.
     pub x_dtype: Dtype,
+    /// Label tensor shape.
     pub y_shape: Vec<usize>,
+    /// Label element type.
     pub y_dtype: Dtype,
+    /// Paper/Table-III default learning rate.
     pub default_lr: f32,
+    /// Vocabulary size (LM models; 0 otherwise).
     pub vocab: usize,
+    /// Class count (classifiers; 0 otherwise).
     pub classes: usize,
+    /// Flat tensor layout shared with the L2 graphs.
     pub layout: TensorLayout,
     /// Artifact file names keyed by graph ("init", "step", "eval", "compress").
     pub graphs: std::collections::BTreeMap<String, String>,
 }
 
+/// What kind of task a model optimizes (decides the reported metric).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Task {
+    /// Accuracy-metric classification.
     Classification,
+    /// Perplexity-metric language modeling.
     Lm,
 }
 
+/// Element types the AOT graphs exchange.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer (token ids, labels).
     I32,
 }
 

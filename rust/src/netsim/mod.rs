@@ -17,18 +17,35 @@ pub struct Link {
 }
 
 impl Link {
+    /// Datacenter fabric: 10 Gb/s line rate (IEEE 802.3ae 10GBASE NICs,
+    /// standard for the intra-rack links the paper's §I "cluster"
+    /// scenario assumes), 50 µs per-message latency (one intra-datacenter
+    /// RTT — sub-100 µs is typical for a single switch hop), free.
     pub fn datacenter_10g() -> Link {
         Link { bandwidth_bps: 10e9, latency_s: 50e-6, usd_per_mb: 0.0 }
     }
 
+    /// Home/office WiFi: 100 Mb/s sustained throughput — the realistic
+    /// TCP goodput of an 802.11n/ac link (well below PHY rates) — and
+    /// 3 ms latency, a typical single-AP wireless RTT. Unmetered.
     pub fn wifi() -> Link {
         Link { bandwidth_bps: 100e6, latency_s: 3e-3, usd_per_mb: 0.0 }
     }
 
+    /// Mobile LTE **uplink**: 12 Mb/s (LTE UE category 4/6 uplink
+    /// measured averages in the 2018-era reports, e.g. OpenSignal "State
+    /// of LTE", Feb 2018 — upload is several times slower than the
+    /// headline downlink), 40 ms RTT (typical measured LTE latency), at
+    /// $5/GB — a round mid-2018 metered mobile-data price used for the
+    /// paper's §I "on-device" cost motivation.
     pub fn mobile_lte() -> Link {
         Link { bandwidth_bps: 12e6, latency_s: 40e-3, usd_per_mb: 0.005 }
     }
 
+    /// Rural/congested 3G: 1 Mb/s uplink (HSPA real-world uplink
+    /// throughput; ITU IMT-2000 class), 150 ms RTT (3G control-plane
+    /// latency), at $20/GB (metered prepaid rates in low-connectivity
+    /// markets — the worst case for federated clients).
     pub fn rural_3g() -> Link {
         Link { bandwidth_bps: 1e6, latency_s: 150e-3, usd_per_mb: 0.02 }
     }
@@ -42,10 +59,15 @@ impl Link {
 /// Per-client accumulated communication totals.
 #[derive(Clone, Debug, Default)]
 pub struct ClientComm {
+    /// Total bits this client uploaded.
     pub up_bits: u64,
+    /// Total broadcast bits this client received.
     pub down_bits: u64,
+    /// Wall-clock spent uploading.
     pub up_time_s: f64,
+    /// Wall-clock spent receiving broadcasts.
     pub down_time_s: f64,
+    /// Messages sent (one per participating round).
     pub messages: u64,
 }
 
@@ -53,18 +75,23 @@ pub struct ClientComm {
 /// parallel (round time = slowest client) and the server broadcasts back.
 #[derive(Clone, Debug)]
 pub struct NetSim {
+    /// Client→server link model.
     pub up: Link,
+    /// Server→client link model.
     pub down: Link,
+    /// Per-client accumulated totals.
     pub clients: Vec<ClientComm>,
     /// Wall-clock spent in communication across all rounds.
     pub total_comm_time_s: f64,
 }
 
 impl NetSim {
+    /// A simulator over `n_clients` with asymmetric links.
     pub fn new(up: Link, down: Link, n_clients: usize) -> Self {
         NetSim { up, down, clients: vec![ClientComm::default(); n_clients], total_comm_time_s: 0.0 }
     }
 
+    /// A simulator whose up- and downlink share one profile.
     pub fn symmetric(link: Link, n_clients: usize) -> Self {
         Self::new(link, link, n_clients)
     }
@@ -95,6 +122,7 @@ impl NetSim {
         self.clients.iter().map(|c| c.up_bits as f64 / 8e6 * self.up.usd_per_mb).sum()
     }
 
+    /// Total upstream bits across all clients.
     pub fn total_up_bits(&self) -> u64 {
         self.clients.iter().map(|c| c.up_bits).sum()
     }

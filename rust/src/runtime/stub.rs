@@ -11,12 +11,15 @@ use crate::model::manifest::Manifest;
 use crate::model::{ModelSpec, TensorLayout};
 use crate::util::rng::Rng;
 
+/// Uninstantiable stand-in for the PJRT backend (no-`pjrt` builds).
 pub struct PjrtBackend {
+    /// The loaded model's spec (unreachable: the struct cannot exist).
     pub spec: ModelSpec,
     never: std::convert::Infallible,
 }
 
 impl PjrtBackend {
+    /// Always fails in this build; see the module docs.
     pub fn load(_manifest: &Manifest, model: &str, _clients: usize, _seed: u64) -> Result<Self> {
         Err(anyhow!(
             "model '{model}': this build has no PJRT runtime (enable the `pjrt` \
@@ -24,6 +27,7 @@ impl PjrtBackend {
         ))
     }
 
+    /// PJRT platform name (unreachable in this build).
     pub fn platform(&self) -> String {
         match self.never {}
     }

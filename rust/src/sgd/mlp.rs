@@ -2,15 +2,24 @@
 //! teacher-image dataset. Drives the large experiment grids (Fig. 3/4)
 //! and all coordinator tests without touching PJRT.
 
-use crate::coordinator::{EvalOut, TrainBackend};
+use crate::coordinator::{EvalOut, TrainBackend, WorkerBackend};
 use crate::data::synth_images::SynthImages;
 use crate::data::Dataset;
 use crate::model::TensorLayout;
 use crate::sgd::optimizer::{OptKind, Optimizer};
 use crate::util::rng::Rng;
 
+/// Pure-Rust training substrate over the synthetic image task.
+///
+/// `Clone` exists so the coordinator can fork one backend per pool worker
+/// ([`TrainBackend::fork`]): the dataset is deterministic and replicated,
+/// the scratch buffers are private per clone, so a fork's
+/// [`WorkerBackend::local_steps`] is bit-identical to the original's.
+#[derive(Clone)]
 pub struct NativeMlpBackend {
-    pub dims: Vec<usize>, // e.g. [256, 64, 10]
+    /// Layer widths, e.g. `[256, 64, 10]`.
+    pub dims: Vec<usize>,
+    /// Mini-batch size.
     pub batch: usize,
     layout: TensorLayout,
     opt: Optimizer,
@@ -22,6 +31,7 @@ pub struct NativeMlpBackend {
 }
 
 impl NativeMlpBackend {
+    /// Build an MLP backend over `data` with the given layer widths.
     pub fn new(dims: Vec<usize>, batch: usize, data: SynthImages, opt_kind: OptKind) -> Self {
         assert!(dims.len() >= 2);
         assert_eq!(dims[0], data.h * data.w * data.c, "input dim must match images");
@@ -229,6 +239,10 @@ impl TrainBackend for NativeMlpBackend {
         (w, loss_sum / steps as f32)
     }
 
+    fn fork(&self) -> Option<Box<dyn WorkerBackend>> {
+        Some(Box::new(self.clone()))
+    }
+
     fn evaluate(&mut self, params: &[f32], max_batches: usize) -> EvalOut {
         let nb = self.data.eval_batches(self.batch).min(max_batches.max(1));
         let classes = *self.dims.last().unwrap();
@@ -260,9 +274,39 @@ impl TrainBackend for NativeMlpBackend {
     }
 }
 
+impl WorkerBackend for NativeMlpBackend {
+    #[allow(clippy::too_many_arguments)]
+    fn local_steps(
+        &mut self,
+        params: &[f32],
+        opt: &mut [f32],
+        steps: usize,
+        lr: f32,
+        t0: usize,
+        client: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, f32) {
+        TrainBackend::local_steps(self, params, opt, steps, lr, t0, client, rng)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fork_is_bit_identical() {
+        let mut be = NativeMlpBackend::digits_small(2, 3);
+        let params = be.init_params(1);
+        let mut fork = be.fork().expect("native backend forks");
+        let (mut opt_a, mut opt_b) = (vec![0.0f32; be.opt_size()], vec![0.0f32; be.opt_size()]);
+        let (mut rng_a, mut rng_b) = (Rng::new(9), Rng::new(9));
+        let (wa, la) = TrainBackend::local_steps(&mut be, &params, &mut opt_a, 5, 0.1, 0, 1, &mut rng_a);
+        let (wb, lb) = fork.local_steps(&params, &mut opt_b, 5, 0.1, 0, 1, &mut rng_b);
+        assert_eq!(wa, wb);
+        assert_eq!(la.to_bits(), lb.to_bits());
+        assert_eq!(opt_a, opt_b);
+    }
 
     #[test]
     fn gradcheck_against_finite_differences() {

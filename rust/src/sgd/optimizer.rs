@@ -3,14 +3,19 @@
 //! native backend and the PJRT backend are interchangeable in the
 //! coordinator.
 
+/// Which optimizer update rule a backend runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OptKind {
+    /// Plain SGD (with the Zaremba global-norm clip).
     Sgd,
+    /// Heavy-ball momentum (paper default for the image models).
     Momentum,
+    /// Adam with bias correction (LM models).
     Adam,
 }
 
 impl OptKind {
+    /// Parse the manifest's optimizer name (unknown names → SGD).
     pub fn from_name(name: &str) -> OptKind {
         match name {
             "momentum" => OptKind::Momentum,
@@ -19,6 +24,7 @@ impl OptKind {
         }
     }
 
+    /// Flat state-vector length for `n_params` parameters.
     pub fn state_size(&self, n_params: usize) -> usize {
         match self {
             OptKind::Sgd => 1,
@@ -28,14 +34,19 @@ impl OptKind {
     }
 }
 
+/// A flat-vector optimizer (update rule + hyperparameters).
 #[derive(Clone, Debug)]
 pub struct Optimizer {
+    /// The update rule.
     pub kind: OptKind,
+    /// Momentum factor (momentum kind only).
     pub momentum: f32,
+    /// Optional global-norm gradient clip.
     pub clip: Option<f32>,
 }
 
 impl Optimizer {
+    /// An optimizer with the L2 graphs' default hyperparameters.
     pub fn new(kind: OptKind) -> Self {
         Optimizer {
             kind,

@@ -18,6 +18,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed a generator (splitmix64-expanded state).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
@@ -30,6 +31,7 @@ impl Rng {
         Rng::new(splitmix64(&mut sm))
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
@@ -43,6 +45,7 @@ impl Rng {
         result
     }
 
+    /// Next 32-bit output (high bits of [`Rng::next_u64`]).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32

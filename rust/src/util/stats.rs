@@ -3,18 +3,23 @@
 /// Online mean/variance (Welford).
 #[derive(Clone, Debug, Default)]
 pub struct Running {
+    /// Samples seen.
     pub n: u64,
     mean: f64,
     m2: f64,
+    /// Smallest sample seen.
     pub min: f64,
+    /// Largest sample seen.
     pub max: f64,
 }
 
 impl Running {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Add one sample.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -24,10 +29,12 @@ impl Running {
         self.max = self.max.max(x);
     }
 
+    /// Sample mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Unbiased sample variance.
     pub fn var(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -36,6 +43,7 @@ impl Running {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }

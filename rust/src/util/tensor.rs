@@ -51,19 +51,23 @@ pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
     }
 }
 
+/// Euclidean norm (f64 accumulation).
 pub fn l2_norm(x: &[f32]) -> f32 {
     x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32
 }
 
+/// Dot product (f64 accumulation).
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum::<f64>() as f32
 }
 
+/// Largest absolute value (0 for an empty slice).
 pub fn abs_max(x: &[f32]) -> f32 {
     x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
 }
 
+/// Arithmetic mean (0 for an empty slice).
 pub fn mean(x: &[f32]) -> f32 {
     if x.is_empty() {
         return 0.0;
@@ -71,6 +75,7 @@ pub fn mean(x: &[f32]) -> f32 {
     (x.iter().map(|v| *v as f64).sum::<f64>() / x.len() as f64) as f32
 }
 
+/// Number of non-zero entries.
 pub fn count_nonzero(x: &[f32]) -> usize {
     x.iter().filter(|v| **v != 0.0).count()
 }

@@ -8,11 +8,14 @@ use std::time::Instant;
 /// one mutex lock per recorded span, and spans are per-round, not per-step.
 pub static TIMERS: Timers = Timers { inner: Mutex::new(None) };
 
+/// Aggregated (count, total seconds) per phase name. Thread-safe: pool
+/// workers record spans concurrently through one mutex-guarded map.
 pub struct Timers {
     inner: Mutex<Option<BTreeMap<&'static str, (u64, f64)>>>,
 }
 
 impl Timers {
+    /// Add one span observation to `name`'s aggregate.
     pub fn record(&self, name: &'static str, secs: f64) {
         let mut g = self.inner.lock().unwrap();
         let map = g.get_or_insert_with(BTreeMap::new);
@@ -21,6 +24,7 @@ impl Timers {
         e.1 += secs;
     }
 
+    /// Copy out `(name, calls, total_s)` rows, sorted by name.
     pub fn snapshot(&self) -> Vec<(String, u64, f64)> {
         let g = self.inner.lock().unwrap();
         g.as_ref()
@@ -28,10 +32,12 @@ impl Timers {
             .unwrap_or_default()
     }
 
+    /// Clear all aggregates.
     pub fn reset(&self) {
         *self.inner.lock().unwrap() = None;
     }
 
+    /// Render the aggregates as an aligned text table.
     pub fn report(&self) -> String {
         let mut out = String::from("phase                          calls     total_s      avg_ms\n");
         for (name, n, s) in self.snapshot() {
@@ -47,6 +53,7 @@ pub struct Span {
     start: Instant,
 }
 
+/// Start a span that records into [`TIMERS`] when dropped.
 pub fn span(name: &'static str) -> Span {
     Span { name, start: Instant::now() }
 }

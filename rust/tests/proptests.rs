@@ -10,6 +10,8 @@ use sbc::compression::registry::MethodConfig;
 use sbc::compression::residual::Residual;
 use sbc::compression::topk;
 use sbc::compression::{Granularity, Selection, SelectorCfg, TensorUpdate, UpdateMsg};
+use sbc::coordinator::aggregation::{aggregate_into, aggregate_sharded, AggRule};
+use sbc::coordinator::pool::WorkerPool;
 use sbc::model::TensorLayout;
 use sbc::util::rng::Rng;
 
@@ -288,6 +290,69 @@ fn prop_hist_threshold_never_undershoots() {
         let total_neg = x.iter().filter(|&&v| v < 0.0).count() as u32;
         assert!(np >= k.min(total_pos), "seed {seed}: pos {np} < {k}");
         assert!(nn >= k.min(total_neg), "seed {seed}: neg {nn} < {k}");
+    });
+}
+
+/// The eight paper method presets (Table I / II columns).
+fn paper_presets() -> [MethodConfig; 8] {
+    [
+        MethodConfig::baseline(),
+        MethodConfig::fedavg(10),
+        MethodConfig::gradient_dropping(),
+        MethodConfig::sbc2(),
+        MethodConfig::signsgd(1e-3),
+        MethodConfig::terngrad(),
+        MethodConfig::qsgd(4),
+        MethodConfig::onebit(),
+    ]
+}
+
+#[test]
+fn prop_sharded_aggregate_bit_identical_to_serial() {
+    // the tentpole determinism invariant: sharded parallel aggregation
+    // equals the serial fold bit-for-bit across thread counts, client
+    // counts, and the densified update shapes of all eight paper
+    // presets (each preset exercises a different TensorUpdate variant
+    // and aggregation rule)
+    forall(6, |rng, seed| {
+        let n = 500 + rng.below(4_000);
+        let layout =
+            TensorLayout::new(vec![("a".into(), vec![n / 3]), ("b".into(), vec![n - n / 3])]);
+        for cfg in paper_presets() {
+            let rule = AggRule::for_method(&cfg);
+            let clients = [1usize, 2, 5, 16][rng.below(4)];
+            // realistic per-client updates: run each client's delta
+            // through the preset's actual pipeline and densify
+            let updates: Vec<Vec<f32>> = (0..clients)
+                .map(|c| {
+                    let mut pipeline = cfg.build(seed ^ c as u64);
+                    let delta = random_delta(rng, layout.total);
+                    let msg = pipeline.compress(&delta, &layout, 0);
+                    let mut dense = vec![0.0f32; layout.total];
+                    msg.densify_into(&layout, cfg.granularity, cfg.sign_scale(), &mut dense);
+                    if matches!(rule, AggRule::MajoritySign { .. }) {
+                        for v in dense.iter_mut() {
+                            *v = v.signum();
+                        }
+                    }
+                    dense
+                })
+                .collect();
+            let mut serial = vec![0.0f32; layout.total];
+            aggregate_into(updates.iter().map(|u| u.as_slice()), rule, &mut serial);
+            for threads in [1usize, 2, 3, 7, 32] {
+                let pool = WorkerPool::new(threads);
+                let mut parallel = vec![f32::NAN; layout.total]; // dirty buffer
+                aggregate_sharded(&updates[..], rule, &pool, &mut parallel);
+                let a: Vec<u32> = serial.iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = parallel.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    a, b,
+                    "seed {seed} {} clients={clients} threads={threads}",
+                    cfg.label()
+                );
+            }
+        }
     });
 }
 
