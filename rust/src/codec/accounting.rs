@@ -68,6 +68,13 @@ pub struct CommStats {
     pub nonzeros: u64,
     /// What dense-f32-every-iteration would have cost (the baseline).
     pub baseline_bits: u64,
+    /// Transport framing overhead (frame headers, CRCs and byte-padding
+    /// around payloads — [`crate::transport::frame::overhead_bits`]) in
+    /// both directions. Kept separate from `upstream_bits` so the
+    /// compression rate stays a pure payload measure while
+    /// [`total_wire_bits`](CommStats::total_wire_bits) reflects what the
+    /// sockets actually carry.
+    pub frame_overhead_bits: u64,
 }
 
 impl CommStats {
@@ -84,6 +91,17 @@ impl CommStats {
     /// (dense 32-bit update of `n_params` every iteration).
     pub fn record_baseline_iter(&mut self, n_params: usize) {
         self.baseline_bits += 32 * n_params as u64;
+    }
+
+    /// Account transport framing overhead around one or more frames.
+    pub fn record_frame_overhead(&mut self, bits: u64) {
+        self.frame_overhead_bits += bits;
+    }
+
+    /// Everything the training put on the wire: payload bits plus frame
+    /// overhead (headers, CRCs, byte padding).
+    pub fn total_wire_bits(&self) -> u64 {
+        self.upstream_bits + self.frame_overhead_bits
     }
 
     /// Measured compression rate vs the dense baseline.
@@ -132,5 +150,17 @@ mod tests {
         assert_eq!(s.baseline_bits, 320_000);
         assert!((s.compression_rate() - 100.0).abs() < 1e-9);
         assert!((s.upstream_megabytes() - 3_200.0 / 8e6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frame_overhead_is_separate_from_payload() {
+        let mut s = CommStats::default();
+        s.record_baseline_iter(1000);
+        s.record_message(3_200, 10);
+        s.record_frame_overhead(192);
+        assert_eq!(s.frame_overhead_bits, 192);
+        assert_eq!(s.total_wire_bits(), 3_392);
+        // the compression rate stays a pure payload measure
+        assert!((s.compression_rate() - 10.0).abs() < 1e-9);
     }
 }

@@ -64,8 +64,20 @@ pub fn decode_positions_into(
     for _ in 0..count {
         let q = r.get_unary()?;
         let rem = r.get_bits(b)?;
-        let d = ((q << b) | rem) as i64 + 1;
-        let pos = prev + d;
+        // corrupt streams can carry arbitrary quotients/parameters: any
+        // gap that would shift out of range or push a position past u32
+        // is malformed, not a panic (b <= 63 comes off 6 wire bits)
+        if b >= 64 || q > (u64::MAX >> b) {
+            return None;
+        }
+        let v = (q << b) | rem;
+        if v >= u32::MAX as u64 {
+            return None;
+        }
+        let pos = prev + v as i64 + 1;
+        if pos > u32::MAX as i64 {
+            return None;
+        }
         out.push(pos as u32);
         prev = pos;
     }

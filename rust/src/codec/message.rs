@@ -29,7 +29,12 @@ use crate::codec::{golomb, varint};
 use crate::compression::{TensorUpdate, UpdateMsg};
 
 const MAGIC: u64 = 0x5BC0;
-const VERSION: u64 = 2;
+
+/// Wire-format version this build writes and accepts. Public because the
+/// transport handshake advertises it and the golden-bytes regression test
+/// pins the encoding against it.
+pub const WIRE_VERSION: u8 = 2;
+const VERSION: u64 = WIRE_VERSION as u64;
 
 /// Position-list codec (ablation: ARCHITECTURE.md §Wire format).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -122,16 +127,25 @@ fn write_positions(w: &mut BitWriter, idx: &[u32], n: usize, codec: PosCodec) {
 
 fn read_positions_into(r: &mut BitReader, out: &mut Vec<u32>) -> Result<()> {
     let codec = PosCodec::from_tag(r.get_bits(2).ok_or_else(|| anyhow!("eof"))?)?;
-    let count = r.get_bits(32).ok_or_else(|| anyhow!("eof"))? as usize;
+    let count = r.get_bits(32).ok_or_else(|| anyhow!("eof"))?;
     let ok = match codec {
         PosCodec::Golomb => {
             let b = r.get_bits(6).ok_or_else(|| anyhow!("eof"))? as u32;
+            // each position costs at least b remainder bits + the unary
+            // terminator — bound the declared count before decoding
+            let count = bounded_count(r, count, b as u64 + 1)?;
             golomb::decode_positions_into(r, count, b, out)
         }
-        PosCodec::Fixed16 => varint::decode_fixed_into(r, count, 16, out),
-        PosCodec::Elias => varint::decode_elias_into(r, count, out),
+        PosCodec::Fixed16 => {
+            let count = bounded_count(r, count, 16)?;
+            varint::decode_fixed_into(r, count, 16, out)
+        }
+        PosCodec::Elias => {
+            let count = bounded_count(r, count, 1)?;
+            varint::decode_elias_into(r, count, out)
+        }
     };
-    ok.ok_or_else(|| anyhow!("truncated position stream"))
+    ok.ok_or_else(|| anyhow!("corrupt position stream"))
 }
 
 fn encode_tensor(w: &mut BitWriter, t: &TensorUpdate, codec: PosCodec) {
@@ -215,11 +229,27 @@ fn need<T>(v: Option<T>) -> Result<T> {
     v.ok_or_else(|| anyhow!("eof"))
 }
 
+/// Validate a count declared on the wire against the bits actually left
+/// in the stream, given the minimum encoded size of one element. Frames
+/// arrive from untrusted sockets: without this, a corrupt 32-bit count
+/// (up to 4 billion) would drive a multi-gigabyte `reserve` before the
+/// element loop ever hits end-of-stream.
+fn bounded_count(r: &BitReader, n: u64, min_bits_per_elem: u64) -> Result<usize> {
+    if n.saturating_mul(min_bits_per_elem) > r.remaining() {
+        return Err(anyhow!(
+            "declared count {n} needs over {} bits but only {} remain",
+            n.saturating_mul(min_bits_per_elem),
+            r.remaining()
+        ));
+    }
+    Ok(n as usize)
+}
+
 fn decode_tensor_into(r: &mut BitReader, slot: &mut TensorUpdate) -> Result<()> {
     let tag = need(r.get_bits(4))?;
     match tag {
         0 => {
-            let n = need(r.get_bits(32))? as usize;
+            let n = bounded_count(r, need(r.get_bits(32))?, 32)?;
             let v = slot.dense_slot();
             v.reserve(n);
             for _ in 0..n {
@@ -229,6 +259,7 @@ fn decode_tensor_into(r: &mut BitReader, slot: &mut TensorUpdate) -> Result<()> 
         1 => {
             let (idx, val) = slot.sparse_f32_slot();
             read_positions_with_n_into(r, idx)?;
+            bounded_count(r, idx.len() as u64, 32)?;
             val.reserve(idx.len());
             for _ in 0..idx.len() {
                 val.push(need(r.get_f32())?);
@@ -241,7 +272,7 @@ fn decode_tensor_into(r: &mut BitReader, slot: &mut TensorUpdate) -> Result<()> 
             *side_pos = need(r.get_bit())?;
         }
         3 => {
-            let n = need(r.get_bits(32))? as usize;
+            let n = bounded_count(r, need(r.get_bits(32))?, 1)?;
             let signs = slot.sign_slot();
             signs.reserve(n);
             for _ in 0..n {
@@ -249,7 +280,7 @@ fn decode_tensor_into(r: &mut BitReader, slot: &mut TensorUpdate) -> Result<()> 
             }
         }
         4 => {
-            let n = need(r.get_bits(32))? as usize;
+            let n = bounded_count(r, need(r.get_bits(32))?, 2)?;
             let (scale, vals) = slot.ternary_slot();
             *scale = need(r.get_f32())?;
             vals.reserve(n);
@@ -263,7 +294,7 @@ fn decode_tensor_into(r: &mut BitReader, slot: &mut TensorUpdate) -> Result<()> 
             }
         }
         5 => {
-            let n = need(r.get_bits(32))? as usize;
+            let n = bounded_count(r, need(r.get_bits(32))?, 2)?;
             let (scale, levels, vals) = slot.quantized_slot();
             *scale = need(r.get_f32())?;
             *levels = need(r.get_bits(8))? as u8;
@@ -271,11 +302,16 @@ fn decode_tensor_into(r: &mut BitReader, slot: &mut TensorUpdate) -> Result<()> 
             for _ in 0..n {
                 let neg = need(r.get_bit())?;
                 let mag = need(varint::get_elias_gamma(r))? - 1;
-                vals.push(if neg { -(mag as i8) } else { mag as i8 });
+                // i8 range: magnitudes 0..=127, plus -128 on the negative side
+                let limit = if neg { 128 } else { 127 };
+                if mag > limit {
+                    return Err(anyhow!("quantized magnitude {mag} out of i8 range"));
+                }
+                vals.push(if neg { (mag as i16).wrapping_neg() as i8 } else { mag as i8 });
             }
         }
         6 => {
-            let n = need(r.get_bits(32))? as usize;
+            let n = bounded_count(r, need(r.get_bits(32))?, 1)?;
             let (signs, mu_pos, mu_neg) = slot.sign_means_slot();
             *mu_pos = need(r.get_f32())?;
             *mu_neg = need(r.get_f32())?;
@@ -325,7 +361,7 @@ pub fn decode_into(bytes: &[u8], bits: u64, out: &mut UpdateMsg) -> Result<()> {
         return Err(anyhow!("unsupported wire version {version} (this build speaks {VERSION})"));
     }
     out.round = need(r.get_bits(32))? as u32;
-    let ntensors = need(r.get_bits(16))? as usize;
+    let ntensors = bounded_count(&r, need(r.get_bits(16))?, 4)?;
     out.tensors.truncate(ntensors);
     while out.tensors.len() < ntensors {
         out.tensors.push(TensorUpdate::placeholder());

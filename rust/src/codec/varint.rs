@@ -45,6 +45,9 @@ pub fn decode_fixed_into(
             v = r.get_bits(32)?;
         }
         let pos = prev + v as i64 + 1;
+        if pos > u32::MAX as i64 {
+            return None; // corrupt gap would wrap the u32 position
+        }
         out.push(pos as u32);
         prev = pos;
     }
@@ -69,6 +72,9 @@ pub fn get_elias_gamma(r: &mut BitReader) -> Option<u64> {
             false => zeros += 1,
             true => break,
         }
+    }
+    if zeros >= 64 {
+        return None; // corrupt stream: value would overflow u64
     }
     let rest = r.get_bits(zeros)?;
     Some((1u64 << zeros) | rest)
@@ -95,8 +101,14 @@ pub fn decode_elias_into(r: &mut BitReader, count: usize, out: &mut Vec<u32>) ->
     out.clear();
     let mut prev: i64 = -1;
     for _ in 0..count {
-        let d = get_elias_gamma(r)? as i64;
-        let pos = prev + d;
+        let d = get_elias_gamma(r)?;
+        if d > u32::MAX as u64 {
+            return None; // corrupt gap would wrap the u32 position
+        }
+        let pos = prev + d as i64;
+        if pos > u32::MAX as i64 {
+            return None;
+        }
         out.push(pos as u32);
         prev = pos;
     }

@@ -34,6 +34,8 @@ pub use pipeline::Pipeline;
 pub use quantize::QuantizerCfg;
 pub use select::{Selection, SelectorCfg};
 
+use anyhow::{ensure, Result};
+
 use crate::model::TensorLayout;
 
 /// One tensor's compressed update, aligned with the model's tensor layout
@@ -304,6 +306,61 @@ impl UpdateMsg {
         for (i, tu) in self.tensors.iter().enumerate() {
             tu.add_into(&mut out[granularity.segment(layout, i)], sign_scale);
         }
+    }
+
+    /// Check that a decoded message is structurally sound against the
+    /// model's segmentation before it touches any indexed buffer: tensor
+    /// count matches the granularity, dense variants carry exactly one
+    /// value per segment element, and sparse index lists are strictly
+    /// increasing within segment bounds. The federated server runs this
+    /// on every network-decoded update so a corrupt-but-parseable message
+    /// becomes a typed error instead of a panic (or a silent
+    /// overlap-add) inside [`UpdateMsg::densify_into`].
+    pub fn validate(&self, layout: &TensorLayout, granularity: Granularity) -> Result<()> {
+        ensure!(
+            self.tensors.len() == granularity.n_segments(layout),
+            "message has {} tensors, segmentation expects {}",
+            self.tensors.len(),
+            granularity.n_segments(layout)
+        );
+        for (i, t) in self.tensors.iter().enumerate() {
+            let seg_len = granularity.segment(layout, i).len();
+            let check_idx = |idx: &[u32]| -> Result<()> {
+                for w in idx.windows(2) {
+                    ensure!(w[0] < w[1], "tensor {i}: positions not strictly increasing");
+                }
+                if let Some(&last) = idx.last() {
+                    ensure!(
+                        (last as usize) < seg_len,
+                        "tensor {i}: position {last} outside segment of {seg_len}"
+                    );
+                }
+                Ok(())
+            };
+            match t {
+                TensorUpdate::Dense(v) => {
+                    ensure!(v.len() == seg_len, "tensor {i}: dense length {}", v.len())
+                }
+                TensorUpdate::SparseF32 { idx, val } => {
+                    ensure!(idx.len() == val.len(), "tensor {i}: idx/val length mismatch");
+                    check_idx(idx)?;
+                }
+                TensorUpdate::SparseBinary { idx, .. } => check_idx(idx)?,
+                TensorUpdate::Sign { signs } => {
+                    ensure!(signs.len() == seg_len, "tensor {i}: sign length {}", signs.len())
+                }
+                TensorUpdate::SignMeans { signs, .. } => {
+                    ensure!(signs.len() == seg_len, "tensor {i}: sign length {}", signs.len())
+                }
+                TensorUpdate::Ternary { vals, .. } => {
+                    ensure!(vals.len() == seg_len, "tensor {i}: ternary length {}", vals.len())
+                }
+                TensorUpdate::Quantized { vals, .. } => {
+                    ensure!(vals.len() == seg_len, "tensor {i}: quantized length {}", vals.len())
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Densify the whole message into a fresh flat vector of length

@@ -113,7 +113,21 @@ pub fn train_config_from_doc(doc: &Doc) -> Result<TrainConfig> {
     };
     cfg.uplink = parse_link(doc.str_or("net.uplink", "wifi"))?;
     cfg.downlink = parse_link(doc.str_or("net.downlink", "wifi"))?;
+    let t = &mut cfg.transport;
+    t.connect_timeout = ms(doc.i64_or("transport.connect_timeout_ms", ms_i64(t.connect_timeout)));
+    t.read_timeout = ms(doc.i64_or("transport.read_timeout_ms", ms_i64(t.read_timeout)));
+    t.max_retries = doc.i64_or("transport.max_retries", t.max_retries as i64).max(0) as u32;
+    t.retry_backoff = ms(doc.i64_or("transport.retry_backoff_ms", ms_i64(t.retry_backoff)));
+    t.round_timeout = ms(doc.i64_or("transport.round_timeout_ms", ms_i64(t.round_timeout)));
     Ok(cfg)
+}
+
+fn ms(v: i64) -> std::time::Duration {
+    std::time::Duration::from_millis(v.max(0) as u64)
+}
+
+fn ms_i64(d: std::time::Duration) -> i64 {
+    d.as_millis() as i64
 }
 
 /// Read and parse a TOML config file into a [`TrainConfig`].
@@ -169,6 +183,32 @@ mod tests {
         assert!(parse_method("qsgd", 0.0, 1).is_ok());
         assert!(parse_method("nope", 0.0, 1).is_err());
         assert_eq!(parse_method("fedavg", 0.0, 100).unwrap().delay, 100);
+    }
+
+    #[test]
+    fn transport_keys() {
+        use std::time::Duration;
+        let doc = Doc::parse(
+            r#"
+            model = "lenet"
+            [transport]
+            connect_timeout_ms = 100
+            read_timeout_ms = 2000
+            max_retries = 5
+            retry_backoff_ms = 10
+            round_timeout_ms = 9000
+            "#,
+        )
+        .unwrap();
+        let cfg = train_config_from_doc(&doc).unwrap();
+        assert_eq!(cfg.transport.connect_timeout, Duration::from_millis(100));
+        assert_eq!(cfg.transport.read_timeout, Duration::from_secs(2));
+        assert_eq!(cfg.transport.max_retries, 5);
+        assert_eq!(cfg.transport.retry_backoff, Duration::from_millis(10));
+        assert_eq!(cfg.transport.round_timeout, Duration::from_secs(9));
+        // absent section keeps the defaults
+        let plain = train_config_from_doc(&Doc::parse("model = \"lenet\"").unwrap()).unwrap();
+        assert_eq!(plain.transport, crate::transport::TransportCfg::default());
     }
 
     #[test]

@@ -13,6 +13,7 @@
 use crate::codec::message::{PosCodec, WireCodec};
 use crate::compression::residual::Residual;
 use crate::compression::{Pipeline, UpdateMsg};
+use crate::coordinator::trainer::TrainConfig;
 use crate::util::rng::Rng;
 
 /// All state one simulated client owns across a training run.
@@ -80,6 +81,24 @@ impl ClientState {
             round_bits: 0,
             round_nnz: 0,
         }
+    }
+
+    /// Build client `id`'s state straight from a training config — the
+    /// single construction shared by the in-process trainer and the
+    /// remote federated session ([`crate::transport::session`]), so both
+    /// derive identical pipelines, pipeline seeds and RNG streams (a
+    /// prerequisite for the bit-identical federated weight digest).
+    pub fn for_config(cfg: &TrainConfig, id: usize, n_params: usize, opt_size: usize) -> Self {
+        let root = Rng::new(cfg.seed);
+        ClientState::new(
+            id,
+            n_params,
+            opt_size,
+            cfg.method.use_residual(),
+            cfg.method.build(cfg.seed ^ (0xC11E + id as u64)),
+            cfg.pos_codec,
+            &root,
+        )
     }
 }
 

@@ -48,6 +48,7 @@ use crate::coordinator::{TrainBackend, WorkerBackend};
 use crate::metrics::{CurvePoint, RunLog};
 use crate::model::{Task, TensorLayout};
 use crate::netsim::{Link, NetSim};
+use crate::transport::{frame, TransportCfg};
 use crate::util::rng::Rng;
 use crate::util::tensor;
 use crate::util::timer::span;
@@ -102,6 +103,10 @@ pub struct TrainConfig {
     /// `ARCHITECTURE.md` §Determinism. Defaults to `SBC_PARALLELISM`
     /// from the environment, else 1.
     pub parallelism: usize,
+    /// Transport knobs (timeouts, retry budget) for the federated path
+    /// ([`crate::transport`]); also sets the framing-overhead model the
+    /// in-process trainer charges to [`CommStats`] and [`NetSim`].
+    pub transport: TransportCfg,
 }
 
 impl TrainConfig {
@@ -123,6 +128,7 @@ impl TrainConfig {
             downlink: Link::wifi(),
             verbose: false,
             parallelism: default_parallelism(),
+            transport: TransportCfg::default(),
         }
     }
 }
@@ -269,25 +275,12 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
         let n = self.backend.n_params();
         let layout = self.backend.layout().clone();
         let opt_size = self.backend.opt_size();
-        let root = Rng::new(cfg.seed);
         let started = Instant::now();
 
         assert_eq!(initial.len(), n, "initial params length mismatch");
         let mut master = initial;
-        let use_residual = cfg.method.use_residual();
-        let mut clients: Vec<ClientState> = (0..cfg.clients)
-            .map(|i| {
-                ClientState::new(
-                    i,
-                    n,
-                    opt_size,
-                    use_residual,
-                    cfg.method.build(cfg.seed ^ (0xC11E + i as u64)),
-                    cfg.pos_codec,
-                    &root,
-                )
-            })
-            .collect();
+        let mut clients: Vec<ClientState> =
+            (0..cfg.clients).map(|i| ClientState::for_config(&cfg, i, n, opt_size)).collect();
 
         let agg_rule = AggRule::for_method(&cfg.method);
         let majority_vote = matches!(agg_rule, AggRule::MajoritySign { .. });
@@ -456,7 +449,8 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
                     comm.record_baseline_iter(n);
                 }
                 comm.record_message(c.round_bits, c.round_nnz);
-                round_up_bits[ci] = c.round_bits;
+                comm.record_frame_overhead(frame::overhead_bits(c.round_bits));
+                round_up_bits[ci] = c.round_bits + frame::overhead_bits(c.round_bits);
                 train_loss += c.round_loss;
             }
 
@@ -479,7 +473,10 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
             };
             down_decoded.densify_into(&layout, Granularity::Global, 1.0, &mut delta_rx);
             tensor::add_assign(&mut master, &delta_rx);
-            net.round(&round_up_bits, down_bits);
+            // links carry frames, not bare payloads: netsim costs include
+            // the per-frame header/padding overhead in both directions
+            comm.record_frame_overhead(frame::overhead_bits(down_bits) * cfg.clients as u64);
+            net.round(&round_up_bits, down_bits + frame::overhead_bits(down_bits));
 
             // --- evaluation ------------------------------------------
             let last = round + 1 == rounds;

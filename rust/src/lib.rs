@@ -42,4 +42,5 @@ pub mod model;
 pub mod netsim;
 pub mod runtime;
 pub mod sgd;
+pub mod transport;
 pub mod util;

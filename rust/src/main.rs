@@ -21,6 +21,9 @@ use sbc::metrics::render_table;
 use sbc::model::manifest::Manifest;
 use sbc::runtime::PjrtBackend;
 use sbc::sgd::NativeMlpBackend;
+use sbc::transport::server::FederatedServer;
+use sbc::transport::session::run_client;
+use sbc::transport::tcp::{TcpAcceptor, TcpConnector};
 use sbc::util::timer::TIMERS;
 
 /// Minimal flag parser: --key value / --flag.
@@ -93,6 +96,10 @@ fn print_help() {
                     [--csv results/run.csv] [--pjrt-compress] [--parallelism N]\n\
                     (--parallelism N pools the round loop over N threads;\n\
                      results are bit-identical at any N)\n\
+                    [--listen ADDR]                serve federated rounds over TCP\n\
+                    [--connect ADDR --client-id K] join as federated client K\n\
+                    (federated runs use the native backend and produce\n\
+                     bit-identical weights to the in-process trainer)\n\
            table1   print theoretical compression rates (paper Table I)\n\
            inspect  [--artifacts DIR] summarize the AOT manifest\n\
            golomb   print eq.-5 optimal position-bit table\n\
@@ -131,6 +138,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.use_pjrt_compress = true;
     }
 
+    // federated paths: real sockets, native backend (see README
+    // §Federated training for the per-process quickstart)
+    if let Some(addr) = args.get("listen") {
+        return cmd_serve(cfg, addr);
+    }
+    if let Some(addr) = args.get("connect") {
+        let id: usize = args
+            .get("client-id")
+            .ok_or_else(|| anyhow!("--connect requires --client-id <0..clients>"))?
+            .parse()?;
+        return cmd_client(cfg, addr, id);
+    }
+
     let backend_kind = args.get_or("backend", "pjrt");
     let result = match backend_kind.as_str() {
         "native" => {
@@ -148,12 +168,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
 
     println!(
-        "# {} on {}: final metric {:.4}, compression x{:.0}, upstream {:.3} MB/client, comm time {:.2}s",
+        "# {} on {}: final metric {:.4}, compression x{:.0}, upstream {:.3} MB/client \
+         (+{:.4} MB framing total), comm time {:.2}s",
         cfg.method.label(),
         cfg.model,
         result.log.final_metric,
         result.log.compression,
         result.comm.upstream_bits as f64 / 8e6 / cfg.clients as f64,
+        result.comm.frame_overhead_bits as f64 / 8e6,
         result.net.total_comm_time_s,
     );
     if let Some(csv) = args.get("csv") {
@@ -163,6 +185,59 @@ fn cmd_train(args: &Args) -> Result<()> {
     if args.flag("timers") {
         eprint!("{}", TIMERS.report());
     }
+    Ok(())
+}
+
+/// `train --listen ADDR`: run the federation server over TCP with the
+/// native backend, blocking until all `cfg.clients` sessions complete.
+fn cmd_serve(mut cfg: TrainConfig, addr: &str) -> Result<()> {
+    use sbc::coordinator::TrainBackend;
+    let mut be = NativeMlpBackend::mnist_mlp(cfg.clients, cfg.seed);
+    cfg.model = "mlp-native".into();
+    let layout = be.layout().clone();
+    let initial = be.init_params(cfg.seed);
+    let acceptor = std::sync::Arc::new(TcpAcceptor::bind(addr, &cfg.transport)?);
+    println!(
+        "# [{}] listening on {} for {} clients, {} rounds",
+        cfg.method.label(),
+        acceptor.local_addr(),
+        cfg.clients,
+        (cfg.iterations / cfg.method.delay).max(1),
+    );
+    let mut server = FederatedServer::new(cfg.clone(), layout, initial);
+    let res = server.run(acceptor)?;
+    println!(
+        "# federated {} done: digest {:016x}, {} rounds, compression x{:.0}, \
+         wire {:.3} MB up ({:.4} MB framing), comm time {:.2}s",
+        cfg.method.label(),
+        res.digest,
+        res.rounds,
+        res.comm.compression_rate(),
+        res.comm.upstream_bits as f64 / 8e6,
+        res.comm.frame_overhead_bits as f64 / 8e6,
+        res.net.total_comm_time_s,
+    );
+    Ok(())
+}
+
+/// `train --connect ADDR --client-id K`: run one federated client session
+/// over TCP with the native backend.
+fn cmd_client(mut cfg: TrainConfig, addr: &str, id: usize) -> Result<()> {
+    use std::net::ToSocketAddrs;
+    let addr = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow!("'{addr}' resolves to no address"))?;
+    let mut be = NativeMlpBackend::mnist_mlp(cfg.clients, cfg.seed);
+    cfg.model = "mlp-native".into();
+    let connector = TcpConnector::new(addr, &cfg.transport);
+    let out = run_client(&cfg, id, &connector, &mut be)?;
+    println!(
+        "# client {id} done: digest {:016x} (server agrees), {:.3} MB payload up, {} reconnects",
+        out.digest,
+        out.up_bits as f64 / 8e6,
+        out.retries,
+    );
     Ok(())
 }
 

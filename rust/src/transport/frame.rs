@@ -1,0 +1,441 @@
+//! The framed byte layer: length-prefixed, CRC-checked frames that carry
+//! wire-format-v2 payloads ([`crate::codec::message`]) across real
+//! connections.
+//!
+//! Layout (big-endian, byte-aligned — see `ARCHITECTURE.md` §Transport):
+//!
+//! ```text
+//! frame := len:u32            # bytes after this field (header + payload)
+//!          magic:u16 = 0xFE5B
+//!          protocol:u8 = 1    # transport protocol version
+//!          kind:u8            # FrameKind discriminant
+//!          round:u32
+//!          client:u32
+//!          payload_bits:u32   # exact bit length of the payload
+//!          crc:u32            # CRC-32 (IEEE) of magic..payload inclusive
+//!          payload:[u8; ceil(payload_bits / 8)]
+//! ```
+//!
+//! Every field a receiver trusts is covered by either the CRC or a hard
+//! bound: `len` is cross-checked against `payload_bits`, payload size is
+//! capped by [`MAX_PAYLOAD_BYTES`], and any mismatch is a typed
+//! [`TransportError`], never a panic.
+
+use std::io::{Read, Write};
+
+use crate::transport::TransportError;
+
+/// Frame magic (distinct from the payload codec's 0x5BC0 so a desynced
+/// stream cannot be mistaken for a frame boundary).
+pub const MAGIC: u16 = 0xFE5B;
+
+/// Transport protocol version (frame layout + handshake semantics).
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Total framing bytes around a payload: 4 (length prefix) + 16 (header)
+/// + 4 (CRC).
+pub const HEADER_BYTES: u64 = 24;
+
+/// Hard cap on a single frame's payload (defense against corrupt or
+/// hostile length fields — nothing in this repo sends messages near it).
+pub const MAX_PAYLOAD_BYTES: u64 = 1 << 30;
+
+/// What a frame carries (the federation protocol's message kinds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FrameKind {
+    /// Client → server: identity + version/config negotiation.
+    #[default]
+    Hello,
+    /// Server → client: handshake accepted; carries the current round.
+    HelloAck,
+    /// Client → server: one encoded [`crate::compression::UpdateMsg`].
+    Update,
+    /// Server → client: the encoded broadcast aggregate for a round.
+    Broadcast,
+    /// Server → client: training finished; carries the weight digest.
+    Done,
+    /// Server → client: handshake or protocol rejection (code + text).
+    Error,
+}
+
+impl FrameKind {
+    fn tag(self) -> u8 {
+        match self {
+            FrameKind::Hello => 0,
+            FrameKind::HelloAck => 1,
+            FrameKind::Update => 2,
+            FrameKind::Broadcast => 3,
+            FrameKind::Done => 4,
+            FrameKind::Error => 5,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self, TransportError> {
+        Ok(match t {
+            0 => FrameKind::Hello,
+            1 => FrameKind::HelloAck,
+            2 => FrameKind::Update,
+            3 => FrameKind::Broadcast,
+            4 => FrameKind::Done,
+            5 => FrameKind::Error,
+            _ => return Err(TransportError::BadFrame(format!("unknown frame kind {t}"))),
+        })
+    }
+}
+
+/// One frame, owned — reusable as receive scratch (the payload buffer is
+/// kept across [`read_frame`] calls).
+#[derive(Clone, Debug, Default)]
+pub struct FrameBuf {
+    /// Message kind.
+    pub kind: FrameKind,
+    /// Communication round this frame belongs to (0 for handshake).
+    pub round: u32,
+    /// Sending (or addressed) client index.
+    pub client: u32,
+    /// Exact bit length of `payload` (the codec's bit count).
+    pub payload_bits: u32,
+    /// Payload bytes (`ceil(payload_bits / 8)` of them are meaningful).
+    pub payload: Vec<u8>,
+}
+
+impl FrameBuf {
+    /// Fill this frame in place (reusing the payload allocation).
+    pub fn set(&mut self, kind: FrameKind, round: u32, client: u32, payload: &[u8], bits: u64) {
+        debug_assert!(bits.div_ceil(8) <= payload.len() as u64);
+        debug_assert!(bits <= u32::MAX as u64);
+        self.kind = kind;
+        self.round = round;
+        self.client = client;
+        self.payload_bits = bits as u32;
+        self.payload.clear();
+        self.payload.extend_from_slice(&payload[..bits.div_ceil(8) as usize]);
+    }
+
+    /// Payload length in bytes implied by `payload_bits`.
+    pub fn payload_bytes(&self) -> usize {
+        (self.payload_bits as u64).div_ceil(8) as usize
+    }
+}
+
+/// Framing overhead in bits for a payload of `payload_bits`: header/CRC
+/// bytes plus the padding that byte-aligns the payload on the socket.
+/// By construction `payload_bits + overhead_bits(payload_bits)` equals
+/// `8 * frame_wire_bytes(payload_bits)` exactly — the reconciliation
+/// identity the federation tests assert against measured socket bytes.
+pub fn overhead_bits(payload_bits: u64) -> u64 {
+    HEADER_BYTES * 8 + (payload_bits.div_ceil(8) * 8 - payload_bits)
+}
+
+/// Total bytes a frame with `payload_bits` of payload occupies on the
+/// wire, length prefix included.
+pub fn frame_wire_bytes(payload_bits: u64) -> u64 {
+    HEADER_BYTES + payload_bits.div_ceil(8)
+}
+
+// --- CRC-32 (IEEE 802.3, reflected) -----------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE) over `chunks`, in order.
+pub fn crc32(chunks: &[&[u8]]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for chunk in chunks {
+        for &b in *chunk {
+            c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+    }
+    !c
+}
+
+// --- frame codec -------------------------------------------------------
+
+const INNER_HEADER: usize = 16; // magic..payload_bits
+const CRC_BYTES: usize = 4;
+
+/// Serialize one frame to `w` (a single header write + payload write).
+pub fn write_frame(w: &mut impl Write, f: &FrameBuf) -> Result<(), TransportError> {
+    let payload = &f.payload[..f.payload_bytes()];
+    let mut head = [0u8; 4 + INNER_HEADER + CRC_BYTES];
+    let len = (INNER_HEADER + CRC_BYTES + payload.len()) as u32;
+    head[0..4].copy_from_slice(&len.to_be_bytes());
+    head[4..6].copy_from_slice(&MAGIC.to_be_bytes());
+    head[6] = PROTOCOL_VERSION;
+    head[7] = f.kind.tag();
+    head[8..12].copy_from_slice(&f.round.to_be_bytes());
+    head[12..16].copy_from_slice(&f.client.to_be_bytes());
+    head[16..20].copy_from_slice(&f.payload_bits.to_be_bytes());
+    let crc = crc32(&[&head[4..20], payload]);
+    head[20..24].copy_from_slice(&crc.to_be_bytes());
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame from `r` into `f` (reusing `f.payload`). Every
+/// malformed input — bad magic, wrong protocol version, inconsistent
+/// lengths, CRC mismatch, truncation — is a typed error; no input can
+/// panic or trigger an unbounded allocation.
+pub fn read_frame(r: &mut impl Read, f: &mut FrameBuf) -> Result<(), TransportError> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_be_bytes(len4) as u64;
+    if len < (INNER_HEADER + CRC_BYTES) as u64 {
+        return Err(TransportError::BadFrame(format!("frame length {len} below header size")));
+    }
+    if len > INNER_HEADER as u64 + CRC_BYTES as u64 + MAX_PAYLOAD_BYTES {
+        return Err(TransportError::BadFrame(format!("frame length {len} exceeds cap")));
+    }
+    let mut head = [0u8; INNER_HEADER + CRC_BYTES];
+    r.read_exact(&mut head)?;
+    if head[0..2] != MAGIC.to_be_bytes() {
+        return Err(TransportError::BadFrame("bad frame magic".into()));
+    }
+    if head[2] != PROTOCOL_VERSION {
+        return Err(TransportError::VersionMismatch { ours: PROTOCOL_VERSION, theirs: head[2] });
+    }
+    let kind = FrameKind::from_tag(head[3])?;
+    let round = u32::from_be_bytes(head[8 - 4..12 - 4].try_into().unwrap());
+    let client = u32::from_be_bytes(head[12 - 4..16 - 4].try_into().unwrap());
+    let payload_bits = u32::from_be_bytes(head[16 - 4..20 - 4].try_into().unwrap());
+    let crc_wire = u32::from_be_bytes(head[20 - 4..24 - 4].try_into().unwrap());
+    let payload_len = len - (INNER_HEADER + CRC_BYTES) as u64;
+    if payload_len != (payload_bits as u64).div_ceil(8) {
+        return Err(TransportError::BadFrame(format!(
+            "frame length {payload_len} inconsistent with payload_bits {payload_bits}"
+        )));
+    }
+    f.payload.clear();
+    f.payload.resize(payload_len as usize, 0);
+    r.read_exact(&mut f.payload)?;
+    let crc = crc32(&[&head[..INNER_HEADER], &f.payload]);
+    if crc != crc_wire {
+        return Err(TransportError::BadFrame(format!(
+            "CRC mismatch: computed {crc:08x}, frame carries {crc_wire:08x}"
+        )));
+    }
+    f.kind = kind;
+    f.round = round;
+    f.client = client;
+    f.payload_bits = payload_bits;
+    Ok(())
+}
+
+// --- handshake / control payloads --------------------------------------
+
+/// `Hello` payload: everything the server validates before admitting a
+/// client into the round loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    /// Client index in `[0, clients)`.
+    pub client: u32,
+    /// The client's view of the fleet size.
+    pub clients: u32,
+    /// The client's flat parameter count.
+    pub n_params: u64,
+    /// Wire-format version the client encodes
+    /// ([`crate::codec::message::WIRE_VERSION`]).
+    pub wire_version: u8,
+    /// Digest of the training configuration (method, seed, schedule…).
+    pub config_digest: u64,
+}
+
+impl Hello {
+    const LEN: usize = 4 + 4 + 8 + 1 + 8;
+
+    /// Serialize to the fixed-size payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = vec![0u8; Self::LEN];
+        b[0..4].copy_from_slice(&self.client.to_be_bytes());
+        b[4..8].copy_from_slice(&self.clients.to_be_bytes());
+        b[8..16].copy_from_slice(&self.n_params.to_be_bytes());
+        b[16] = self.wire_version;
+        b[17..25].copy_from_slice(&self.config_digest.to_be_bytes());
+        b
+    }
+
+    /// Parse from a frame payload.
+    pub fn decode(b: &[u8]) -> Result<Hello, TransportError> {
+        if b.len() < Self::LEN {
+            return Err(TransportError::BadFrame(format!("hello payload {} bytes", b.len())));
+        }
+        Ok(Hello {
+            client: u32::from_be_bytes(b[0..4].try_into().unwrap()),
+            clients: u32::from_be_bytes(b[4..8].try_into().unwrap()),
+            n_params: u64::from_be_bytes(b[8..16].try_into().unwrap()),
+            wire_version: b[16],
+            config_digest: u64::from_be_bytes(b[17..25].try_into().unwrap()),
+        })
+    }
+
+    /// On-the-wire bits of a full `Hello` frame (for byte reconciliation).
+    pub fn frame_bits() -> u64 {
+        frame_wire_bytes(Self::LEN as u64 * 8) * 8
+    }
+}
+
+/// `HelloAck` payload: the server's accepted-handshake reply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HelloAck {
+    /// The round the server is currently collecting (resync point for
+    /// reconnecting clients).
+    pub round: u32,
+    /// Wire-format version the server speaks.
+    pub wire_version: u8,
+}
+
+impl HelloAck {
+    const LEN: usize = 5;
+
+    /// Serialize to the fixed-size payload.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = vec![0u8; Self::LEN];
+        b[0..4].copy_from_slice(&self.round.to_be_bytes());
+        b[4] = self.wire_version;
+        b
+    }
+
+    /// Parse from a frame payload.
+    pub fn decode(b: &[u8]) -> Result<HelloAck, TransportError> {
+        if b.len() < Self::LEN {
+            return Err(TransportError::BadFrame(format!("hello-ack payload {} bytes", b.len())));
+        }
+        Ok(HelloAck {
+            round: u32::from_be_bytes(b[0..4].try_into().unwrap()),
+            wire_version: b[4],
+        })
+    }
+
+    /// On-the-wire bits of a full `HelloAck` frame.
+    pub fn frame_bits() -> u64 {
+        frame_wire_bytes(Self::LEN as u64 * 8) * 8
+    }
+}
+
+/// Encode a `Done` payload (the final master-weight digest).
+pub fn encode_done(digest: u64) -> Vec<u8> {
+    digest.to_be_bytes().to_vec()
+}
+
+/// Parse a `Done` payload.
+pub fn decode_done(b: &[u8]) -> Result<u64, TransportError> {
+    if b.len() < 8 {
+        return Err(TransportError::BadFrame(format!("done payload {} bytes", b.len())));
+    }
+    Ok(u64::from_be_bytes(b[0..8].try_into().unwrap()))
+}
+
+/// On-the-wire bits of a full `Done` frame.
+pub fn done_frame_bits() -> u64 {
+    frame_wire_bytes(64) * 8
+}
+
+/// Encode an `Error` payload (rejection reason).
+pub fn encode_error(msg: &str) -> Vec<u8> {
+    msg.as_bytes().to_vec()
+}
+
+/// Parse an `Error` payload.
+pub fn decode_error(b: &[u8]) -> String {
+    String::from_utf8_lossy(b).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn frame(kind: FrameKind, payload: &[u8], bits: u64) -> FrameBuf {
+        let mut f = FrameBuf::default();
+        f.set(kind, 7, 3, payload, bits);
+        f
+    }
+
+    #[test]
+    fn crc32_reference_vector() {
+        // the canonical IEEE check value
+        assert_eq!(crc32(&[b"123456789"]), 0xCBF4_3926);
+        assert_eq!(crc32(&[b"1234", b"56789"]), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn roundtrip_with_unaligned_bits() {
+        let f = frame(FrameKind::Update, &[0xAB, 0xC0], 11);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        assert_eq!(buf.len() as u64, frame_wire_bytes(11));
+        // dirty reused scratch
+        let mut got = frame(FrameKind::Done, &[1, 2, 3, 4], 32);
+        read_frame(&mut Cursor::new(&buf), &mut got).unwrap();
+        assert_eq!(got.kind, FrameKind::Update);
+        assert_eq!((got.round, got.client, got.payload_bits), (7, 3, 11));
+        assert_eq!(&got.payload[..], &[0xAB, 0xC0]);
+    }
+
+    #[test]
+    fn overhead_reconciles_exactly() {
+        for bits in [0u64, 1, 7, 8, 9, 1000, 4096, 12345] {
+            assert_eq!(bits + overhead_bits(bits), frame_wire_bytes(bits) * 8, "{bits}");
+        }
+    }
+
+    #[test]
+    fn every_single_byte_corruption_is_rejected() {
+        let f = frame(FrameKind::Broadcast, &[1, 2, 3, 4, 5], 40);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        for i in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[i] ^= 0x40;
+            let mut out = FrameBuf::default();
+            assert!(
+                read_frame(&mut Cursor::new(&bad), &mut out).is_err(),
+                "flip at byte {i} accepted"
+            );
+        }
+        // truncation at every boundary
+        for cut in 0..buf.len() {
+            let mut out = FrameBuf::default();
+            assert!(read_frame(&mut Cursor::new(&buf[..cut]), &mut out).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn oversized_length_is_bounded() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame(FrameKind::Hello, &[], 0)).unwrap();
+        buf[0..4].copy_from_slice(&u32::MAX.to_be_bytes());
+        let mut out = FrameBuf::default();
+        let err = read_frame(&mut Cursor::new(&buf), &mut out).unwrap_err();
+        assert!(matches!(err, TransportError::BadFrame(_)), "{err}");
+    }
+
+    #[test]
+    fn handshake_payloads_roundtrip() {
+        let h = Hello { client: 2, clients: 4, n_params: 9999, wire_version: 2, config_digest: 0xDEAD_BEEF };
+        assert_eq!(Hello::decode(&h.encode()).unwrap(), h);
+        let a = HelloAck { round: 12, wire_version: 2 };
+        assert_eq!(HelloAck::decode(&a.encode()).unwrap(), a);
+        assert_eq!(decode_done(&encode_done(42)).unwrap(), 42);
+        assert!(Hello::decode(&[0u8; 3]).is_err());
+        assert!(HelloAck::decode(&[]).is_err());
+        assert!(decode_done(&[1]).is_err());
+    }
+}

@@ -1,0 +1,243 @@
+//! In-memory loopback transport: deterministic byte pipes with the exact
+//! blocking semantics of a socket (EOF on peer drop, read timeouts),
+//! plus the two instruments the federation tests need — per-direction
+//! byte counters (socket-bytes ↔ accounting reconciliation) and a fault
+//! hook that kills a chosen send to exercise the retry path.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::transport::frame::FrameBuf;
+use crate::transport::{Acceptor, Connector, FramedConn, Transport, TransportCfg, TransportError};
+
+/// One direction of a connection: a byte queue with socket semantics.
+struct Pipe {
+    state: Mutex<PipeState>,
+    cv: Condvar,
+}
+
+struct PipeState {
+    buf: VecDeque<u8>,
+    closed: bool,
+}
+
+impl Pipe {
+    fn new() -> Arc<Pipe> {
+        Arc::new(Pipe { state: Mutex::new(PipeState { buf: VecDeque::new(), closed: false }), cv: Condvar::new() })
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// One endpoint of a loopback connection (a reader pipe + a writer pipe).
+/// Dropping it closes both directions, so the peer observes EOF exactly
+/// like a closed socket.
+pub struct LoopbackStream {
+    rx: Arc<Pipe>,
+    tx: Arc<Pipe>,
+    sent: Arc<AtomicU64>,
+    read_timeout: Duration,
+}
+
+impl Read for LoopbackStream {
+    fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+        if out.is_empty() {
+            return Ok(0);
+        }
+        let mut st = self.rx.state.lock().unwrap();
+        while st.buf.is_empty() {
+            if st.closed {
+                return Ok(0); // EOF
+            }
+            let (next, timed_out) = self.rx.cv.wait_timeout(st, self.read_timeout).unwrap();
+            st = next;
+            if timed_out.timed_out() && st.buf.is_empty() && !st.closed {
+                return Err(io::Error::new(io::ErrorKind::TimedOut, "loopback read timed out"));
+            }
+        }
+        let n = out.len().min(st.buf.len());
+        for slot in out.iter_mut().take(n) {
+            *slot = st.buf.pop_front().unwrap();
+        }
+        Ok(n)
+    }
+}
+
+impl Write for LoopbackStream {
+    fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+        let mut st = self.tx.state.lock().unwrap();
+        if st.closed {
+            return Err(io::Error::new(io::ErrorKind::BrokenPipe, "loopback peer closed"));
+        }
+        st.buf.extend(data.iter().copied());
+        self.sent.fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.tx.cv.notify_all();
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Drop for LoopbackStream {
+    fn drop(&mut self) {
+        self.rx.close();
+        self.tx.close();
+    }
+}
+
+struct HubState {
+    pending: VecDeque<Box<dyn Transport>>,
+    closed: bool,
+}
+
+struct HubInner {
+    state: Mutex<HubState>,
+    cv: Condvar,
+    /// Bytes written by clients toward the server (shared with streams).
+    to_server: Arc<AtomicU64>,
+    /// Bytes written by the server toward clients (shared with streams).
+    to_clients: Arc<AtomicU64>,
+    read_timeout: Duration,
+}
+
+/// An in-memory "listener": connectors enqueue fully-formed server-side
+/// connections, [`Acceptor::accept`] dequeues them. Cloning shares the
+/// hub.
+#[derive(Clone)]
+pub struct LoopbackHub(Arc<HubInner>);
+
+impl LoopbackHub {
+    /// A fresh hub whose streams use `cfg.read_timeout` for blocking
+    /// reads.
+    pub fn new(cfg: &TransportCfg) -> LoopbackHub {
+        LoopbackHub(Arc::new(HubInner {
+            state: Mutex::new(HubState { pending: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            to_server: Arc::new(AtomicU64::new(0)),
+            to_clients: Arc::new(AtomicU64::new(0)),
+            read_timeout: cfg.read_timeout,
+        }))
+    }
+
+    /// A clean connector for one client.
+    pub fn connector(&self) -> LoopbackConnector {
+        LoopbackConnector { hub: self.clone(), fault: None }
+    }
+
+    /// A connector whose `n`-th successful frame send (1-based, handshake
+    /// included, counted across reconnects) fails with a connection
+    /// reset — the deterministic mid-round drop the retry tests use.
+    pub fn faulty_connector(&self, fail_at_send: u64) -> LoopbackConnector {
+        LoopbackConnector { hub: self.clone(), fault: Some(Arc::new(AtomicI64::new(fail_at_send as i64))) }
+    }
+
+    /// Total bytes clients have written toward the server.
+    pub fn bytes_to_server(&self) -> u64 {
+        self.0.to_server.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes the server has written toward clients.
+    pub fn bytes_to_clients(&self) -> u64 {
+        self.0.to_clients.load(Ordering::Relaxed)
+    }
+
+    fn connect(&self) -> Result<Box<dyn Transport>, TransportError> {
+        let inner = &self.0;
+        let a = Pipe::new(); // client -> server
+        let b = Pipe::new(); // server -> client
+        let client = LoopbackStream {
+            rx: b.clone(),
+            tx: a.clone(),
+            sent: inner.to_server.clone(),
+            read_timeout: inner.read_timeout,
+        };
+        let server = LoopbackStream {
+            rx: a,
+            tx: b,
+            sent: inner.to_clients.clone(),
+            read_timeout: inner.read_timeout,
+        };
+        let mut st = inner.state.lock().unwrap();
+        if st.closed {
+            return Err(TransportError::Closed);
+        }
+        st.pending.push_back(Box::new(FramedConn::new(server, "loopback-client".into())));
+        inner.cv.notify_all();
+        drop(st);
+        Ok(Box::new(FramedConn::new(client, "loopback-server".into())))
+    }
+}
+
+impl Acceptor for LoopbackHub {
+    fn accept(&self) -> Result<Box<dyn Transport>, TransportError> {
+        let inner = &self.0;
+        let mut st = inner.state.lock().unwrap();
+        loop {
+            if let Some(conn) = st.pending.pop_front() {
+                return Ok(conn);
+            }
+            if st.closed {
+                return Err(TransportError::Closed);
+            }
+            st = inner.cv.wait(st).unwrap();
+        }
+    }
+
+    fn shutdown(&self) {
+        self.0.state.lock().unwrap().closed = true;
+        self.0.cv.notify_all();
+    }
+}
+
+/// [`Connector`] for a [`LoopbackHub`], optionally carrying a fault plan.
+pub struct LoopbackConnector {
+    hub: LoopbackHub,
+    fault: Option<Arc<AtomicI64>>,
+}
+
+impl Connector for LoopbackConnector {
+    fn connect(&self) -> Result<Box<dyn Transport>, TransportError> {
+        let conn = self.hub.connect()?;
+        match &self.fault {
+            None => Ok(conn),
+            Some(countdown) => Ok(Box::new(FaultyConn { inner: conn, countdown: countdown.clone() })),
+        }
+    }
+}
+
+/// Transport wrapper that fails exactly one send (when the shared
+/// countdown hits zero), simulating a connection dropped mid-round. The
+/// countdown is shared across reconnects from the same connector, so the
+/// retried exchange goes through cleanly.
+struct FaultyConn {
+    inner: Box<dyn Transport>,
+    countdown: Arc<AtomicI64>,
+}
+
+impl Transport for FaultyConn {
+    fn send(&mut self, f: &FrameBuf) -> Result<(), TransportError> {
+        if self.countdown.fetch_sub(1, Ordering::SeqCst) == 1 {
+            return Err(TransportError::Io(io::Error::new(
+                io::ErrorKind::ConnectionReset,
+                "injected fault: connection dropped mid-send",
+            )));
+        }
+        self.inner.send(f)
+    }
+
+    fn recv(&mut self, into: &mut FrameBuf) -> Result<(), TransportError> {
+        self.inner.recv(into)
+    }
+
+    fn peer(&self) -> String {
+        self.inner.peer()
+    }
+}

@@ -1,0 +1,276 @@
+//! Real federation transport: framed connections carrying wire-format-v2
+//! messages between separate processes (or threads), so SBC's bit counts
+//! correspond to bytes that genuinely cross a socket.
+//!
+//! Layering (bottom-up):
+//!
+//! * [`frame`] — length-prefixed, CRC-checked frames around the payload
+//!   bits produced by [`crate::codec::message`];
+//! * [`Transport`] / [`Acceptor`] / [`Connector`] — the connection
+//!   abstraction, with two std-only implementations:
+//!   [`loopback::LoopbackHub`] (deterministic in-memory pipes with byte
+//!   counters and a fault hook) and [`tcp`] (`std::net`);
+//! * [`server::FederatedServer`] — accept loop + synchronous round
+//!   aggregation reusing [`crate::coordinator::aggregation`];
+//! * [`session`] — the remote client loop (bit-identical to the
+//!   in-process trainer's client phase) with bounded retry-with-backoff,
+//!   plus the [`session::run_federated`] driver.
+//!
+//! See `ARCHITECTURE.md` §Transport for the frame layout and the
+//! handshake/retry state machines.
+
+pub mod frame;
+pub mod loopback;
+pub mod server;
+pub mod session;
+pub mod tcp;
+
+use std::fmt;
+use std::io;
+use std::time::Duration;
+
+use crate::coordinator::trainer::TrainConfig;
+use frame::{read_frame, write_frame, FrameBuf};
+
+/// The wire-format version this build encodes and the handshake
+/// advertises ([`crate::codec::message`] v2). The golden-bytes regression
+/// test pins the actual encoding to this constant so the two cannot
+/// silently drift.
+pub use crate::codec::message::WIRE_VERSION;
+
+/// Everything that can go wrong on a federation connection. Every
+/// malformed or hostile input from the peer maps to one of these — no
+/// socket input can panic the process.
+#[derive(Debug)]
+pub enum TransportError {
+    /// Underlying I/O failure (connect refused, reset, timeout, EOF).
+    Io(io::Error),
+    /// A frame failed structural validation (magic, length bounds, CRC).
+    BadFrame(String),
+    /// The peer speaks a different frame-protocol version.
+    VersionMismatch {
+        /// Our protocol version.
+        ours: u8,
+        /// The version in the incoming frame.
+        theirs: u8,
+    },
+    /// The server refused the handshake (config/wire/id mismatch).
+    Rejected(String),
+    /// The peer violated the federation protocol (unexpected frame kind,
+    /// undecodable payload, inconsistent round).
+    Protocol(String),
+    /// The retry budget was exhausted without completing the exchange.
+    RetriesExhausted {
+        /// Connection attempts made (initial try + retries).
+        attempts: u32,
+        /// The error that ended the final attempt.
+        last: Box<TransportError>,
+    },
+    /// The endpoint was shut down (acceptor closed, hub drained).
+    Closed,
+    /// Waited longer than the configured round timeout for a peer.
+    Timeout(String),
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Io(e) => write!(f, "i/o: {e}"),
+            TransportError::BadFrame(m) => write!(f, "bad frame: {m}"),
+            TransportError::VersionMismatch { ours, theirs } => {
+                write!(f, "protocol version mismatch: ours {ours}, theirs {theirs}")
+            }
+            TransportError::Rejected(m) => write!(f, "rejected by server: {m}"),
+            TransportError::Protocol(m) => write!(f, "protocol violation: {m}"),
+            TransportError::RetriesExhausted { attempts, last } => {
+                write!(f, "retries exhausted after {attempts} attempts (last: {last})")
+            }
+            TransportError::Closed => write!(f, "endpoint closed"),
+            TransportError::Timeout(m) => write!(f, "timed out: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<io::Error> for TransportError {
+    fn from(e: io::Error) -> Self {
+        TransportError::Io(e)
+    }
+}
+
+impl TransportError {
+    /// Whether retrying on a fresh connection could help. Handshake
+    /// rejections and protocol violations are deterministic — retrying
+    /// them would loop forever — while I/O failures and corrupt frames
+    /// are transient.
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            TransportError::Io(_) | TransportError::BadFrame(_) | TransportError::Closed
+        )
+    }
+}
+
+/// One established, framed, bidirectional connection.
+pub trait Transport: Send {
+    /// Write one frame (blocking, flushed).
+    fn send(&mut self, f: &FrameBuf) -> Result<(), TransportError>;
+    /// Read one frame into `into` (blocking, honors the read timeout).
+    fn recv(&mut self, into: &mut FrameBuf) -> Result<(), TransportError>;
+    /// Human-readable peer label for errors and logs.
+    fn peer(&self) -> String;
+}
+
+/// Server side of connection establishment.
+pub trait Acceptor: Send + Sync {
+    /// Block until the next inbound connection (or shutdown).
+    fn accept(&self) -> Result<Box<dyn Transport>, TransportError>;
+    /// Unblock pending accepts; subsequent accepts fail with
+    /// [`TransportError::Closed`].
+    fn shutdown(&self);
+}
+
+/// Client side of connection establishment. `Sync` so one connector can
+/// serve a client across reconnects from its session thread.
+pub trait Connector: Send + Sync {
+    /// Establish a fresh connection (honoring the connect timeout).
+    fn connect(&self) -> Result<Box<dyn Transport>, TransportError>;
+}
+
+/// Timeouts and retry budget for federation connections — carried in
+/// [`TrainConfig`] so TOML configs and the CLI can set them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransportCfg {
+    /// TCP connect timeout per attempt.
+    pub connect_timeout: Duration,
+    /// Blocking-read timeout on established connections.
+    pub read_timeout: Duration,
+    /// Reconnect attempts per round exchange after the initial try.
+    pub max_retries: u32,
+    /// Backoff before the first retry; doubles each subsequent retry.
+    pub retry_backoff: Duration,
+    /// How long the server waits for a round's worth of client updates.
+    pub round_timeout: Duration,
+}
+
+impl Default for TransportCfg {
+    fn default() -> Self {
+        TransportCfg {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(30),
+            max_retries: 3,
+            retry_backoff: Duration::from_millis(50),
+            round_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// A [`Transport`] over any blocking byte stream (TCP socket, loopback
+/// pipe): frames go through [`frame::write_frame`] / [`frame::read_frame`]
+/// unchanged, so both implementations share one wire layout.
+pub struct FramedConn<S: io::Read + io::Write + Send> {
+    stream: S,
+    peer: String,
+}
+
+impl<S: io::Read + io::Write + Send> FramedConn<S> {
+    /// Wrap a connected stream.
+    pub fn new(stream: S, peer: String) -> Self {
+        FramedConn { stream, peer }
+    }
+}
+
+impl<S: io::Read + io::Write + Send> Transport for FramedConn<S> {
+    fn send(&mut self, f: &FrameBuf) -> Result<(), TransportError> {
+        write_frame(&mut self.stream, f)
+    }
+
+    fn recv(&mut self, into: &mut FrameBuf) -> Result<(), TransportError> {
+        read_frame(&mut self.stream, into)
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a digest over the exact bit patterns of a weight vector — the
+/// bit-identity check between federated and in-process training (equal
+/// digests ⇒ equal `f32::to_bits` sequences, NaN payloads included).
+pub fn weight_digest(w: &[f32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &x in w {
+        h = fnv1a(h, &x.to_bits().to_le_bytes());
+    }
+    h
+}
+
+/// Digest of everything both sides must agree on for the run to be
+/// bit-identical: method composition, seed, fleet size, iteration budget,
+/// position codec and learning-rate schedule. Exchanged in the handshake
+/// so a misconfigured client is rejected up front instead of silently
+/// producing a diverged model.
+pub fn config_digest(cfg: &TrainConfig) -> u64 {
+    let canon = format!(
+        "{:?}|{}|{}|{}|{:?}|{:?}",
+        cfg.method, cfg.seed, cfg.clients, cfg.iterations, cfg.pos_codec, cfg.lr
+    );
+    fnv1a(FNV_OFFSET, canon.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::registry::MethodConfig;
+    use crate::coordinator::schedule::LrSchedule;
+
+    #[test]
+    fn weight_digest_is_bit_sensitive() {
+        let a = weight_digest(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, weight_digest(&[1.0, 2.0, 3.0]));
+        assert_ne!(a, weight_digest(&[1.0, 2.0, 3.0000001]));
+        assert_ne!(a, weight_digest(&[1.0, 2.0]));
+        // -0.0 and 0.0 compare equal as floats but differ on the wire
+        assert_ne!(weight_digest(&[0.0]), weight_digest(&[-0.0]));
+    }
+
+    #[test]
+    fn config_digest_tracks_training_relevant_fields() {
+        let base = TrainConfig::new("m", MethodConfig::sbc2(), 100, LrSchedule::constant(0.1));
+        let d = config_digest(&base);
+        assert_eq!(d, config_digest(&base.clone()));
+        let mut seed = base.clone();
+        seed.seed ^= 1;
+        assert_ne!(d, config_digest(&seed));
+        let mut method = base.clone();
+        method.method = MethodConfig::signsgd(1e-3);
+        assert_ne!(d, config_digest(&method));
+        // verbosity / parallelism must NOT change the digest: they do not
+        // affect the trained bits
+        let mut cosmetic = base.clone();
+        cosmetic.verbose = true;
+        cosmetic.parallelism = 8;
+        assert_eq!(d, config_digest(&cosmetic));
+    }
+
+    #[test]
+    fn retryability_split() {
+        assert!(TransportError::Io(io::Error::from(io::ErrorKind::ConnectionReset)).is_retryable());
+        assert!(TransportError::BadFrame("x".into()).is_retryable());
+        assert!(!TransportError::Rejected("x".into()).is_retryable());
+        assert!(!TransportError::Protocol("x".into()).is_retryable());
+        assert!(!TransportError::VersionMismatch { ours: 1, theirs: 2 }.is_retryable());
+    }
+}

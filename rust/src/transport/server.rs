@@ -1,0 +1,353 @@
+//! The federation server: an accept loop feeding framed client updates
+//! into the existing sharded aggregation, round by round.
+//!
+//! Protocol (client-driven synchronous rounds):
+//!
+//! 1. connection → `Hello` / `HelloAck` handshake (protocol version is
+//!    checked at the frame layer; wire version, config digest, fleet
+//!    size, parameter count and client id here);
+//! 2. each round, every client sends one `Update` frame and blocks on
+//!    the matching `Broadcast`;
+//! 3. after the final broadcast the server sends `Done` carrying the
+//!    master-weight digest.
+//!
+//! Per-connection handler threads only parse frames and relay them to
+//! the round loop over a channel; the round loop performs decode →
+//! validate → densify → [`aggregate_sharded`] in **client-index order**,
+//! exactly like the in-process trainer, which is what makes the
+//! federated weight digest bit-identical to [`crate::coordinator::trainer::Trainer`].
+//! A reconnecting client may re-send the previous round's update; the
+//! server answers it from a depth-1 broadcast cache.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+use crate::codec::accounting::CommStats;
+use crate::codec::message::{self, WireCodec, WIRE_VERSION};
+use crate::compression::pipeline::compress_broadcast_into;
+use crate::compression::{Granularity, UpdateMsg};
+use crate::coordinator::aggregation::{aggregate_sharded, AggRule};
+use crate::coordinator::pool::WorkerPool;
+use crate::coordinator::trainer::TrainConfig;
+use crate::model::TensorLayout;
+use crate::netsim::NetSim;
+use crate::transport::frame::{
+    self, encode_done, encode_error, FrameBuf, FrameKind, Hello, HelloAck,
+};
+use crate::transport::{config_digest, weight_digest, Acceptor, Transport, TransportError};
+use crate::util::tensor;
+
+/// What the server hands back after a completed federated run.
+pub struct FederatedResult {
+    /// Final master weights.
+    pub final_params: Vec<f32>,
+    /// FNV digest of the final weights (what `Done` carried).
+    pub digest: u64,
+    /// Measured communication counters — payload bits *and* framing
+    /// overhead, field-for-field comparable to the in-process trainer's.
+    pub comm: CommStats,
+    /// Per-client simulated link totals over the framed byte counts.
+    pub net: NetSim,
+    /// Rounds executed.
+    pub rounds: usize,
+}
+
+/// One relayed client update awaiting aggregation.
+struct Packet {
+    client: usize,
+    round: u32,
+    payload: Vec<u8>,
+    bits: u64,
+    reply: mpsc::Sender<Reply>,
+}
+
+/// The round loop's answer to a handler: the broadcast for `round`, plus
+/// the final digest when training just finished.
+#[derive(Clone)]
+struct Reply {
+    round: u32,
+    bytes: Arc<Vec<u8>>,
+    bits: u64,
+    done: Option<u64>,
+}
+
+/// Handshake state shared between the accept/handler threads and the
+/// round loop.
+struct Shared {
+    stop: AtomicBool,
+    round: AtomicU32,
+    clients: u32,
+    n_params: u64,
+    cfg_digest: u64,
+}
+
+/// Accept loop + synchronous round aggregation over any [`Acceptor`].
+pub struct FederatedServer {
+    cfg: TrainConfig,
+    layout: TensorLayout,
+    initial: Vec<f32>,
+}
+
+impl FederatedServer {
+    /// A server that starts from `initial` master weights (must equal the
+    /// clients' `init_params(cfg.seed)` for bit-identity).
+    pub fn new(cfg: TrainConfig, layout: TensorLayout, initial: Vec<f32>) -> FederatedServer {
+        assert_eq!(initial.len(), layout.total, "initial params length mismatch");
+        FederatedServer { cfg, layout, initial }
+    }
+
+    /// Run the full federated training: accept `cfg.clients` sessions,
+    /// aggregate every round, broadcast, and return the final weights.
+    /// Typed error if a round cannot be completed within the retry/
+    /// timeout budget.
+    pub fn run(&mut self, acceptor: Arc<dyn Acceptor>) -> Result<FederatedResult, TransportError> {
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            round: AtomicU32::new(0),
+            clients: self.cfg.clients as u32,
+            n_params: self.layout.total as u64,
+            cfg_digest: config_digest(&self.cfg),
+        });
+        let (tx, rx) = mpsc::channel::<Packet>();
+
+        let accept_thread = {
+            let acceptor = acceptor.clone();
+            let shared = shared.clone();
+            let round_timeout = self.cfg.transport.round_timeout;
+            thread::spawn(move || loop {
+                match acceptor.accept() {
+                    Ok(conn) => {
+                        let tx = tx.clone();
+                        let shared = shared.clone();
+                        thread::spawn(move || handle_connection(conn, tx, shared, round_timeout));
+                    }
+                    Err(_) => {
+                        if shared.stop.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        // transient accept failure: keep listening
+                        thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                }
+            })
+        };
+
+        let result = self.round_loop(&rx, &shared);
+        shared.stop.store(true, Ordering::SeqCst);
+        acceptor.shutdown();
+        let _ = accept_thread.join();
+        result
+    }
+
+    /// The synchronous round loop: mirror of the in-process trainer's
+    /// accounting + aggregation, fed by the handler channel.
+    fn round_loop(
+        &mut self,
+        rx: &mpsc::Receiver<Packet>,
+        shared: &Shared,
+    ) -> Result<FederatedResult, TransportError> {
+        let cfg = &self.cfg;
+        let n = self.layout.total;
+        let nclients = cfg.clients;
+        let agg_rule = AggRule::for_method(&cfg.method);
+        let majority_vote = matches!(agg_rule, AggRule::MajoritySign { .. });
+        let sign_scale = cfg.method.sign_scale();
+        let gran = cfg.method.granularity;
+        let delay = cfg.method.delay;
+        let rounds = (cfg.iterations / delay).max(1);
+
+        let mut master = self.initial.clone();
+        let mut comm = CommStats::default();
+        let mut net = NetSim::new(cfg.uplink, cfg.downlink, nclients);
+        let pool = WorkerPool::new(cfg.parallelism.min(nclients.max(1)));
+
+        let mut slots: Vec<Option<Packet>> = (0..nclients).map(|_| None).collect();
+        let mut decoded: Vec<UpdateMsg> = (0..nclients).map(|_| UpdateMsg::scratch()).collect();
+        let mut denses: Vec<Vec<f32>> = (0..nclients).map(|_| vec![0.0f32; n]).collect();
+        let mut round_up_bits = vec![0u64; nclients];
+        let mut delta = vec![0.0f32; n];
+        let mut delta_rx = vec![0.0f32; n];
+        let mut down_wire = WireCodec::new(cfg.pos_codec);
+        let mut down_msg = UpdateMsg::scratch();
+        let mut down_decoded = UpdateMsg::scratch();
+        let mut cached: Option<Reply> = None;
+
+        for round in 0..rounds {
+            shared.round.store(round as u32, Ordering::SeqCst);
+
+            // collect one update per client for this round
+            let mut have = 0usize;
+            while have < nclients {
+                let pkt = rx.recv_timeout(cfg.transport.round_timeout).map_err(|_| {
+                    TransportError::Timeout(format!(
+                        "round {round}: got {have}/{nclients} client updates"
+                    ))
+                })?;
+                if pkt.round == round as u32 {
+                    if slots[pkt.client].is_none() {
+                        have += 1;
+                    }
+                    // a duplicate replaces the stale copy: the old reply
+                    // sender is dropped, which unblocks (and ends) the
+                    // dead handler it belonged to
+                    slots[pkt.client] = Some(pkt);
+                } else if let Some(c) = cached.as_ref().filter(|c| c.round == pkt.round) {
+                    // a reconnecting client re-sent the previous round's
+                    // update: answer from the broadcast cache
+                    let _ = pkt.reply.send(c.clone());
+                } else {
+                    return Err(TransportError::Protocol(format!(
+                        "client {} sent round {} while server is at {round}",
+                        pkt.client, pkt.round
+                    )));
+                }
+            }
+
+            // decode + account in client-index order, exactly like the
+            // in-process read-back
+            for ci in 0..nclients {
+                let pkt = slots[ci].as_ref().expect("slot filled above");
+                message::decode_into(&pkt.payload, pkt.bits, &mut decoded[ci]).map_err(|e| {
+                    TransportError::Protocol(format!("client {ci} update undecodable: {e}"))
+                })?;
+                decoded[ci].validate(&self.layout, gran).map_err(|e| {
+                    TransportError::Protocol(format!("client {ci} update invalid: {e}"))
+                })?;
+                for _ in 0..delay {
+                    comm.record_baseline_iter(n);
+                }
+                let nnz: usize = decoded[ci].tensors.iter().map(|t| t.nonzeros()).sum();
+                comm.record_message(pkt.bits, nnz as u64);
+                comm.record_frame_overhead(frame::overhead_bits(pkt.bits));
+                round_up_bits[ci] = pkt.bits + frame::overhead_bits(pkt.bits);
+                decoded[ci].densify_into(&self.layout, gran, sign_scale, &mut denses[ci]);
+                if majority_vote {
+                    for v in denses[ci].iter_mut() {
+                        *v = v.signum();
+                    }
+                }
+            }
+
+            aggregate_sharded(&denses[..], agg_rule, &pool, &mut delta);
+
+            compress_broadcast_into(&delta, round as u32, &mut down_msg);
+            let (bytes, bits) = down_wire.encode(&down_msg);
+            message::decode_into(bytes, bits, &mut down_decoded)
+                .expect("downstream roundtrip failed");
+            let bytes = Arc::new(bytes.to_vec());
+            down_decoded.densify_into(&self.layout, Granularity::Global, 1.0, &mut delta_rx);
+            tensor::add_assign(&mut master, &delta_rx);
+            comm.record_frame_overhead(frame::overhead_bits(bits) * nclients as u64);
+            net.round(&round_up_bits, bits + frame::overhead_bits(bits));
+
+            let last = round + 1 == rounds;
+            let done = if last { Some(weight_digest(&master)) } else { None };
+            let reply = Reply { round: round as u32, bytes, bits, done };
+            for slot in slots.iter_mut() {
+                let pkt = slot.take().expect("slot filled above");
+                // a send failure means that handler died; its client will
+                // reconnect and be served from the cache
+                let _ = pkt.reply.send(reply.clone());
+            }
+            cached = Some(reply);
+        }
+
+        let digest = weight_digest(&master);
+        Ok(FederatedResult { final_params: master, digest, comm, net, rounds })
+    }
+}
+
+/// Per-connection handler: handshake, then relay Update frames to the
+/// round loop and write its replies back to the socket. Any protocol or
+/// I/O failure simply ends the connection — recovery is the client's
+/// reconnect-and-retry loop.
+fn handle_connection(
+    mut conn: Box<dyn Transport>,
+    tx: mpsc::Sender<Packet>,
+    shared: Arc<Shared>,
+    round_timeout: std::time::Duration,
+) {
+    let mut buf = FrameBuf::default();
+    if conn.recv(&mut buf).is_err() || buf.kind != FrameKind::Hello {
+        return;
+    }
+    let hello = match Hello::decode(&buf.payload) {
+        Ok(h) => h,
+        Err(_) => return,
+    };
+    if let Some(reason) = reject_reason(&hello, &shared) {
+        let payload = encode_error(&reason);
+        buf.set(FrameKind::Error, 0, hello.client, &payload, payload.len() as u64 * 8);
+        let _ = conn.send(&buf);
+        return;
+    }
+    let ack = HelloAck { round: shared.round.load(Ordering::SeqCst), wire_version: WIRE_VERSION };
+    let payload = ack.encode();
+    buf.set(FrameKind::HelloAck, ack.round, hello.client, &payload, payload.len() as u64 * 8);
+    if conn.send(&buf).is_err() {
+        return;
+    }
+
+    loop {
+        if conn.recv(&mut buf).is_err() {
+            return; // EOF / reset / timeout: client reconnects if it cares
+        }
+        if buf.kind != FrameKind::Update || buf.client != hello.client {
+            return;
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let pkt = Packet {
+            client: hello.client as usize,
+            round: buf.round,
+            payload: buf.payload[..buf.payload_bytes()].to_vec(),
+            bits: buf.payload_bits as u64,
+            reply: reply_tx,
+        };
+        if tx.send(pkt).is_err() {
+            return; // round loop ended
+        }
+        let reply = match reply_rx.recv_timeout(round_timeout) {
+            Ok(r) => r,
+            Err(_) => return, // superseded by a reconnect, or server error
+        };
+        buf.set(FrameKind::Broadcast, reply.round, hello.client, &reply.bytes, reply.bits);
+        if conn.send(&buf).is_err() {
+            return;
+        }
+        if let Some(digest) = reply.done {
+            let payload = encode_done(digest);
+            buf.set(FrameKind::Done, reply.round, hello.client, &payload, 64);
+            let _ = conn.send(&buf);
+            return;
+        }
+    }
+}
+
+fn reject_reason(hello: &Hello, shared: &Shared) -> Option<String> {
+    if hello.wire_version != WIRE_VERSION {
+        return Some(format!(
+            "wire version mismatch: client {}, server {WIRE_VERSION}",
+            hello.wire_version
+        ));
+    }
+    if hello.clients != shared.clients {
+        return Some(format!(
+            "fleet size mismatch: client expects {}, server runs {}",
+            hello.clients, shared.clients
+        ));
+    }
+    if hello.client >= shared.clients {
+        return Some(format!("client id {} out of range (fleet {})", hello.client, shared.clients));
+    }
+    if hello.n_params != shared.n_params {
+        return Some(format!(
+            "parameter count mismatch: client {}, server {}",
+            hello.n_params, shared.n_params
+        ));
+    }
+    if hello.config_digest != shared.cfg_digest {
+        return Some("training config digest mismatch (method/seed/schedule differ)".into());
+    }
+    None
+}

@@ -1,0 +1,323 @@
+//! The remote client session: one federated participant running its
+//! local training against a [`FederatedServer`] over any [`Connector`],
+//! plus [`run_federated`] — the in-process driver that runs a server and
+//! all client sessions over a transport and returns both sides' results.
+//!
+//! A session replicates the in-process trainer's client loop *exactly* —
+//! same [`ClientState`] construction, same RNG streams, same residual /
+//! momentum-mask updates against its own decoded bytes — so the master
+//! weights it converges to are bit-identical to [`Trainer::run`]'s.
+//!
+//! Fault tolerance: every frame exchange runs under a bounded
+//! retry-with-exponential-backoff loop. A dropped connection, truncated
+//! frame or timeout tears the connection down and reconnects (the
+//! handshake re-runs, the *same* encoded update is re-sent — local
+//! training is never repeated, so the RNG streams stay aligned); a
+//! rejection or protocol violation is fatal immediately. When the retry
+//! budget is spent the session fails with
+//! [`TransportError::RetriesExhausted`] carrying the last cause.
+//!
+//! [`FederatedServer`]: crate::transport::server::FederatedServer
+//! [`Trainer::run`]: crate::coordinator::trainer::Trainer::run
+
+use std::sync::Arc;
+use std::thread;
+
+use crate::codec::message::{self, WIRE_VERSION};
+use crate::compression::momentum_mask::mask_momentum;
+use crate::compression::{Granularity, UpdateMsg};
+use crate::coordinator::client::ClientState;
+use crate::coordinator::pool::WorkerPool;
+use crate::coordinator::trainer::TrainConfig;
+use crate::coordinator::TrainBackend;
+use crate::transport::frame::{decode_done, decode_error, FrameBuf, FrameKind, Hello, HelloAck};
+use crate::transport::server::{FederatedResult, FederatedServer};
+use crate::transport::{
+    config_digest, weight_digest, Acceptor, Connector, Transport, TransportError,
+};
+use crate::util::tensor;
+
+/// What one client session hands back after a completed federated run.
+pub struct ClientOutcome {
+    /// This client's converged master weights.
+    pub final_params: Vec<f32>,
+    /// FNV digest of the final weights.
+    pub digest: u64,
+    /// Cumulative upstream payload bits this client sent (excluding
+    /// framing — comparable to the in-process `ClientState::up_bits`).
+    pub up_bits: u64,
+    /// Reconnect attempts this session performed across all rounds.
+    pub retries: u32,
+    /// The digest the server announced in its `Done` frame.
+    pub server_digest: u64,
+}
+
+/// One client's connection state: lazily (re)established, torn down on
+/// any retryable failure so the next exchange reconnects and re-runs the
+/// handshake.
+struct Session<'a> {
+    connector: &'a dyn Connector,
+    cfg: &'a TrainConfig,
+    hello: Hello,
+    conn: Option<Box<dyn Transport>>,
+    retries: u32,
+}
+
+impl<'a> Session<'a> {
+    fn new(cfg: &'a TrainConfig, id: usize, n_params: usize, connector: &'a dyn Connector) -> Self {
+        let hello = Hello {
+            client: id as u32,
+            clients: cfg.clients as u32,
+            n_params: n_params as u64,
+            wire_version: WIRE_VERSION,
+            config_digest: config_digest(cfg),
+        };
+        Session { connector, cfg, hello, conn: None, retries: 0 }
+    }
+
+    /// Connect + handshake if there is no live connection.
+    fn ensure_conn(&mut self, scratch: &mut FrameBuf) -> Result<(), TransportError> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let mut conn = self.connector.connect()?;
+        let payload = self.hello.encode();
+        scratch.set(FrameKind::Hello, 0, self.hello.client, &payload, payload.len() as u64 * 8);
+        conn.send(scratch)?;
+        conn.recv(scratch)?;
+        match scratch.kind {
+            FrameKind::HelloAck => {
+                let ack = HelloAck::decode(&scratch.payload)?;
+                if ack.wire_version != WIRE_VERSION {
+                    return Err(TransportError::VersionMismatch {
+                        ours: WIRE_VERSION,
+                        theirs: ack.wire_version,
+                    });
+                }
+            }
+            FrameKind::Error => {
+                return Err(TransportError::Rejected(decode_error(
+                    &scratch.payload[..scratch.payload_bytes()],
+                )));
+            }
+            k => {
+                return Err(TransportError::Protocol(format!(
+                    "expected HelloAck, got {k:?} frame"
+                )))
+            }
+        }
+        self.conn = Some(conn);
+        Ok(())
+    }
+
+    /// Send this round's update and receive the matching broadcast, under
+    /// the retry budget. `update` is re-sent verbatim on reconnect —
+    /// local training is NOT repeated.
+    fn exchange(
+        &mut self,
+        update: &FrameBuf,
+        reply: &mut FrameBuf,
+    ) -> Result<(), TransportError> {
+        let mut attempt: u32 = 0;
+        loop {
+            match self.try_exchange(update, reply) {
+                Ok(()) => return Ok(()),
+                Err(e) if e.is_retryable() => {
+                    self.conn = None;
+                    self.retries += 1;
+                    if attempt >= self.cfg.transport.max_retries {
+                        return Err(TransportError::RetriesExhausted {
+                            attempts: attempt + 1,
+                            last: Box::new(e),
+                        });
+                    }
+                    thread::sleep(self.cfg.transport.retry_backoff * (1 << attempt.min(16)));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn try_exchange(
+        &mut self,
+        update: &FrameBuf,
+        reply: &mut FrameBuf,
+    ) -> Result<(), TransportError> {
+        self.ensure_conn(reply)?;
+        let conn = self.conn.as_mut().expect("ensure_conn succeeded");
+        conn.send(update)?;
+        loop {
+            conn.recv(reply)?;
+            match reply.kind {
+                FrameKind::Broadcast if reply.round == update.round => return Ok(()),
+                // a reconnect can replay the previous round's broadcast
+                // out of the server cache: skip anything stale
+                FrameKind::Broadcast if reply.round < update.round => continue,
+                FrameKind::Done => continue, // stale final marker
+                FrameKind::Error => {
+                    return Err(TransportError::Rejected(decode_error(
+                        &reply.payload[..reply.payload_bytes()],
+                    )))
+                }
+                k => {
+                    return Err(TransportError::Protocol(format!(
+                        "expected Broadcast round {}, got {k:?} round {}",
+                        update.round, reply.round
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Read the server's `Done` digest after the final broadcast.
+    fn read_done(&mut self, scratch: &mut FrameBuf) -> Result<u64, TransportError> {
+        let conn = self.conn.as_mut().ok_or(TransportError::Closed)?;
+        conn.recv(scratch)?;
+        if scratch.kind != FrameKind::Done {
+            return Err(TransportError::Protocol(format!(
+                "expected Done, got {:?} frame",
+                scratch.kind
+            )));
+        }
+        decode_done(&scratch.payload[..scratch.payload_bytes()])
+    }
+}
+
+/// Run one client's full federated training against a server reachable
+/// through `connector`. Bit-identical to the same client's role in the
+/// in-process [`Trainer`](crate::coordinator::trainer::Trainer) run.
+pub fn run_client<B: TrainBackend>(
+    cfg: &TrainConfig,
+    id: usize,
+    connector: &dyn Connector,
+    backend: &mut B,
+) -> Result<ClientOutcome, TransportError> {
+    let n = backend.n_params();
+    let layout = backend.layout().clone();
+    let opt_size = backend.opt_size();
+    let mut master = backend.init_params(cfg.seed);
+    let mut c = ClientState::for_config(cfg, id, n, opt_size);
+
+    let gran = cfg.method.granularity;
+    let sign_scale = cfg.method.sign_scale();
+    let momentum_masking = cfg.method.momentum_masking;
+    let delay = cfg.method.delay;
+    let rounds = (cfg.iterations / delay).max(1);
+
+    let mut acc = vec![0.0f32; n];
+    let mut delta_rx = vec![0.0f32; n];
+    let mut down_decoded = UpdateMsg::scratch();
+    let mut update = FrameBuf::default();
+    let mut reply = FrameBuf::default();
+    let mut session = Session::new(cfg, id, n, connector);
+
+    for round in 0..rounds {
+        let lr = cfg.lr.at(round * delay);
+
+        // local training + compress + wire encode: the exact in-process
+        // client phase (see trainer::run_client_round)
+        let (w_new, _loss) =
+            backend.local_steps(&master, &mut c.opt, delay, lr, c.iterations, id, &mut c.rng);
+        c.iterations += delay;
+        tensor::sub_into(&mut acc, &w_new, &master);
+        c.residual.accumulate_into(&mut acc);
+        c.pipeline.compress_into(&acc, &layout, round as u32, &mut c.msg);
+        let (bytes, bits) = c.wire.encode(&c.msg);
+        update.set(FrameKind::Update, round as u32, id as u32, bytes, bits);
+        message::decode_into(bytes, bits, &mut c.decoded).expect("wire roundtrip failed");
+        c.up_bits += bits;
+
+        session.exchange(&update, &mut reply)?;
+
+        // client-side bookkeeping against its own decoded bytes — the
+        // residual and momentum mask see exactly what the server decoded
+        c.decoded.densify_into(&layout, gran, sign_scale, &mut c.dense);
+        c.residual.update(&acc, &c.dense);
+        if momentum_masking {
+            tensor::nonzero_indices_into(&c.dense, &mut c.mask_idx);
+            mask_momentum(&mut c.opt, n, &c.mask_idx);
+        }
+
+        // apply the broadcast aggregate
+        message::decode_into(
+            &reply.payload[..reply.payload_bytes()],
+            reply.payload_bits as u64,
+            &mut down_decoded,
+        )
+        .map_err(|e| TransportError::Protocol(format!("broadcast undecodable: {e}")))?;
+        down_decoded
+            .validate(&layout, Granularity::Global)
+            .map_err(|e| TransportError::Protocol(format!("broadcast invalid: {e}")))?;
+        down_decoded.densify_into(&layout, Granularity::Global, 1.0, &mut delta_rx);
+        tensor::add_assign(&mut master, &delta_rx);
+    }
+
+    let server_digest = session.read_done(&mut reply)?;
+    let digest = weight_digest(&master);
+    if server_digest != digest {
+        return Err(TransportError::Protocol(format!(
+            "weight digest diverged: client {digest:016x}, server {server_digest:016x}"
+        )));
+    }
+    Ok(ClientOutcome {
+        final_params: master,
+        digest,
+        up_bits: c.up_bits,
+        retries: session.retries,
+        server_digest,
+    })
+}
+
+/// Drive a complete federated run in one process: a [`FederatedServer`]
+/// on its own thread, plus `cfg.clients` client sessions on a
+/// [`WorkerPool`], each with its own backend from `make_backend(id)` and
+/// its own connection from `connectors[id]`. Client errors take
+/// precedence over the server's (a dead client is the root cause of the
+/// server's round timeout).
+pub fn run_federated<B, F>(
+    cfg: &TrainConfig,
+    acceptor: Arc<dyn Acceptor>,
+    connectors: Vec<Box<dyn Connector>>,
+    make_backend: F,
+) -> Result<(FederatedResult, Vec<ClientOutcome>), TransportError>
+where
+    B: TrainBackend,
+    F: Fn(usize) -> B + Sync,
+{
+    assert_eq!(connectors.len(), cfg.clients, "one connector per client");
+    let (layout, initial) = {
+        let mut probe = make_backend(0);
+        let init = probe.init_params(cfg.seed);
+        (probe.layout().clone(), init)
+    };
+    let mut server = FederatedServer::new(cfg.clone(), layout, initial);
+
+    struct Job {
+        id: usize,
+        connector: Box<dyn Connector>,
+        out: Option<Result<ClientOutcome, TransportError>>,
+    }
+
+    let mut jobs: Vec<Job> = connectors
+        .into_iter()
+        .enumerate()
+        .map(|(id, connector)| Job { id, connector, out: None })
+        .collect();
+
+    let server_result = thread::scope(|s| {
+        let server_thread = s.spawn(move || server.run(acceptor));
+        let pool = WorkerPool::new(cfg.clients);
+        pool.for_each(&mut jobs, |_, job| {
+            let mut backend = make_backend(job.id);
+            job.out = Some(run_client(cfg, job.id, &*job.connector, &mut backend));
+        });
+        server_thread.join().expect("server thread panicked")
+    });
+
+    let mut outcomes = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        outcomes.push(job.out.expect("pool ran every job")?);
+    }
+    Ok((server_result?, outcomes))
+}

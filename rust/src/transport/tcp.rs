@@ -1,0 +1,83 @@
+//! `std::net` TCP transport: the same framed protocol as loopback over
+//! real sockets. Connect/read timeouts come from
+//! [`crate::transport::TransportCfg`]; Nagle is disabled because every
+//! frame is a complete protocol step that the peer is blocked on.
+
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use crate::transport::{Acceptor, Connector, FramedConn, Transport, TransportCfg, TransportError};
+
+fn configure(stream: &TcpStream, read_timeout: Duration) -> std::io::Result<()> {
+    stream.set_nodelay(true)?;
+    // set_read_timeout rejects Some(ZERO); our ZERO means "no timeout"
+    let t = if read_timeout.is_zero() { None } else { Some(read_timeout) };
+    stream.set_read_timeout(t)
+}
+
+/// Accepts framed connections on a bound [`TcpListener`].
+pub struct TcpAcceptor {
+    listener: TcpListener,
+    addr: SocketAddr,
+    read_timeout: Duration,
+    stopped: AtomicBool,
+}
+
+impl TcpAcceptor {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port).
+    pub fn bind(addr: impl ToSocketAddrs, cfg: &TransportCfg) -> Result<TcpAcceptor, TransportError> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Ok(TcpAcceptor { listener, addr, read_timeout: cfg.read_timeout, stopped: AtomicBool::new(false) })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Acceptor for TcpAcceptor {
+    fn accept(&self) -> Result<Box<dyn Transport>, TransportError> {
+        loop {
+            if self.stopped.load(Ordering::SeqCst) {
+                return Err(TransportError::Closed);
+            }
+            let (stream, peer) = self.listener.accept()?;
+            if self.stopped.load(Ordering::SeqCst) {
+                return Err(TransportError::Closed);
+            }
+            configure(&stream, self.read_timeout)?;
+            return Ok(Box::new(FramedConn::new(stream, peer.to_string())));
+        }
+    }
+
+    fn shutdown(&self) {
+        self.stopped.store(true, Ordering::SeqCst);
+        // wake a blocked accept() with a throwaway connection
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+    }
+}
+
+/// Connects framed sessions to a [`TcpAcceptor`] (or any server speaking
+/// the frame protocol).
+pub struct TcpConnector {
+    addr: SocketAddr,
+    cfg: TransportCfg,
+}
+
+impl TcpConnector {
+    /// A connector for `addr` using `cfg`'s connect/read timeouts.
+    pub fn new(addr: SocketAddr, cfg: &TransportCfg) -> TcpConnector {
+        TcpConnector { addr, cfg: *cfg }
+    }
+}
+
+impl Connector for TcpConnector {
+    fn connect(&self) -> Result<Box<dyn Transport>, TransportError> {
+        let stream = TcpStream::connect_timeout(&self.addr, self.cfg.connect_timeout)?;
+        configure(&stream, self.cfg.read_timeout)?;
+        Ok(Box::new(FramedConn::new(stream, self.addr.to_string())))
+    }
+}

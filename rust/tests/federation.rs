@@ -1,0 +1,214 @@
+//! End-to-end federation transport tests: client sessions over the
+//! loopback and TCP transports against a `FederatedServer`, asserting
+//! the headline invariant — the federated weight digest is bit-identical
+//! to the in-process trainer, serial *and* pooled — plus byte-level
+//! reconciliation between measured socket traffic and the accounting /
+//! netsim counters, retry-with-backoff under an injected connection
+//! drop, a typed error when the retry budget is spent, and handshake
+//! rejection of misconfigured clients.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use sbc::compression::registry::MethodConfig;
+use sbc::coordinator::schedule::LrSchedule;
+use sbc::coordinator::trainer::{TrainConfig, TrainResult, Trainer};
+use sbc::coordinator::TrainBackend;
+use sbc::sgd::NativeMlpBackend;
+use sbc::transport::frame::{done_frame_bits, Hello, HelloAck};
+use sbc::transport::loopback::LoopbackHub;
+use sbc::transport::server::{FederatedResult, FederatedServer};
+use sbc::transport::session::{run_client, run_federated, ClientOutcome};
+use sbc::transport::tcp::{TcpAcceptor, TcpConnector};
+use sbc::transport::{weight_digest, Acceptor, Connector, Transport, TransportError};
+
+fn backend() -> NativeMlpBackend {
+    NativeMlpBackend::digits_small(4, 1)
+}
+
+fn fed_cfg(method: MethodConfig, iterations: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new("mlp-small", method, iterations, LrSchedule::constant(0.1));
+    cfg.eval_every_rounds = 50;
+    cfg.eval_batches = 2;
+    cfg.transport.retry_backoff = Duration::from_millis(2);
+    cfg
+}
+
+fn in_process(cfg: &TrainConfig, parallelism: usize) -> TrainResult {
+    let mut cfg = cfg.clone();
+    cfg.parallelism = parallelism;
+    let mut be = backend();
+    Trainer::new(&mut be, cfg).run()
+}
+
+fn loopback_run(cfg: &TrainConfig) -> (FederatedResult, Vec<ClientOutcome>, LoopbackHub) {
+    let hub = LoopbackHub::new(&cfg.transport);
+    let connectors: Vec<Box<dyn Connector>> =
+        (0..cfg.clients).map(|_| Box::new(hub.connector()) as Box<dyn Connector>).collect();
+    let (fed, outs) = run_federated(cfg, Arc::new(hub.clone()), connectors, |_| backend())
+        .expect("federated loopback run");
+    (fed, outs, hub)
+}
+
+/// The tentpole invariant, on two presets covering sparse + delayed
+/// (SBC) and dense-sign + majority-vote (signSGD) dataflows: training
+/// over real framed connections produces master weights bit-identical to
+/// the in-process trainer (serial and pooled), with field-for-field
+/// equal communication accounting, and the measured socket bytes
+/// reconcile exactly with the accounted bits.
+#[test]
+fn loopback_matches_in_process_trainer_bit_for_bit() {
+    for (method, iters) in [(MethodConfig::sbc2(), 60), (MethodConfig::signsgd(1e-3), 20)] {
+        let cfg = fed_cfg(method, iters);
+        let serial = in_process(&cfg, 1);
+        let pooled = in_process(&cfg, 4);
+        let (fed, outs, hub) = loopback_run(&cfg);
+        let label = cfg.method.label();
+
+        let want: Vec<u32> = serial.final_params.iter().map(|v| v.to_bits()).collect();
+        let got: Vec<u32> = fed.final_params.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "{label}");
+        assert_eq!(fed.digest, weight_digest(&serial.final_params), "{label}");
+        assert_eq!(fed.digest, weight_digest(&pooled.final_params), "{label}");
+        assert_eq!(outs.len(), cfg.clients);
+        for out in &outs {
+            assert_eq!(out.digest, fed.digest, "{label}");
+            assert_eq!(out.server_digest, fed.digest, "{label}");
+            assert_eq!(out.retries, 0, "{label}");
+        }
+
+        // accounting parity, field for field
+        assert_eq!(fed.comm.upstream_bits, serial.comm.upstream_bits, "{label}");
+        assert_eq!(fed.comm.messages, serial.comm.messages, "{label}");
+        assert_eq!(fed.comm.nonzeros, serial.comm.nonzeros, "{label}");
+        assert_eq!(fed.comm.baseline_bits, serial.comm.baseline_bits, "{label}");
+        assert_eq!(fed.comm.frame_overhead_bits, serial.comm.frame_overhead_bits, "{label}");
+        assert_eq!(fed.net.total_up_bits(), serial.net.total_up_bits(), "{label}");
+        for (fc, sc) in fed.net.clients.iter().zip(&serial.net.clients) {
+            assert_eq!(fc.up_bits, sc.up_bits, "{label}");
+            assert_eq!(fc.down_bits, sc.down_bits, "{label}");
+            assert_eq!(fc.messages, sc.messages, "{label}");
+        }
+        let (ft, st) = (fed.net.total_comm_time_s, serial.net.total_comm_time_s);
+        assert_eq!(ft.to_bits(), st.to_bits(), "{label}");
+
+        // measured socket bytes reconcile exactly with the bit counters:
+        // upstream is every framed Update (payload + frame overhead, all
+        // in netsim's up bits) plus one Hello frame per session;
+        // downstream is every framed Broadcast plus one HelloAck and one
+        // Done per session
+        let c = cfg.clients as u64;
+        let up = fed.net.total_up_bits() + c * Hello::frame_bits();
+        assert_eq!(hub.bytes_to_server() * 8, up, "{label}");
+        let down: u64 = fed.net.clients.iter().map(|cl| cl.down_bits).sum();
+        let down = down + c * (HelloAck::frame_bits() + done_frame_bits());
+        assert_eq!(hub.bytes_to_clients() * 8, down, "{label}");
+    }
+}
+
+/// Same invariant over real sockets: four clients against a server on an
+/// ephemeral 127.0.0.1 port.
+#[test]
+fn tcp_four_clients_match_in_process_digest() {
+    let cfg = fed_cfg(MethodConfig::sbc2(), 40);
+    let serial = in_process(&cfg, 1);
+    let acceptor = Arc::new(TcpAcceptor::bind("127.0.0.1:0", &cfg.transport).expect("bind"));
+    let addr = acceptor.local_addr();
+    let connectors: Vec<Box<dyn Connector>> = (0..cfg.clients)
+        .map(|_| Box::new(TcpConnector::new(addr, &cfg.transport)) as Box<dyn Connector>)
+        .collect();
+    let (fed, outs) =
+        run_federated(&cfg, acceptor, connectors, |_| backend()).expect("federated tcp run");
+    assert_eq!(fed.digest, weight_digest(&serial.final_params));
+    assert_eq!(fed.rounds, 4);
+    assert_eq!(outs.iter().map(|o| o.up_bits).sum::<u64>(), serial.comm.upstream_bits);
+    for out in &outs {
+        assert_eq!(out.digest, fed.digest);
+    }
+}
+
+/// The loopback fault hook kills client 2's third frame send (Hello,
+/// Update round 0, then Update round 1 dies mid-flight): the session
+/// must reconnect with backoff, re-handshake, re-send the *same* encoded
+/// update, and the run must still converge to the bit-identical digest.
+#[test]
+fn dropped_connection_is_retried_and_stays_bit_identical() {
+    let cfg = fed_cfg(MethodConfig::sbc2(), 60);
+    let serial = in_process(&cfg, 1);
+    let hub = LoopbackHub::new(&cfg.transport);
+    let mut connectors: Vec<Box<dyn Connector>> =
+        (0..cfg.clients).map(|_| Box::new(hub.connector()) as Box<dyn Connector>).collect();
+    connectors[2] = Box::new(hub.faulty_connector(3));
+    let (fed, outs) = run_federated(&cfg, Arc::new(hub.clone()), connectors, |_| backend())
+        .expect("run recovers from the injected drop");
+    assert_eq!(fed.digest, weight_digest(&serial.final_params));
+    assert!(outs[2].retries >= 1, "the fault was never exercised");
+    assert_eq!(outs[0].retries, 0);
+    for out in &outs {
+        assert_eq!(out.digest, fed.digest);
+    }
+}
+
+/// A connector that never reaches a server.
+struct NeverConnect;
+
+impl Connector for NeverConnect {
+    fn connect(&self) -> Result<Box<dyn Transport>, TransportError> {
+        Err(TransportError::Io(std::io::Error::new(
+            std::io::ErrorKind::ConnectionRefused,
+            "nobody listening",
+        )))
+    }
+}
+
+/// When the retry budget is spent the session fails with the typed
+/// `RetriesExhausted` error carrying the attempt count and last cause —
+/// and the server's round loop times out instead of hanging.
+#[test]
+fn retry_budget_exhaustion_is_a_typed_error() {
+    let mut cfg = fed_cfg(MethodConfig::sbc2(), 20);
+    cfg.transport.max_retries = 2;
+    cfg.transport.retry_backoff = Duration::from_millis(1);
+    cfg.transport.round_timeout = Duration::from_millis(800);
+    let hub = LoopbackHub::new(&cfg.transport);
+    let connectors: Vec<Box<dyn Connector>> =
+        (0..cfg.clients).map(|_| Box::new(NeverConnect) as Box<dyn Connector>).collect();
+    let err = run_federated(&cfg, Arc::new(hub), connectors, |_| backend())
+        .expect_err("no client could ever connect");
+    match err {
+        TransportError::RetriesExhausted { attempts, last } => {
+            assert_eq!(attempts, cfg.transport.max_retries + 1);
+            assert!(matches!(*last, TransportError::Io(_)), "last cause: {last}");
+        }
+        other => panic!("expected RetriesExhausted, got {other}"),
+    }
+}
+
+/// A client whose training config digest disagrees with the server's is
+/// rejected at the handshake (fatal, not retried), and the server keeps
+/// its typed-timeout behavior instead of hanging on the half-empty round.
+#[test]
+fn misconfigured_client_is_rejected_at_handshake() {
+    let mut server_cfg = fed_cfg(MethodConfig::sbc2(), 20);
+    server_cfg.transport.round_timeout = Duration::from_millis(400);
+    let (layout, initial) = {
+        let mut probe = backend();
+        let initial = probe.init_params(server_cfg.seed);
+        (probe.layout().clone(), initial)
+    };
+    let hub = LoopbackHub::new(&server_cfg.transport);
+    let acceptor: Arc<dyn Acceptor> = Arc::new(hub.clone());
+    let mut server = FederatedServer::new(server_cfg.clone(), layout, initial);
+    let server_thread = thread::spawn(move || server.run(acceptor));
+
+    let mut client_cfg = server_cfg.clone();
+    client_cfg.seed ^= 1; // diverging config digest
+    let connector = hub.connector();
+    let err =
+        run_client(&client_cfg, 0, &connector, &mut backend()).expect_err("must be rejected");
+    assert!(matches!(err, TransportError::Rejected(_)), "got {err}");
+
+    let server_err = server_thread.join().expect("server thread").expect_err("no valid clients");
+    assert!(matches!(server_err, TransportError::Timeout(_)), "got {server_err}");
+}
