@@ -122,6 +122,42 @@ pub fn train_config_from_doc(doc: &Doc) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
+/// Settings for `sbc-train train --simulate` (the TOML `[sim]` section;
+/// every key optional, CLI flags override).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SimSettings {
+    /// Number of seeded schedules to sweep (`sim.schedules`).
+    pub schedules: u64,
+    /// Fault profile name: "none", "light", "harsh" or "mixed"
+    /// (alternating light/harsh) (`sim.profile`).
+    pub profile: String,
+    /// Base seed for the sweep — schedule `i` runs on `seed + i`
+    /// (`sim.seed`).
+    pub seed: u64,
+}
+
+impl Default for SimSettings {
+    fn default() -> Self {
+        SimSettings { schedules: 20, profile: "mixed".into(), seed: 1 }
+    }
+}
+
+/// Parse the `[sim]` section of a config doc (defaults where absent).
+pub fn sim_settings_from_doc(doc: &Doc) -> SimSettings {
+    let d = SimSettings::default();
+    SimSettings {
+        schedules: doc.i64_or("sim.schedules", d.schedules as i64).max(1) as u64,
+        profile: doc.str_or("sim.profile", &d.profile).to_string(),
+        seed: doc.i64_or("sim.seed", d.seed as i64).max(0) as u64,
+    }
+}
+
+/// Read a TOML config file and parse its `[sim]` section.
+pub fn load_sim_settings(path: &str) -> Result<SimSettings> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(sim_settings_from_doc(&Doc::parse(&text)?))
+}
+
 fn ms(v: i64) -> std::time::Duration {
     std::time::Duration::from_millis(v.max(0) as u64)
 }
@@ -209,6 +245,25 @@ mod tests {
         // absent section keeps the defaults
         let plain = train_config_from_doc(&Doc::parse("model = \"lenet\"").unwrap()).unwrap();
         assert_eq!(plain.transport, crate::transport::TransportCfg::default());
+    }
+
+    #[test]
+    fn sim_keys() {
+        let doc = Doc::parse(
+            r#"
+            model = "lenet"
+            [sim]
+            schedules = 64
+            profile = "harsh"
+            seed = 9
+            "#,
+        )
+        .unwrap();
+        let sim = sim_settings_from_doc(&doc);
+        assert_eq!(sim, SimSettings { schedules: 64, profile: "harsh".into(), seed: 9 });
+        // absent section keeps the defaults
+        let plain = sim_settings_from_doc(&Doc::parse("model = \"lenet\"").unwrap());
+        assert_eq!(plain, SimSettings::default());
     }
 
     #[test]

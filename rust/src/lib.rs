@@ -42,5 +42,6 @@ pub mod model;
 pub mod netsim;
 pub mod runtime;
 pub mod sgd;
+pub mod simnet;
 pub mod transport;
 pub mod util;

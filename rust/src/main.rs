@@ -100,6 +100,11 @@ fn print_help() {
                     [--connect ADDR --client-id K] join as federated client K\n\
                     (federated runs use the native backend and produce\n\
                      bit-identical weights to the in-process trainer)\n\
+                    [--simulate] [--schedules N] [--sim-profile none|light|harsh|mixed]\n\
+                    sweep N seeded fault schedules of the federation\n\
+                    protocol on a virtual clock (deterministic: any\n\
+                    failure replays from --seed alone); exits nonzero\n\
+                    on invariant violations\n\
            table1   print theoretical compression rates (paper Table I)\n\
            inspect  [--artifacts DIR] summarize the AOT manifest\n\
            golomb   print eq.-5 optimal position-bit table\n\
@@ -136,6 +141,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if args.flag("pjrt-compress") {
         cfg.use_pjrt_compress = true;
+    }
+
+    // deterministic simulation: the full federation protocol on a
+    // virtual clock under seeded fault schedules (ARCHITECTURE.md §6)
+    if args.flag("simulate") {
+        return cmd_simulate(cfg, args);
     }
 
     // federated paths: real sockets, native backend (see README
@@ -184,6 +195,101 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if args.flag("timers") {
         eprint!("{}", TIMERS.report());
+    }
+    Ok(())
+}
+
+/// `train --simulate`: sweep seeded fault schedules of the full
+/// federation protocol — real server, real client sessions — on a
+/// virtual clock, checking every schedule against the in-process serial
+/// trainer. Exits nonzero on any invariant violation (a panic, weight
+/// divergence, or accounting drift).
+fn cmd_simulate(mut cfg: TrainConfig, args: &Args) -> Result<()> {
+    use sbc::simnet::fault::render_repro;
+    use sbc::simnet::{check_run, run_schedule, SimConfig, SimProfile, Verdict};
+
+    fn profile_for(name: &str, i: u64) -> Result<SimProfile> {
+        Ok(match name {
+            "none" | "clean" => SimProfile::default(),
+            "light" => SimProfile::light(),
+            "harsh" => SimProfile::harsh(),
+            "mixed" => {
+                if i % 2 == 0 {
+                    SimProfile::light()
+                } else {
+                    SimProfile::harsh()
+                }
+            }
+            other => bail!("unknown sim profile '{other}' (none|light|harsh|mixed)"),
+        })
+    }
+
+    let mut sim = if let Some(path) = args.get("config") {
+        config::load_sim_settings(path)?
+    } else {
+        config::SimSettings::default()
+    };
+    if let Some(n) = args.get("schedules") {
+        sim.schedules = n.parse::<u64>()?.max(1);
+    }
+    if let Some(p) = args.get("sim-profile") {
+        sim.profile = p.to_string();
+    }
+    if let Some(seed) = args.get("seed") {
+        sim.seed = seed.parse()?;
+    }
+    profile_for(&sim.profile, 0)?; // validate the name up front
+
+    cfg.model = "mlp-native".into();
+    println!(
+        "# [{}] simulating {} schedule(s) from seed {} ({} profile), {} clients",
+        cfg.method.label(),
+        sim.schedules,
+        sim.seed,
+        sim.profile,
+        cfg.clients,
+    );
+    let serial = {
+        let mut be = NativeMlpBackend::mnist_mlp(cfg.clients, cfg.seed);
+        Trainer::new(&mut be, cfg.clone()).run()
+    };
+
+    let (mut completed, mut failed, mut violations) = (0u64, 0u64, 0u64);
+    for i in 0..sim.schedules {
+        let seed = sim.seed.wrapping_add(i);
+        let mut sc = SimConfig::new(seed);
+        sc.profile = profile_for(&sim.profile, i)?;
+        let run = run_schedule(&cfg, &sc, |_| NativeMlpBackend::mnist_mlp(cfg.clients, cfg.seed));
+        match check_run(&serial, &run) {
+            Verdict::Completed => {
+                completed += 1;
+                println!(
+                    "# seed {seed}: completed bit-identical ({} faults, {:?} virtual)",
+                    run.applied.len(),
+                    run.virtual_time,
+                );
+            }
+            Verdict::TypedFailure(m) => {
+                failed += 1;
+                println!("# seed {seed}: typed failure ({} faults): {m}", run.applied.len());
+            }
+            Verdict::Violation(m) => {
+                violations += 1;
+                eprintln!(
+                    "seed {seed}: INVARIANT VIOLATION: {m}\n{}",
+                    render_repro(seed, &run.applied),
+                );
+            }
+        }
+    }
+    println!(
+        "# sweep done: {completed} completed, {failed} typed failures, {violations} violations"
+    );
+    if violations > 0 {
+        bail!(
+            "{violations} invariant violation(s) — replay any seed with \
+             --simulate --seed <s> --schedules 1"
+        );
     }
     Ok(())
 }

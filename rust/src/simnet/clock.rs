@@ -1,0 +1,404 @@
+//! The clock abstraction that makes the federation stack simulatable:
+//! every wall-clock wait in [`crate::transport`] (retry backoff, round
+//! timeouts, blocking reads) goes through a [`Clock`], so the same
+//! server/session code runs either against real time ([`RealClock`]) or
+//! against a deterministic **virtual clock** ([`SimClock`]) owned by the
+//! simulator.
+//!
+//! # The waiting protocol
+//!
+//! Blocking code never sleeps on a condition directly; it polls:
+//!
+//! ```text
+//! loop {
+//!     let e = clock.epoch();          // wake generation, read FIRST
+//!     if condition_holds() { break }  // poll shared state
+//!     if clock.now() >= deadline { /* timed out */ }
+//!     clock.park(e, deadline - now);  // returns on wake_all() or deadline
+//! }
+//! ```
+//!
+//! Reading the epoch *before* polling closes the lost-wakeup race: a
+//! state change + [`Clock::wake_all`] between the poll and the park bumps
+//! the epoch, so the park returns immediately and the condition is
+//! re-checked.
+//!
+//! # Virtual time
+//!
+//! [`SimClock`] runs real threads on fake time. Every simulated thread
+//! registers as an **actor** ([`Clock::actor`]); computation takes zero
+//! virtual time, and the clock only advances when *every* registered
+//! actor is parked — at that quiescent point the clock jumps straight to
+//! the earliest parked deadline and wakes everyone. Because nothing else
+//! can move time forward, all virtual timestamps are a pure function of
+//! the event graph and the seed, not of OS scheduling or host speed: the
+//! property that makes failing schedules replayable from `(seed, config)`
+//! alone.
+//!
+//! A quiescent state in which no actor holds a finite deadline is a
+//! genuine distributed deadlock; [`SimClock`] panics with an actor dump
+//! instead of hanging, which turns "the test hung" into an attributable
+//! failure.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Sentinel deadline for "park until woken" (no timeout).
+const FOREVER: u64 = u64::MAX;
+
+/// Cap a single real-clock park slice; callers loop, so waking early is
+/// only a spurious re-poll (and keeps `wait_timeout` far from overflow).
+const REAL_PARK_CAP: Duration = Duration::from_secs(3600);
+
+fn sat_add(now_ns: u64, d: Duration) -> u64 {
+    now_ns.saturating_add(u64::try_from(d.as_nanos()).unwrap_or(FOREVER))
+}
+
+/// A source of time plus a park/wake rendezvous — see the module docs
+/// for the polling protocol every user must follow.
+pub trait Clock: Send + Sync {
+    /// Monotonic time since this clock's epoch (process start for the
+    /// real clock, simulation start for the virtual one).
+    fn now(&self) -> Duration;
+
+    /// Block the calling thread for `d` (of this clock's time).
+    fn sleep(&self, d: Duration);
+
+    /// Current wake generation. Read it *before* polling shared state,
+    /// then pass it to [`Clock::park`].
+    fn epoch(&self) -> u64;
+
+    /// Park until [`Clock::wake_all`] bumps the epoch past `seen` or
+    /// `timeout` elapses; returns `true` if the timeout elapsed. A
+    /// `timeout` of [`Duration::MAX`] parks until woken.
+    fn park(&self, seen: u64, timeout: Duration) -> bool;
+
+    /// Wake every parked thread (call after any state change that could
+    /// unblock a waiter).
+    fn wake_all(&self);
+
+    /// Register the calling context as a simulated actor for the guard's
+    /// lifetime. A no-op on the real clock; on [`SimClock`] the virtual
+    /// time cannot advance while any registered actor is runnable, so
+    /// **every** thread participating in a simulation must hold a guard
+    /// (create it *before* spawning the thread to avoid a registration
+    /// race).
+    fn actor(&self) -> ActorGuard;
+}
+
+// ---------------------------------------------------------------------
+// Real clock
+// ---------------------------------------------------------------------
+
+/// Wall-clock [`Clock`]: `now` is process uptime, `sleep` is
+/// [`std::thread::sleep`], park/wake is a plain condvar. Used by the TCP
+/// and loopback federation paths.
+pub struct RealClock {
+    start: Instant,
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl RealClock {
+    /// A fresh wall clock (epoch = now).
+    pub fn new() -> RealClock {
+        RealClock { start: Instant::now(), epoch: Mutex::new(0), cv: Condvar::new() }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+
+    fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn park(&self, seen: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now().checked_add(timeout);
+        let mut e = self.epoch.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if *e != seen {
+                return false;
+            }
+            let left = match deadline {
+                // `None` (overflowed Instant) means effectively forever
+                None => REAL_PARK_CAP,
+                Some(d) => match d.checked_duration_since(Instant::now()) {
+                    Some(left) if !left.is_zero() => left.min(REAL_PARK_CAP),
+                    _ => return true,
+                },
+            };
+            let (next, _timed_out) =
+                self.cv.wait_timeout(e, left).unwrap_or_else(|p| p.into_inner());
+            e = next;
+        }
+    }
+
+    fn wake_all(&self) {
+        *self.epoch.lock().unwrap_or_else(|e| e.into_inner()) += 1;
+        self.cv.notify_all();
+    }
+
+    fn actor(&self) -> ActorGuard {
+        ActorGuard { sim: None }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Virtual clock
+// ---------------------------------------------------------------------
+
+struct SimState {
+    /// Virtual nanoseconds since simulation start.
+    now_ns: u64,
+    /// Wake generation.
+    epoch: u64,
+    /// Registered actors (threads the quiescence rule waits for).
+    actors: usize,
+    /// Parked actors' deadlines, keyed by a unique park token.
+    waiters: BTreeMap<u64, u64>,
+    next_token: u64,
+    /// Set when quiescence is reached with no finite deadline (a genuine
+    /// distributed deadlock). Every parked thread observes it and panics
+    /// on its *own* stack — the detector must not panic while holding the
+    /// state lock, or the other parked threads would never wake and the
+    /// "deadlock detected" path would itself hang the test binary.
+    dead: bool,
+}
+
+struct SimInner {
+    state: Mutex<SimState>,
+    cv: Condvar,
+}
+
+/// Lock the sim state tolerating poison: once one thread panics (e.g. on
+/// deadlock detection), the survivors must still be able to wake up and
+/// report, not cascade into lost wakeups.
+fn lock_sim(inner: &SimInner) -> std::sync::MutexGuard<'_, SimState> {
+    inner.state.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl SimInner {
+    /// If every registered actor is parked, advance virtual time to the
+    /// earliest parked deadline and wake everyone. Called with the state
+    /// lock held, at every transition that could complete quiescence.
+    /// Deliberately panic-free (it runs inside `ActorGuard::drop`, which
+    /// may execute during an unwind).
+    fn maybe_advance(&self, st: &mut SimState) {
+        if st.dead || st.actors == 0 || st.waiters.len() < st.actors {
+            return;
+        }
+        let min = st.waiters.values().copied().min().unwrap_or(FOREVER);
+        if min == FOREVER {
+            st.dead = true;
+            st.epoch += 1;
+            self.cv.notify_all();
+            return;
+        }
+        if min > st.now_ns {
+            st.now_ns = min;
+        }
+        st.epoch += 1;
+        self.cv.notify_all();
+    }
+}
+
+/// Deterministic virtual clock for simulation runs — see the module docs
+/// for the advancement rule. Clones share one timeline.
+#[derive(Clone)]
+pub struct SimClock {
+    inner: Arc<SimInner>,
+}
+
+impl SimClock {
+    /// A virtual clock at t = 0 with no registered actors.
+    pub fn new() -> SimClock {
+        SimClock {
+            inner: Arc::new(SimInner {
+                state: Mutex::new(SimState {
+                    now_ns: 0,
+                    epoch: 0,
+                    actors: 0,
+                    waiters: BTreeMap::new(),
+                    next_token: 0,
+                    dead: false,
+                }),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+}
+
+impl Default for SimClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimClock {
+    fn die_if_dead(st: &SimState) {
+        if st.dead {
+            panic!(
+                "simulated deadlock: all {} actors are parked with no finite deadline \
+                 at t={}ns — some wait is missing a timeout",
+                st.actors, st.now_ns
+            );
+        }
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(lock_sim(&self.inner).now_ns)
+    }
+
+    fn sleep(&self, d: Duration) {
+        let deadline = sat_add(lock_sim(&self.inner).now_ns, d);
+        loop {
+            let st = lock_sim(&self.inner);
+            if st.now_ns >= deadline {
+                return;
+            }
+            let seen = st.epoch;
+            let left = Duration::from_nanos(deadline - st.now_ns);
+            drop(st);
+            self.park(seen, left);
+        }
+    }
+
+    fn epoch(&self) -> u64 {
+        lock_sim(&self.inner).epoch
+    }
+
+    fn park(&self, seen: u64, timeout: Duration) -> bool {
+        let mut st = lock_sim(&self.inner);
+        Self::die_if_dead(&st);
+        if st.epoch != seen {
+            return false;
+        }
+        let deadline =
+            if timeout == Duration::MAX { FOREVER } else { sat_add(st.now_ns, timeout) };
+        let token = st.next_token;
+        st.next_token += 1;
+        st.waiters.insert(token, deadline);
+        self.inner.maybe_advance(&mut st);
+        while st.epoch == seen && st.now_ns < deadline {
+            st = self.inner.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+        let timed_out = st.now_ns >= deadline;
+        st.waiters.remove(&token);
+        Self::die_if_dead(&st);
+        timed_out
+    }
+
+    fn wake_all(&self) {
+        let mut st = lock_sim(&self.inner);
+        st.epoch += 1;
+        self.inner.cv.notify_all();
+    }
+
+    fn actor(&self) -> ActorGuard {
+        let mut st = lock_sim(&self.inner);
+        st.actors += 1;
+        ActorGuard { sim: Some(self.inner.clone()) }
+    }
+}
+
+/// Registration handle from [`Clock::actor`]; deregisters on drop (which
+/// may itself complete quiescence and advance the virtual clock).
+pub struct ActorGuard {
+    sim: Option<Arc<SimInner>>,
+}
+
+impl Drop for ActorGuard {
+    fn drop(&mut self) {
+        if let Some(sim) = self.sim.take() {
+            let mut st = lock_sim(&sim);
+            st.actors -= 1;
+            sim.maybe_advance(&mut st);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn real_clock_park_times_out() {
+        let c = RealClock::new();
+        let e = c.epoch();
+        let t0 = Instant::now();
+        assert!(c.park(e, Duration::from_millis(5)));
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn real_clock_stale_epoch_returns_immediately() {
+        let c = RealClock::new();
+        let e = c.epoch();
+        c.wake_all();
+        let t0 = Instant::now();
+        assert!(!c.park(e, Duration::from_secs(10)));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn sim_single_actor_sleep_advances_instantly() {
+        let c = SimClock::new();
+        let _me = c.actor();
+        c.sleep(Duration::from_secs(3600));
+        assert_eq!(c.now(), Duration::from_secs(3600));
+        c.sleep(Duration::from_millis(1));
+        assert_eq!(c.now(), Duration::from_secs(3600) + Duration::from_millis(1));
+    }
+
+    #[test]
+    fn sim_two_actors_wake_in_deadline_order() {
+        // two sleepers with different deadlines: virtual time must visit
+        // both deadlines in order, and the earlier sleeper wakes first
+        let c = SimClock::new();
+        let log = Arc::new(AtomicU64::new(0));
+        let tokens: Vec<ActorGuard> = (0..2).map(|_| c.actor()).collect();
+        let mut handles = Vec::new();
+        for (i, tok) in tokens.into_iter().enumerate() {
+            let c = c.clone();
+            let log = log.clone();
+            handles.push(std::thread::spawn(move || {
+                let _tok = tok;
+                let d = Duration::from_millis(if i == 0 { 10 } else { 25 });
+                c.sleep(d);
+                // record wake time in ms in decimal digit slots
+                let slot = if i == 0 { 1 } else { 1000 };
+                log.fetch_add(c.now().as_millis() as u64 * slot, Ordering::SeqCst);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(log.load(Ordering::SeqCst), 25_000 + 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "simulated deadlock")]
+    fn sim_detects_deadlock() {
+        let c = SimClock::new();
+        let _me = c.actor();
+        let e = c.epoch();
+        c.park(e, Duration::MAX); // sole actor parks forever
+    }
+}

@@ -1,0 +1,549 @@
+//! The fault-schedule DSL: which frames the simulator drops, duplicates,
+//! corrupts, delays or uses to kill a connection.
+//!
+//! Faults are decided **per frame send**, from two layers:
+//!
+//! 1. an explicit [`FaultPlan`] — ordered [`FaultRule`]s whose [`When`]
+//!    predicates match on the frame's [`FrameCtx`] (client, connection
+//!    attempt, per-connection sequence number, direction, kind, round,
+//!    n-th match); first matching rule wins;
+//! 2. a probabilistic [`SimProfile`] — per-frame fault sampling from an
+//!    RNG stream keyed by `(seed, client, attempt, seq, dir)`, so every
+//!    decision is a pure function of the seed and the frame's identity,
+//!    independent of thread timing.
+//!
+//! Every fault the simulator *applies* is recorded as an
+//! [`AppliedFault`]; the shrinker suppresses subsets of those records
+//! (via [`FaultPlan::suppress`]) to find a minimal reproducing schedule,
+//! then re-expresses the survivors as exact [`FaultRule`]s
+//! ([`AppliedFault::to_rule`]) and a copy-pastable test case.
+
+use std::collections::HashSet;
+use std::fmt;
+
+use crate::transport::frame::FrameKind;
+use crate::util::rng::Rng;
+
+/// Direction of a frame on a simulated connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Dir {
+    /// Client → server.
+    Up,
+    /// Server → client.
+    Down,
+}
+
+impl fmt::Display for Dir {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Dir::Up => write!(f, "up"),
+            Dir::Down => write!(f, "down"),
+        }
+    }
+}
+
+/// Identity of one frame send, as seen by the fault layer. `(client,
+/// attempt, seq, dir)` is unique per simulation and deterministic across
+/// replays: each side of each connection numbers its own sends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameCtx {
+    /// Owning client id (both directions of that client's connections).
+    pub client: u32,
+    /// 0-based connection attempt for this client (bumped on reconnect).
+    pub attempt: u32,
+    /// 0-based send sequence number within `(client, attempt, dir)`.
+    pub seq: u64,
+    /// Frame direction.
+    pub dir: Dir,
+    /// Frame kind (handshake frames are faultable too).
+    pub kind: FrameKind,
+    /// Protocol round the frame carries.
+    pub round: u32,
+}
+
+/// Unique, replay-stable key of one frame send (the [`FrameCtx`] minus
+/// the descriptive fields).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FaultKey {
+    /// Owning client id.
+    pub client: u32,
+    /// Connection attempt.
+    pub attempt: u32,
+    /// Per-`(client, attempt, dir)` send sequence number.
+    pub seq: u64,
+    /// Frame direction.
+    pub dir: Dir,
+}
+
+impl FrameCtx {
+    /// The replay-stable key of this send.
+    pub fn key(&self) -> FaultKey {
+        FaultKey { client: self.client, attempt: self.attempt, seq: self.seq, dir: self.dir }
+    }
+}
+
+/// What to do to a matched frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Silently discard the frame (the peer sees nothing).
+    Drop,
+    /// Deliver the frame twice (the copy trails by one jitter draw).
+    Duplicate,
+    /// Flip one bit of the serialized frame (position = value mod bits).
+    CorruptBit(u32),
+    /// Hold the frame for an extra `ms` before delivery (straggler pause
+    /// when it exceeds the server's round timeout).
+    DelayMs(u64),
+    /// Tear the connection down (both directions, in-flight frames lost)
+    /// — the simulator's client crash/restart point: the session's
+    /// reconnect path is the restart.
+    KillConn,
+}
+
+impl fmt::Display for FaultAction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultAction::Drop => write!(f, "drop"),
+            FaultAction::Duplicate => write!(f, "dup"),
+            FaultAction::CorruptBit(b) => write!(f, "corrupt(bit {b})"),
+            FaultAction::DelayMs(ms) => write!(f, "delay({ms}ms)"),
+            FaultAction::KillConn => write!(f, "kill"),
+        }
+    }
+}
+
+/// Predicate over [`FrameCtx`] — every field is optional; `When::any()`
+/// matches everything, and each setter narrows the match.
+#[derive(Clone, Debug, Default)]
+pub struct When {
+    clients: Option<Vec<u32>>,
+    rounds: Option<(u32, u32)>,
+    kinds: Option<Vec<FrameKind>>,
+    dir: Option<Dir>,
+    attempt: Option<u32>,
+    seq: Option<u64>,
+    nth: Option<u64>,
+}
+
+impl When {
+    /// Match every frame.
+    pub fn any() -> When {
+        When::default()
+    }
+
+    /// Restrict to one client id.
+    pub fn client(mut self, c: u32) -> When {
+        self.clients.get_or_insert_with(Vec::new).push(c);
+        self
+    }
+
+    /// Restrict to rounds in `[lo, hi]` (inclusive).
+    pub fn rounds(mut self, lo: u32, hi: u32) -> When {
+        self.rounds = Some((lo, hi));
+        self
+    }
+
+    /// Restrict to one round.
+    pub fn round(self, r: u32) -> When {
+        self.rounds(r, r)
+    }
+
+    /// Restrict to one frame kind.
+    pub fn kind(mut self, k: FrameKind) -> When {
+        self.kinds.get_or_insert_with(Vec::new).push(k);
+        self
+    }
+
+    /// Restrict to one direction.
+    pub fn dir(mut self, d: Dir) -> When {
+        self.dir = Some(d);
+        self
+    }
+
+    /// Restrict to one connection attempt.
+    pub fn attempt(mut self, a: u32) -> When {
+        self.attempt = Some(a);
+        self
+    }
+
+    /// Restrict to one per-connection send sequence number.
+    pub fn seq(mut self, s: u64) -> When {
+        self.seq = Some(s);
+        self
+    }
+
+    /// Fire only on the n-th (1-based) frame this rule matches.
+    pub fn nth(mut self, n: u64) -> When {
+        self.nth = Some(n);
+        self
+    }
+
+    fn matches(&self, ctx: &FrameCtx) -> bool {
+        if let Some(cs) = &self.clients {
+            if !cs.contains(&ctx.client) {
+                return false;
+            }
+        }
+        if let Some((lo, hi)) = self.rounds {
+            if ctx.round < lo || ctx.round > hi {
+                return false;
+            }
+        }
+        if let Some(ks) = &self.kinds {
+            if !ks.contains(&ctx.kind) {
+                return false;
+            }
+        }
+        if self.dir.is_some_and(|d| d != ctx.dir) {
+            return false;
+        }
+        if self.attempt.is_some_and(|a| a != ctx.attempt) {
+            return false;
+        }
+        if self.seq.is_some_and(|s| s != ctx.seq) {
+            return false;
+        }
+        true
+    }
+}
+
+/// One `when → action` entry of a [`FaultPlan`].
+#[derive(Clone, Debug)]
+pub struct FaultRule {
+    /// The predicate.
+    pub when: When,
+    /// The fault to apply to matching frames.
+    pub action: FaultAction,
+}
+
+/// Background per-frame fault probabilities, sampled from a seeded RNG
+/// stream per frame (see module docs). All default to 0 (no faults).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimProfile {
+    /// P(drop) per frame.
+    pub drop_p: f64,
+    /// P(duplicate) per frame.
+    pub dup_p: f64,
+    /// P(single-bit corruption) per frame.
+    pub corrupt_p: f64,
+    /// P(connection kill) per frame send.
+    pub kill_p: f64,
+    /// P(straggler pause) per frame.
+    pub straggle_p: f64,
+    /// Straggler pause length, milliseconds.
+    pub straggle_ms: u64,
+}
+
+impl SimProfile {
+    /// A mild chaos profile: occasional drops/dups/corruption/kills and
+    /// sub-round-timeout straggler pauses — most schedules should still
+    /// complete, exercising every recovery path.
+    pub fn light() -> SimProfile {
+        SimProfile {
+            drop_p: 0.02,
+            dup_p: 0.02,
+            corrupt_p: 0.02,
+            kill_p: 0.01,
+            straggle_p: 0.02,
+            straggle_ms: 40,
+        }
+    }
+
+    /// A harsh profile: frequent faults and pauses long enough to blow
+    /// round timeouts — many schedules end in typed errors.
+    pub fn harsh() -> SimProfile {
+        SimProfile {
+            drop_p: 0.08,
+            dup_p: 0.06,
+            corrupt_p: 0.06,
+            kill_p: 0.04,
+            straggle_p: 0.05,
+            straggle_ms: 900,
+        }
+    }
+}
+
+/// An ordered set of explicit fault rules plus a suppression set used by
+/// the shrinker to subtract individual applied faults from a schedule.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+    suppress: HashSet<FaultKey>,
+}
+
+/// Per-run mutable state for a plan's `nth` counters (owned by the
+/// simulator, one per run, so a [`FaultPlan`] itself stays immutable and
+/// reusable across replays).
+#[derive(Debug, Default)]
+pub struct PlanCounters {
+    matched: Vec<u64>,
+}
+
+impl FaultPlan {
+    /// The empty plan (profile faults only).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Append `when → action`; earlier rules take precedence.
+    pub fn rule(mut self, when: When, action: FaultAction) -> FaultPlan {
+        self.rules.push(FaultRule { when, action });
+        self
+    }
+
+    /// A plan that replays exactly the given applied faults (used by the
+    /// shrinker's standalone repro).
+    pub fn exact(events: &[AppliedFault]) -> FaultPlan {
+        let mut plan = FaultPlan::new();
+        for ev in events {
+            plan.rules.push(ev.to_rule());
+        }
+        plan
+    }
+
+    /// Suppress one applied fault by its replay-stable key: the decision
+    /// layer re-derives the same fault and then skips it. This is how the
+    /// shrinker removes events without perturbing the rest of the
+    /// schedule (RNG draws and jitter are keyed per frame, so skipping
+    /// one fault cannot shift any other decision).
+    pub fn suppress(mut self, key: FaultKey) -> FaultPlan {
+        self.suppress.insert(key);
+        self
+    }
+
+    /// Number of explicit rules.
+    pub fn len(&self) -> usize {
+        self.rules.len()
+    }
+
+    /// Whether the plan has no explicit rules.
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Fresh `nth` counters for one run.
+    pub fn counters(&self) -> PlanCounters {
+        PlanCounters { matched: vec![0; self.rules.len()] }
+    }
+
+    /// Decide the fault (if any) for one frame send. `seed` is the
+    /// simulation seed; the probabilistic layer only fires when no
+    /// explicit rule matches.
+    pub fn decide(
+        &self,
+        seed: u64,
+        profile: &SimProfile,
+        counters: &mut PlanCounters,
+        ctx: &FrameCtx,
+    ) -> Option<FaultAction> {
+        let mut decided = None;
+        for (i, r) in self.rules.iter().enumerate() {
+            if r.when.matches(ctx) {
+                counters.matched[i] += 1;
+                if let Some(n) = r.when.nth {
+                    if counters.matched[i] != n {
+                        continue;
+                    }
+                }
+                decided = Some(r.action);
+                break;
+            }
+        }
+        if decided.is_none() {
+            decided = sample_profile(seed, profile, ctx);
+        }
+        decided.filter(|_| !self.suppress.contains(&ctx.key()))
+    }
+}
+
+/// RNG stream for one frame's fault decision: a pure function of the
+/// seed and the frame key, so decisions survive replay and suppression.
+fn frame_rng(seed: u64, salt: u64, key: &FaultKey) -> Rng {
+    let mix = seed
+        ^ salt
+        ^ (key.client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (key.attempt as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+        ^ key.seq.wrapping_mul(0x1656_67B1_9E37_79F9)
+        ^ match key.dir {
+            Dir::Up => 0x5851_F42D_4C95_7F2D,
+            Dir::Down => 0x1405_7B7E_F767_814F,
+        };
+    Rng::new(mix)
+}
+
+/// Jitter stream — salted differently from the fault stream so zeroing
+/// fault probabilities (the shrinker's standalone replay) leaves every
+/// delivery jitter untouched.
+pub(crate) fn jitter_rng(seed: u64, key: &FaultKey) -> Rng {
+    frame_rng(seed, 0x6A09_E667_F3BC_C909, key)
+}
+
+fn sample_profile(seed: u64, p: &SimProfile, ctx: &FrameCtx) -> Option<FaultAction> {
+    let mut rng = frame_rng(seed, 0xBB67_AE85_84CA_A73B, &ctx.key());
+    // fixed draw order: each fault type consumes exactly one draw, so a
+    // probability of 0 changes nothing downstream
+    let kill = rng.next_f64() < p.kill_p;
+    let drop = rng.next_f64() < p.drop_p;
+    let dup = rng.next_f64() < p.dup_p;
+    let corrupt = rng.next_f64() < p.corrupt_p;
+    let straggle = rng.next_f64() < p.straggle_p;
+    let corrupt_bit = rng.next_u32();
+    if kill {
+        Some(FaultAction::KillConn)
+    } else if drop {
+        Some(FaultAction::Drop)
+    } else if dup {
+        Some(FaultAction::Duplicate)
+    } else if corrupt {
+        Some(FaultAction::CorruptBit(corrupt_bit))
+    } else if straggle {
+        Some(FaultAction::DelayMs(p.straggle_ms))
+    } else {
+        None
+    }
+}
+
+/// One fault the simulator actually applied: the frame's full context
+/// plus the action. The transcript lists these; the shrinker minimizes
+/// over them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AppliedFault {
+    /// The frame the fault hit.
+    pub ctx: FrameCtx,
+    /// What was done to it.
+    pub action: FaultAction,
+}
+
+impl AppliedFault {
+    /// An exact rule that re-applies this fault and nothing else.
+    pub fn to_rule(&self) -> FaultRule {
+        let mut when = When::any()
+            .client(self.ctx.client)
+            .attempt(self.ctx.attempt)
+            .seq(self.ctx.seq)
+            .dir(self.ctx.dir);
+        when.kinds = Some(vec![self.ctx.kind]);
+        FaultRule { when, action: self.action }
+    }
+
+    /// Render as a copy-pastable `FaultPlan` builder call.
+    pub fn render(&self) -> String {
+        let action = match self.action {
+            FaultAction::Drop => "FaultAction::Drop".into(),
+            FaultAction::Duplicate => "FaultAction::Duplicate".into(),
+            FaultAction::CorruptBit(b) => format!("FaultAction::CorruptBit({b})"),
+            FaultAction::DelayMs(ms) => format!("FaultAction::DelayMs({ms})"),
+            FaultAction::KillConn => "FaultAction::KillConn".into(),
+        };
+        format!(
+            ".rule(When::any().client({}).attempt({}).seq({}).dir(Dir::{:?}), {})  // {:?} round {}",
+            self.ctx.client, self.ctx.attempt, self.ctx.seq, self.ctx.dir, action, self.ctx.kind, self.ctx.round
+        )
+    }
+}
+
+/// Render a minimal schedule as a ready-to-paste test-case snippet.
+pub fn render_repro(seed: u64, events: &[AppliedFault]) -> String {
+    let mut s = format!(
+        "// minimal reproducing schedule (seed {seed}, {} fault{}):\nlet plan = FaultPlan::new()\n",
+        events.len(),
+        if events.len() == 1 { "" } else { "s" },
+    );
+    for ev in events {
+        s.push_str("    ");
+        s.push_str(&ev.render());
+        s.push('\n');
+    }
+    s.push_str(";\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(client: u32, seq: u64, dir: Dir, kind: FrameKind, round: u32) -> FrameCtx {
+        FrameCtx { client, attempt: 0, seq, dir, kind, round }
+    }
+
+    #[test]
+    fn rule_precedence_and_predicates() {
+        let plan = FaultPlan::new()
+            .rule(When::any().client(1).kind(FrameKind::Update).round(2), FaultAction::Drop)
+            .rule(When::any().client(1), FaultAction::Duplicate);
+        let profile = SimProfile::default();
+        let mut c = plan.counters();
+        // first rule wins where it matches
+        assert_eq!(
+            plan.decide(0, &profile, &mut c, &ctx(1, 0, Dir::Up, FrameKind::Update, 2)),
+            Some(FaultAction::Drop)
+        );
+        // falls through to the second rule
+        assert_eq!(
+            plan.decide(0, &profile, &mut c, &ctx(1, 0, Dir::Up, FrameKind::Hello, 0)),
+            Some(FaultAction::Duplicate)
+        );
+        // no rule, zero profile: clean
+        assert_eq!(plan.decide(0, &profile, &mut c, &ctx(2, 0, Dir::Up, FrameKind::Update, 2)), None);
+    }
+
+    #[test]
+    fn nth_counts_matches_not_frames() {
+        let plan = FaultPlan::new()
+            .rule(When::any().kind(FrameKind::Update).nth(2), FaultAction::KillConn);
+        let mut c = plan.counters();
+        let profile = SimProfile::default();
+        assert_eq!(plan.decide(0, &profile, &mut c, &ctx(0, 0, Dir::Up, FrameKind::Update, 0)), None);
+        assert_eq!(
+            plan.decide(0, &profile, &mut c, &ctx(0, 1, Dir::Up, FrameKind::Update, 0)),
+            Some(FaultAction::KillConn)
+        );
+        assert_eq!(plan.decide(0, &profile, &mut c, &ctx(0, 2, Dir::Up, FrameKind::Update, 0)), None);
+    }
+
+    #[test]
+    fn profile_sampling_is_replay_stable_and_suppressible() {
+        let profile = SimProfile::harsh();
+        let plan = FaultPlan::new();
+        // find a frame the profile faults
+        let mut hit = None;
+        for seq in 0..500u64 {
+            let ctx = ctx(3, seq, Dir::Up, FrameKind::Update, 1);
+            let mut c = plan.counters();
+            if let Some(a) = plan.decide(7, &profile, &mut c, &ctx) {
+                hit = Some((ctx, a));
+                break;
+            }
+        }
+        let (ctx, action) = hit.expect("harsh profile fired at least once in 500 frames");
+        // identical decision on replay
+        let mut c = plan.counters();
+        assert_eq!(plan.decide(7, &profile, &mut c, &ctx), Some(action));
+        // suppressed by key, without touching any other frame
+        let sup = plan.clone().suppress(ctx.key());
+        let mut c = sup.counters();
+        assert_eq!(sup.decide(7, &profile, &mut c, &ctx), None);
+    }
+
+    #[test]
+    fn exact_plan_reapplies_only_listed_events() {
+        let ev = AppliedFault {
+            ctx: ctx(2, 5, Dir::Down, FrameKind::Broadcast, 3),
+            action: FaultAction::CorruptBit(77),
+        };
+        let plan = FaultPlan::exact(&[ev]);
+        let profile = SimProfile::default();
+        let mut c = plan.counters();
+        assert_eq!(
+            plan.decide(0, &profile, &mut c, &ev.ctx),
+            Some(FaultAction::CorruptBit(77))
+        );
+        // same client, different seq: clean
+        assert_eq!(
+            plan.decide(0, &profile, &mut c, &ctx(2, 6, Dir::Down, FrameKind::Broadcast, 3)),
+            None
+        );
+        assert!(ev.render().contains("CorruptBit(77)"));
+        assert!(render_repro(9, &[ev]).contains("seed 9"));
+    }
+}

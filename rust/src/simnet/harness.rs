@@ -1,0 +1,312 @@
+//! The simulation harness: run one full federated training —
+//! [`FederatedServer`] plus `cfg.clients` real client sessions — on a
+//! [`SimClock`] over a [`SimNet`], entirely from `(seed, SimConfig)`,
+//! and check the paper-level invariant against a serial-trainer oracle:
+//!
+//! > under **every** fault schedule the run either completes with weight
+//! > digests bit-identical to the serial trainer and exact `CommStats`
+//! > reconciliation, or fails with a typed [`TransportError`] — never a
+//! > hang, panic, or silent divergence.
+//!
+//! Hangs are impossible by construction ([`SimClock`] panics on
+//! quiescent deadlock instead of blocking); panics and divergence are
+//! classified by [`check_run`] as [`Verdict::Violation`].
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::coordinator::trainer::{TrainConfig, TrainResult};
+use crate::coordinator::TrainBackend;
+use crate::netsim::Link;
+use crate::simnet::clock::{Clock, SimClock};
+use crate::simnet::fault::{AppliedFault, FaultPlan, SimProfile};
+use crate::simnet::net::SimNet;
+use crate::transport::server::{FederatedResult, FederatedServer};
+use crate::transport::session::{run_client_with_clock, ClientOutcome};
+use crate::transport::{weight_digest, Acceptor, TransportError};
+
+/// Everything one simulated schedule needs beyond the [`TrainConfig`]:
+/// the seed owning all nondeterminism, the explicit fault plan, the
+/// background fault profile, and the link models providing base delays.
+#[derive(Clone)]
+pub struct SimConfig {
+    /// Master seed for every fault, jitter and scheduling decision.
+    pub seed: u64,
+    /// Explicit fault rules (first match wins; see [`FaultPlan`]).
+    pub plan: FaultPlan,
+    /// Background per-frame fault probabilities.
+    pub profile: SimProfile,
+    /// Client → server link model.
+    pub up_link: Link,
+    /// Server → client link model.
+    pub down_link: Link,
+}
+
+impl SimConfig {
+    /// A clean schedule on `seed`: no explicit faults, zero fault
+    /// probabilities, WiFi links.
+    pub fn new(seed: u64) -> SimConfig {
+        SimConfig {
+            seed,
+            plan: FaultPlan::new(),
+            profile: SimProfile::default(),
+            up_link: Link::wifi(),
+            down_link: Link::wifi(),
+        }
+    }
+}
+
+/// How one thread of a simulated run ended.
+#[derive(Debug)]
+pub enum SimEnd<T> {
+    /// Completed normally.
+    Ok(T),
+    /// Failed with a typed transport error (acceptable under faults).
+    Err(TransportError),
+    /// Panicked — always an invariant violation.
+    Panic(String),
+}
+
+impl<T> SimEnd<T> {
+    fn from_join(r: thread::Result<Result<T, TransportError>>) -> SimEnd<T> {
+        match r {
+            Ok(Ok(v)) => SimEnd::Ok(v),
+            Ok(Err(e)) => SimEnd::Err(e),
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "<non-string panic payload>".into());
+                SimEnd::Panic(msg)
+            }
+        }
+    }
+
+    /// The completed value, if any.
+    pub fn ok(&self) -> Option<&T> {
+        match self {
+            SimEnd::Ok(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// The typed error, if any.
+    pub fn err(&self) -> Option<&TransportError> {
+        match self {
+            SimEnd::Err(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// Everything one simulated schedule produced.
+#[derive(Debug)]
+pub struct SimRun {
+    /// How the server ended.
+    pub server: SimEnd<FederatedResult>,
+    /// How each client session ended (index = client id).
+    pub clients: Vec<SimEnd<ClientOutcome>>,
+    /// Deterministic event transcript (see [`SimNet::transcript`]).
+    pub transcript: String,
+    /// Every fault the fabric applied, in replay-stable order.
+    pub applied: Vec<AppliedFault>,
+    /// Virtual time the whole run consumed.
+    pub virtual_time: Duration,
+}
+
+impl SimRun {
+    /// Whether every side completed.
+    pub fn completed(&self) -> bool {
+        self.server.ok().is_some() && self.clients.iter().all(|c| c.ok().is_some())
+    }
+
+    /// The first failure (server first, then clients by id), if any.
+    pub fn first_failure(&self) -> Option<String> {
+        if let SimEnd::Err(e) = &self.server {
+            return Some(format!("server: {e}"));
+        }
+        if let SimEnd::Panic(m) = &self.server {
+            return Some(format!("server panicked: {m}"));
+        }
+        for (i, c) in self.clients.iter().enumerate() {
+            match c {
+                SimEnd::Err(e) => return Some(format!("client {i}: {e}")),
+                SimEnd::Panic(m) => return Some(format!("client {i} panicked: {m}")),
+                SimEnd::Ok(_) => {}
+            }
+        }
+        None
+    }
+}
+
+/// Run one complete federated training under the simulator. Every
+/// nondeterministic decision — delivery timing, faults, crash points —
+/// derives from `(sim.seed, sim.plan, sim.profile, cfg)`, so calling
+/// this twice with equal inputs replays the identical schedule (equal
+/// transcripts, equal outcomes).
+pub fn run_schedule<B, F>(cfg: &TrainConfig, sim: &SimConfig, make_backend: F) -> SimRun
+where
+    B: TrainBackend,
+    F: Fn(usize) -> B + Sync,
+{
+    let clock = SimClock::new();
+    let net = SimNet::new(
+        clock.clone(),
+        sim.seed,
+        sim.plan.clone(),
+        sim.profile,
+        sim.up_link,
+        sim.down_link,
+        cfg.transport.read_timeout,
+    );
+
+    let (layout, initial) = {
+        let mut probe = make_backend(0);
+        let init = probe.init_params(cfg.seed);
+        (probe.layout().clone(), init)
+    };
+    let mut server = FederatedServer::new(cfg.clone(), layout, initial);
+
+    let (server_end, client_ends) = thread::scope(|s| {
+        let server_handle = {
+            let acceptor: Arc<dyn Acceptor> = Arc::new(net.clone());
+            let server_clock: Arc<dyn Clock> = Arc::new(clock.clone());
+            let actor = clock.actor();
+            let server = &mut server;
+            s.spawn(move || {
+                let _actor = actor;
+                server.run_with_clock(acceptor, server_clock)
+            })
+        };
+        let client_handles: Vec<_> = (0..cfg.clients)
+            .map(|id| {
+                let connector = net.connector(id as u32);
+                let client_clock = clock.clone();
+                let actor = clock.actor();
+                let make_backend = &make_backend;
+                s.spawn(move || {
+                    let _actor = actor;
+                    let mut backend = make_backend(id);
+                    run_client_with_clock(cfg, id, &connector, &mut backend, &client_clock)
+                })
+            })
+            .collect();
+        let clients: Vec<_> =
+            client_handles.into_iter().map(|h| SimEnd::from_join(h.join())).collect();
+        (SimEnd::from_join(server_handle.join()), clients)
+    });
+
+    SimRun {
+        server: server_end,
+        clients: client_ends,
+        transcript: net.transcript(),
+        applied: net.applied_faults(),
+        virtual_time: clock.now(),
+    }
+}
+
+/// The invariant checker's classification of one schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Completed bit-identical to the serial trainer with exact
+    /// communication accounting.
+    Completed,
+    /// Failed, but with typed errors only — acceptable under faults.
+    TypedFailure(String),
+    /// Invariant violation: a panic, a digest divergence, or an
+    /// accounting mismatch on a completed run.
+    Violation(String),
+}
+
+/// Check one schedule against the serial-trainer oracle (the
+/// `Trainer::run` result for the same [`TrainConfig`]).
+pub fn check_run(serial: &TrainResult, run: &SimRun) -> Verdict {
+    let want = weight_digest(&serial.final_params);
+
+    if let SimEnd::Panic(m) = &run.server {
+        return Verdict::Violation(format!("server panicked: {m}"));
+    }
+    for (i, c) in run.clients.iter().enumerate() {
+        if let SimEnd::Panic(m) = c {
+            return Verdict::Violation(format!("client {i} panicked: {m}"));
+        }
+    }
+
+    if let Some(res) = run.server.ok() {
+        if res.digest != want {
+            return Verdict::Violation(format!(
+                "server completed with digest {:016x}, serial trainer has {want:016x}",
+                res.digest
+            ));
+        }
+        if let Some(m) = accounting_mismatch(serial, res) {
+            return Verdict::Violation(m);
+        }
+    }
+    for (i, c) in run.clients.iter().enumerate() {
+        if let Some(out) = c.ok() {
+            if out.digest != want || out.server_digest != want {
+                return Verdict::Violation(format!(
+                    "client {i} completed with digest {:016x}/{:016x}, serial has {want:016x}",
+                    out.digest, out.server_digest
+                ));
+            }
+        }
+        if let Some(e) = c.err() {
+            if e.to_string().contains("diverged") {
+                return Verdict::Violation(format!("client {i}: {e}"));
+            }
+        }
+    }
+
+    match run.first_failure() {
+        None => Verdict::Completed,
+        Some(m) => Verdict::TypedFailure(m),
+    }
+}
+
+/// Field-for-field `CommStats` + `NetSim` comparison between the serial
+/// trainer and a completed federated run — faults, retries and
+/// duplicates must leave the accounting *exactly* unchanged, because the
+/// server accounts each client's update once per round regardless of how
+/// many times the bytes crossed the fabric.
+fn accounting_mismatch(serial: &TrainResult, fed: &FederatedResult) -> Option<String> {
+    macro_rules! want_eq {
+        ($a:expr, $b:expr, $what:literal) => {
+            if $a != $b {
+                return Some(format!(
+                    "accounting mismatch in {}: federated {:?}, serial {:?}",
+                    $what, $a, $b
+                ));
+            }
+        };
+    }
+    want_eq!(fed.comm.upstream_bits, serial.comm.upstream_bits, "comm.upstream_bits");
+    want_eq!(fed.comm.messages, serial.comm.messages, "comm.messages");
+    want_eq!(fed.comm.nonzeros, serial.comm.nonzeros, "comm.nonzeros");
+    want_eq!(fed.comm.baseline_bits, serial.comm.baseline_bits, "comm.baseline_bits");
+    want_eq!(
+        fed.comm.frame_overhead_bits,
+        serial.comm.frame_overhead_bits,
+        "comm.frame_overhead_bits"
+    );
+    want_eq!(fed.net.total_up_bits(), serial.net.total_up_bits(), "net.total_up_bits");
+    want_eq!(fed.net.clients.len(), serial.net.clients.len(), "net.clients.len");
+    for (i, (fc, sc)) in fed.net.clients.iter().zip(&serial.net.clients).enumerate() {
+        if (fc.up_bits, fc.down_bits, fc.messages) != (sc.up_bits, sc.down_bits, sc.messages) {
+            return Some(format!(
+                "accounting mismatch in net.clients[{i}]: federated {:?}, serial {:?}",
+                (fc.up_bits, fc.down_bits, fc.messages),
+                (sc.up_bits, sc.down_bits, sc.messages)
+            ));
+        }
+    }
+    want_eq!(
+        fed.net.total_comm_time_s.to_bits(),
+        serial.net.total_comm_time_s.to_bits(),
+        "net.total_comm_time_s"
+    );
+    None
+}

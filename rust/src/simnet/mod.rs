@@ -1,0 +1,46 @@
+//! Deterministic federation simulator.
+//!
+//! FoundationDB-style simulation testing for the SBC federation stack:
+//! the real [`FederatedServer`](crate::transport::server::FederatedServer)
+//! and real client sessions run on OS threads, but **all** time and all
+//! nondeterminism — message delivery order, per-link delays, drops,
+//! duplicates, corruption, connection kills, stragglers — derive from a
+//! single seed on a virtual clock. Any failing run replays bit-for-bit
+//! from `(seed, SimConfig)` alone.
+//!
+//! The pieces:
+//!
+//! - [`clock`] — the [`Clock`](clock::Clock) trait with a wall-clock
+//!   impl for production ([`RealClock`](clock::RealClock)) and a
+//!   quiescence-driven virtual impl ([`SimClock`](clock::SimClock))
+//!   that advances only when every registered actor is parked, and
+//!   panics on simulated deadlock instead of hanging.
+//! - [`fault`] — the fault-schedule DSL: [`FaultPlan`](fault::FaultPlan)
+//!   rules over per-frame predicates ([`When`](fault::When)), seeded
+//!   background probabilities ([`SimProfile`](fault::SimProfile)), and
+//!   replay-stable [`AppliedFault`](fault::AppliedFault) records.
+//! - [`net`] — the simulated fabric: [`SimNet`](net::SimNet) implements
+//!   the transport's `Acceptor`/`Connector`/`Transport` traits, carries
+//!   frames as real wire bytes through the real codec, and delivers
+//!   them FIFO per direction with [`Link`](crate::netsim::Link)-derived
+//!   delays plus seeded jitter.
+//! - [`harness`] — [`run_schedule`](harness::run_schedule) executes one
+//!   full federated training under a schedule and
+//!   [`check_run`](harness::check_run) classifies it against the serial
+//!   trainer oracle: bit-identical completion, typed failure, or
+//!   invariant [`Violation`](harness::Verdict::Violation).
+//! - [`shrink`] — [`ddmin`](shrink::ddmin) delta-debugging that reduces
+//!   a failing fault schedule to a minimal exact plan and renders it as
+//!   a copy-pastable test case.
+
+pub mod clock;
+pub mod fault;
+pub mod harness;
+pub mod net;
+pub mod shrink;
+
+pub use clock::{Clock, RealClock, SimClock};
+pub use fault::{AppliedFault, Dir, FaultAction, FaultPlan, SimProfile, When};
+pub use harness::{check_run, run_schedule, SimConfig, SimRun, Verdict};
+pub use net::SimNet;
+pub use shrink::{ddmin, shrink_schedule, Shrunk};

@@ -1,0 +1,534 @@
+//! The simulated network: an in-process [`Acceptor`]/[`Connector`]/
+//! [`Transport`] implementation whose frames travel through virtual-time
+//! delivery queues owned by a [`SimClock`], with every delay and fault
+//! decided by the seeded fault layer ([`crate::simnet::fault`]).
+//!
+//! Fidelity choices:
+//!
+//! * frames are stored **serialized** (via the real [`write_frame`]) and
+//!   re-parsed on receive (via the real [`read_frame`]), so an injected
+//!   bit flip exercises the production CRC/validation path;
+//! * each connection direction is FIFO (`deliver = max(previous
+//!   delivery, send + delay)`), like a TCP stream — reordering happens
+//!   across connections, not within one;
+//! * base delay comes from the repo's [`Link`] models
+//!   ([`Link::transfer_time`] over the actual wire bytes) plus a seeded
+//!   jitter draw, so schedule exploration perturbs *timing*, not just
+//!   failures.
+//!
+//! Every send is logged; [`SimNet::transcript`] renders the log sorted
+//! by the replay-stable key `(t_send, client, attempt, dir, seq)`, so
+//! two runs of the same `(seed, config)` produce byte-identical
+//! transcripts regardless of OS thread scheduling.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::netsim::Link;
+use crate::simnet::clock::{Clock, SimClock};
+use crate::simnet::fault::{
+    jitter_rng, AppliedFault, Dir, FaultAction, FaultPlan, FrameCtx, PlanCounters, SimProfile,
+};
+use crate::transport::frame::{read_frame, write_frame, FrameBuf};
+use crate::transport::{Acceptor, Connector, Transport, TransportError};
+
+/// Uniform jitter added to every delivery, drawn from the seeded jitter
+/// stream: up to 200 µs, enough to vary cross-client arrival order
+/// between seeds without drowning the [`Link`] base delays.
+const JITTER_NS: u64 = 200_000;
+
+/// One logged frame send.
+#[derive(Clone, Copy, Debug)]
+struct SimEvent {
+    t_send_ns: u64,
+    ctx: FrameCtx,
+    wire_bytes: usize,
+    /// Scheduled delivery (`None` for dropped/killed frames).
+    deliver_ns: Option<u64>,
+    /// The duplicate copy's delivery, when the fault was [`FaultAction::Duplicate`].
+    deliver2_ns: Option<u64>,
+    fault: Option<FaultAction>,
+}
+
+/// One direction of one simulated connection: serialized frames tagged
+/// with their virtual delivery time. FIFO by construction.
+struct Chan {
+    state: Mutex<ChanState>,
+}
+
+struct ChanState {
+    frames: VecDeque<(u64, Vec<u8>)>,
+    closed: bool,
+    last_deliver_ns: u64,
+}
+
+impl Chan {
+    fn new() -> Arc<Chan> {
+        Arc::new(Chan {
+            state: Mutex::new(ChanState {
+                frames: VecDeque::new(),
+                closed: false,
+                last_deliver_ns: 0,
+            }),
+        })
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap_or_else(|p| p.into_inner()).closed = true;
+    }
+}
+
+struct NetState {
+    counters: PlanCounters,
+    pending: VecDeque<Box<dyn Transport>>,
+    closed: bool,
+    events: Vec<SimEvent>,
+    applied: Vec<AppliedFault>,
+}
+
+struct NetInner {
+    clock: SimClock,
+    seed: u64,
+    profile: SimProfile,
+    plan: FaultPlan,
+    up_link: Link,
+    down_link: Link,
+    read_timeout: Duration,
+    state: Mutex<NetState>,
+}
+
+/// The simulated network fabric: hands out per-client [`Connector`]s and
+/// acts as the server's [`Acceptor`]. Clones share one fabric.
+#[derive(Clone)]
+pub struct SimNet {
+    inner: Arc<NetInner>,
+}
+
+impl SimNet {
+    /// A fabric on `clock` where every fault/jitter decision derives from
+    /// `seed`, `plan` and `profile` alone. `read_timeout` bounds every
+    /// blocking [`Transport::recv`] in virtual time.
+    pub fn new(
+        clock: SimClock,
+        seed: u64,
+        plan: FaultPlan,
+        profile: SimProfile,
+        up_link: Link,
+        down_link: Link,
+        read_timeout: Duration,
+    ) -> SimNet {
+        let counters = plan.counters();
+        SimNet {
+            inner: Arc::new(NetInner {
+                clock,
+                seed,
+                profile,
+                plan,
+                up_link,
+                down_link,
+                read_timeout,
+                state: Mutex::new(NetState {
+                    counters,
+                    pending: VecDeque::new(),
+                    closed: false,
+                    events: Vec::new(),
+                    applied: Vec::new(),
+                }),
+            }),
+        }
+    }
+
+    /// The connector for client `client` — each [`Connector::connect`] is
+    /// a new connection attempt with its own fault/jitter RNG streams.
+    pub fn connector(&self, client: u32) -> SimConnector {
+        SimConnector { net: self.inner.clone(), client, attempts: AtomicU32::new(0) }
+    }
+
+    /// Every fault the fabric actually applied, sorted by the
+    /// replay-stable frame key.
+    pub fn applied_faults(&self) -> Vec<AppliedFault> {
+        let st = self.inner.state.lock().unwrap();
+        let mut faults = st.applied.clone();
+        faults.sort_by_key(|f| f.ctx.key());
+        faults
+    }
+
+    /// The full event log rendered deterministically: same `(seed,
+    /// config)` ⇒ byte-identical transcript, independent of thread
+    /// scheduling.
+    pub fn transcript(&self) -> String {
+        let st = self.inner.state.lock().unwrap();
+        let mut events = st.events.clone();
+        drop(st);
+        events.sort_by_key(|e| (e.t_send_ns, e.ctx.key()));
+        let mut out = String::new();
+        for e in &events {
+            let deliver = match e.deliver_ns {
+                Some(d) => format!("{d}"),
+                None => "lost".into(),
+            };
+            out.push_str(&format!(
+                "t={} c{} a{} {} seq={} {:?} r{} {}B -> {}",
+                e.t_send_ns,
+                e.ctx.client,
+                e.ctx.attempt,
+                e.ctx.dir,
+                e.ctx.seq,
+                e.ctx.kind,
+                e.ctx.round,
+                e.wire_bytes,
+                deliver
+            ));
+            if let Some(d2) = e.deliver2_ns {
+                out.push_str(&format!(" +dup@{d2}"));
+            }
+            if let Some(fault) = e.fault {
+                out.push_str(&format!(" [{fault}]"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl Acceptor for SimNet {
+    fn accept(&self) -> Result<Box<dyn Transport>, TransportError> {
+        loop {
+            let seen = self.inner.clock.epoch();
+            {
+                let mut st = self.inner.state.lock().unwrap();
+                if let Some(conn) = st.pending.pop_front() {
+                    return Ok(conn);
+                }
+                if st.closed {
+                    return Err(TransportError::Closed);
+                }
+            }
+            // no deadline: an idle listener must not drive virtual time
+            self.inner.clock.park(seen, Duration::MAX);
+        }
+    }
+
+    fn shutdown(&self) {
+        self.inner.state.lock().unwrap().closed = true;
+        self.inner.clock.wake_all();
+    }
+}
+
+/// [`Connector`] for one simulated client (from [`SimNet::connector`]).
+pub struct SimConnector {
+    net: Arc<NetInner>,
+    client: u32,
+    attempts: AtomicU32,
+}
+
+impl Connector for SimConnector {
+    fn connect(&self) -> Result<Box<dyn Transport>, TransportError> {
+        let attempt = self.attempts.fetch_add(1, Ordering::SeqCst);
+        let up = Chan::new(); // client -> server
+        let down = Chan::new(); // server -> client
+        {
+            let mut st = self.net.state.lock().unwrap();
+            if st.closed {
+                return Err(TransportError::Closed);
+            }
+            st.pending.push_back(Box::new(SimConn {
+                net: self.net.clone(),
+                send_ch: down.clone(),
+                recv_ch: up.clone(),
+                client: self.client,
+                attempt,
+                dir: Dir::Down,
+                send_seq: 0,
+            }));
+        }
+        self.net.clock.wake_all();
+        Ok(Box::new(SimConn {
+            net: self.net.clone(),
+            send_ch: up,
+            recv_ch: down,
+            client: self.client,
+            attempt,
+            dir: Dir::Up,
+            send_seq: 0,
+        }))
+    }
+}
+
+/// One endpoint of a simulated connection.
+struct SimConn {
+    net: Arc<NetInner>,
+    send_ch: Arc<Chan>,
+    recv_ch: Arc<Chan>,
+    client: u32,
+    attempt: u32,
+    /// Direction of frames *sent* from this end.
+    dir: Dir,
+    send_seq: u64,
+}
+
+impl SimConn {
+    fn now_ns(&self) -> u64 {
+        self.net.clock.now().as_nanos() as u64
+    }
+
+    /// Schedule `bytes` on `self.send_ch`, preserving per-direction FIFO.
+    fn enqueue(&self, bytes: Vec<u8>, earliest_ns: u64) -> Result<u64, TransportError> {
+        let mut cs = self.send_ch.state.lock().unwrap();
+        if cs.closed {
+            return Err(TransportError::Io(std::io::Error::new(
+                std::io::ErrorKind::BrokenPipe,
+                "simulated connection closed",
+            )));
+        }
+        let deliver = earliest_ns.max(cs.last_deliver_ns);
+        cs.last_deliver_ns = deliver;
+        cs.frames.push_back((deliver, bytes));
+        Ok(deliver)
+    }
+}
+
+impl Transport for SimConn {
+    fn send(&mut self, f: &FrameBuf) -> Result<(), TransportError> {
+        let ctx = FrameCtx {
+            client: self.client,
+            attempt: self.attempt,
+            seq: self.send_seq,
+            dir: self.dir,
+            kind: f.kind,
+            round: f.round,
+        };
+        self.send_seq += 1;
+
+        let mut bytes = Vec::new();
+        write_frame(&mut bytes, f)?;
+        let wire_bytes = bytes.len();
+
+        let fault = {
+            let mut st = self.net.state.lock().unwrap();
+            let fault =
+                self.net.plan.decide(self.net.seed, &self.net.profile, &mut st.counters, &ctx);
+            if let Some(action) = fault {
+                st.applied.push(AppliedFault { ctx, action });
+            }
+            fault
+        };
+
+        let link = match self.dir {
+            Dir::Up => &self.net.up_link,
+            Dir::Down => &self.net.down_link,
+        };
+        let base_ns = (link.transfer_time(wire_bytes as u64 * 8) * 1e9) as u64;
+        let mut jr = jitter_rng(self.net.seed, &ctx.key());
+        let jitter = jr.below(JITTER_NS as usize) as u64;
+        let t_send = self.now_ns();
+        let earliest = t_send + base_ns + jitter;
+
+        let mut event = SimEvent {
+            t_send_ns: t_send,
+            ctx,
+            wire_bytes,
+            deliver_ns: None,
+            deliver2_ns: None,
+            fault,
+        };
+        let result = match fault {
+            Some(FaultAction::Drop) => Ok(()),
+            Some(FaultAction::KillConn) => {
+                self.send_ch.close();
+                self.recv_ch.close();
+                Err(TransportError::Io(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionReset,
+                    "injected fault: connection killed",
+                )))
+            }
+            Some(FaultAction::CorruptBit(b)) => {
+                let mut bad = bytes;
+                let bit = b as usize % (bad.len() * 8);
+                bad[bit / 8] ^= 1 << (bit % 8);
+                event.deliver_ns = Some(self.enqueue(bad, earliest)?);
+                Ok(())
+            }
+            Some(FaultAction::DelayMs(ms)) => {
+                event.deliver_ns = Some(self.enqueue(bytes, earliest + ms * 1_000_000)?);
+                Ok(())
+            }
+            Some(FaultAction::Duplicate) => {
+                let copy = bytes.clone();
+                let first = self.enqueue(bytes, earliest)?;
+                let gap = jr.below(JITTER_NS as usize) as u64;
+                event.deliver_ns = Some(first);
+                event.deliver2_ns = Some(self.enqueue(copy, first + 1 + gap)?);
+                Ok(())
+            }
+            None => {
+                event.deliver_ns = Some(self.enqueue(bytes, earliest)?);
+                Ok(())
+            }
+        };
+        self.net.state.lock().unwrap().events.push(event);
+        self.net.clock.wake_all();
+        result
+    }
+
+    fn recv(&mut self, into: &mut FrameBuf) -> Result<(), TransportError> {
+        let clock = &self.net.clock;
+        let deadline = clock.now().checked_add(self.net.read_timeout).unwrap_or(Duration::MAX);
+        loop {
+            let seen = clock.epoch();
+            let now = clock.now();
+            let now_ns = now.as_nanos() as u64;
+            // next instant worth re-polling at (delivery or timeout)
+            let wait_until_ns;
+            {
+                let mut cs = self.recv_ch.state.lock().unwrap();
+                match cs.frames.front() {
+                    Some(&(deliver, _)) if deliver <= now_ns => {
+                        let (_, bytes) = cs.frames.pop_front().expect("front exists");
+                        drop(cs);
+                        return read_frame(&mut &bytes[..], into);
+                    }
+                    Some(&(deliver, _)) => wait_until_ns = deliver,
+                    None => {
+                        if cs.closed {
+                            return Err(TransportError::Io(std::io::Error::new(
+                                std::io::ErrorKind::UnexpectedEof,
+                                "simulated connection closed",
+                            )));
+                        }
+                        wait_until_ns = u64::MAX;
+                    }
+                }
+            }
+            if now >= deadline {
+                return Err(TransportError::Io(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "simulated read timed out",
+                )));
+            }
+            let until = Duration::from_nanos(wait_until_ns.saturating_sub(now_ns))
+                .min(deadline - now);
+            clock.park(seen, until);
+        }
+    }
+
+    fn peer(&self) -> String {
+        format!("sim:c{}:a{}:{}", self.client, self.attempt, self.dir)
+    }
+}
+
+impl Drop for SimConn {
+    fn drop(&mut self) {
+        self.send_ch.close();
+        self.recv_ch.close();
+        self.net.clock.wake_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::fault::When;
+    use crate::transport::frame::FrameKind;
+    use crate::transport::TransportCfg;
+
+    fn pairs(net: &SimNet) -> (Box<dyn Transport>, Box<dyn Transport>) {
+        let connector = net.connector(0);
+        let client = connector.connect().unwrap();
+        let server = net.accept().unwrap();
+        (client, server)
+    }
+
+    fn sim(plan: FaultPlan, profile: SimProfile) -> (SimClock, SimNet) {
+        let clock = SimClock::new();
+        let net = SimNet::new(
+            clock.clone(),
+            42,
+            plan,
+            profile,
+            Link::wifi(),
+            Link::wifi(),
+            TransportCfg::default().read_timeout,
+        );
+        (clock, net)
+    }
+
+    fn update(round: u32, payload: &[u8]) -> FrameBuf {
+        let mut f = FrameBuf::default();
+        f.set(FrameKind::Update, round, 0, payload, payload.len() as u64 * 8);
+        f
+    }
+
+    #[test]
+    fn frames_survive_the_fabric_in_fifo_order() {
+        let (clock, net) = sim(FaultPlan::new(), SimProfile::default());
+        let _actor = clock.actor();
+        let (mut client, mut server) = pairs(&net);
+        client.send(&update(1, &[1])).unwrap();
+        client.send(&update(2, &[2])).unwrap();
+        let mut got = FrameBuf::default();
+        server.recv(&mut got).unwrap();
+        assert_eq!((got.round, &got.payload[..]), (1, &[1][..]));
+        server.recv(&mut got).unwrap();
+        assert_eq!((got.round, &got.payload[..]), (2, &[2][..]));
+        assert!(clock.now() > Duration::ZERO, "delivery consumed virtual time");
+    }
+
+    #[test]
+    fn corrupt_frames_hit_the_real_crc_check() {
+        let plan = FaultPlan::new().rule(When::any(), FaultAction::CorruptBit(123));
+        let (clock, net) = sim(plan, SimProfile::default());
+        let _actor = clock.actor();
+        let (mut client, mut server) = pairs(&net);
+        client.send(&update(1, &[1, 2, 3, 4])).unwrap();
+        let err = server.recv(&mut FrameBuf::default()).unwrap_err();
+        assert!(err.is_retryable(), "corruption must be retryable, got {err}");
+    }
+
+    #[test]
+    fn dropped_frames_time_out_and_kill_errors_the_sender() {
+        let plan = FaultPlan::new()
+            .rule(When::any().seq(0), FaultAction::Drop)
+            .rule(When::any().seq(1), FaultAction::KillConn);
+        let (clock, net) = sim(plan, SimProfile::default());
+        let _actor = clock.actor();
+        let (mut client, mut server) = pairs(&net);
+        client.send(&update(1, &[9])).unwrap(); // dropped silently
+        let err = server.recv(&mut FrameBuf::default()).unwrap_err();
+        assert!(matches!(&err, TransportError::Io(e) if e.kind() == std::io::ErrorKind::TimedOut));
+        let err = client.send(&update(2, &[9])).unwrap_err();
+        assert!(err.is_retryable(), "{err}");
+        // the kill closed both directions
+        assert!(client.recv(&mut FrameBuf::default()).is_err());
+        let faults = net.applied_faults();
+        assert_eq!(faults.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_delivers_twice_and_transcript_is_stable() {
+        let plan = FaultPlan::new()
+            .rule(When::any().kind(FrameKind::Update).seq(0), FaultAction::Duplicate);
+        let (clock, net) = sim(plan.clone(), SimProfile::default());
+        let _actor = clock.actor();
+        let (mut client, mut server) = pairs(&net);
+        client.send(&update(3, &[7, 7])).unwrap();
+        let mut got = FrameBuf::default();
+        server.recv(&mut got).unwrap();
+        assert_eq!(got.round, 3);
+        server.recv(&mut got).unwrap();
+        assert_eq!(got.round, 3, "duplicate copy delivered");
+        let t1 = net.transcript();
+        assert!(t1.contains("+dup@"), "{t1}");
+
+        // identical run ⇒ byte-identical transcript
+        let (clock2, net2) = sim(plan, SimProfile::default());
+        let _actor2 = clock2.actor();
+        let (mut client2, mut server2) = pairs(&net2);
+        client2.send(&update(3, &[7, 7])).unwrap();
+        server2.recv(&mut got).unwrap();
+        server2.recv(&mut got).unwrap();
+        assert_eq!(t1, net2.transcript());
+    }
+}

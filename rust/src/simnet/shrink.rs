@@ -1,0 +1,201 @@
+//! Failure shrinking: reduce a failing fault schedule to a minimal
+//! reproducing subset.
+//!
+//! A failing simulated run yields the exact list of [`AppliedFault`]s
+//! the fabric injected. [`ddmin`] bisects that list — delta debugging
+//! with a final 1-minimality pass — against a caller-supplied
+//! `still_fails` predicate, and [`shrink_schedule`] wires the predicate
+//! to a real re-run: replay the same `(seed, TrainConfig)` with the
+//! candidate subset pinned as an exact [`FaultPlan`] and the background
+//! probabilities zeroed. Because jitter and fault decisions draw from
+//! independently salted RNG streams, removing faults never perturbs the
+//! timing of the frames that remain, so the subset either reproduces
+//! the failure or genuinely wasn't needed.
+//!
+//! The result renders as a copy-pastable `FaultPlan` via
+//! [`render_repro`](crate::simnet::fault::render_repro).
+
+use crate::simnet::fault::{render_repro, AppliedFault, FaultPlan, SimProfile};
+
+/// Delta-debugging minimisation (Zeller's ddmin) over a fault list.
+///
+/// `still_fails` must return `true` when re-running with exactly the
+/// given subset of faults still reproduces the failure. The input list
+/// itself is assumed to fail (callers should verify this first; see
+/// [`shrink_schedule`]). Returns a subset that still fails and is
+/// 1-minimal: removing any single remaining event makes the failure
+/// disappear.
+pub fn ddmin(
+    events: &[AppliedFault],
+    mut still_fails: impl FnMut(&[AppliedFault]) -> bool,
+) -> Vec<AppliedFault> {
+    let mut current: Vec<AppliedFault> = events.to_vec();
+    let mut granularity = 2usize;
+
+    while current.len() >= 2 {
+        let chunk = current.len().div_ceil(granularity);
+        let mut reduced = false;
+        let mut start = 0;
+        while start < current.len() {
+            let end = (start + chunk).min(current.len());
+            // Try the complement of current[start..end].
+            let candidate: Vec<AppliedFault> = current[..start]
+                .iter()
+                .chain(&current[end..])
+                .cloned()
+                .collect();
+            if !candidate.is_empty() && still_fails(&candidate) {
+                current = candidate;
+                granularity = granularity.saturating_sub(1).max(2);
+                reduced = true;
+                break;
+            }
+            start = end;
+        }
+        if !reduced {
+            if granularity >= current.len() {
+                break;
+            }
+            granularity = (granularity * 2).min(current.len());
+        }
+    }
+
+    // 1-minimality pass: drop single events while any single drop still fails.
+    let mut i = 0;
+    while current.len() > 1 && i < current.len() {
+        let mut candidate = current.clone();
+        candidate.remove(i);
+        if still_fails(&candidate) {
+            current = candidate;
+            i = 0;
+        } else {
+            i += 1;
+        }
+    }
+    current
+}
+
+/// The outcome of shrinking one failing schedule.
+#[derive(Debug)]
+pub struct Shrunk {
+    /// The minimal fault subset that still reproduces the failure.
+    pub events: Vec<AppliedFault>,
+    /// How many candidate re-runs the shrink consumed.
+    pub runs: usize,
+    /// A copy-pastable test-case snippet reproducing the failure.
+    pub repro: String,
+}
+
+/// Shrink a failing schedule to a minimal exact fault plan.
+///
+/// `applied` is the fault list recorded by the failing run (from
+/// [`SimRun::applied`](crate::simnet::harness::SimRun)); `fails` re-runs
+/// the same `(seed, TrainConfig)` with the given *exact* plan —
+/// explicit faults only, probabilities zeroed — and reports whether the
+/// failure reproduces. Returns `Err` with a diagnostic if the full
+/// exact replay does not reproduce the failure (a nondeterminism bug
+/// worth knowing about), otherwise the minimal subset plus its rendered
+/// repro snippet.
+pub fn shrink_schedule(
+    seed: u64,
+    applied: &[AppliedFault],
+    mut fails: impl FnMut(&FaultPlan) -> bool,
+) -> Result<Shrunk, String> {
+    let mut runs = 0usize;
+    let mut fails_with = |events: &[AppliedFault]| {
+        runs += 1;
+        fails(&FaultPlan::exact(events))
+    };
+
+    if !fails_with(applied) {
+        return Err(format!(
+            "exact replay of all {} applied faults (profile zeroed) did not reproduce \
+             the failure — the failure depends on something outside the fault schedule",
+            applied.len()
+        ));
+    }
+    let events = ddmin(applied, &mut fails_with);
+    let repro = render_repro(seed, &events);
+    Ok(Shrunk { events, runs, repro })
+}
+
+/// The zeroed profile shrinking replays under: all probabilistic faults
+/// off, so only the exact plan injects anything.
+pub fn zeroed_profile() -> SimProfile {
+    SimProfile::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::fault::{Dir, FaultAction, FaultKey, FrameCtx};
+    use crate::transport::frame::FrameKind;
+
+    fn fake_event(seq: u64) -> AppliedFault {
+        AppliedFault {
+            ctx: FrameCtx {
+                client: 0,
+                attempt: 1,
+                seq,
+                dir: Dir::Up,
+                kind: FrameKind::Update,
+                round: 0,
+            },
+            action: FaultAction::Drop,
+        }
+    }
+
+    fn has(events: &[AppliedFault], seq: u64) -> bool {
+        events.iter().any(|e| e.ctx.seq == seq)
+    }
+
+    #[test]
+    fn ddmin_finds_single_culprit() {
+        let events: Vec<_> = (0..16).map(fake_event).collect();
+        // Failure iff event seq=11 is present.
+        let min = ddmin(&events, |c| has(c, 11));
+        assert_eq!(min.len(), 1);
+        assert_eq!(min[0].ctx.seq, 11);
+    }
+
+    #[test]
+    fn ddmin_finds_conjunction() {
+        let events: Vec<_> = (0..10).map(fake_event).collect();
+        // Failure needs BOTH seq=2 and seq=7.
+        let min = ddmin(&events, |c| has(c, 2) && has(c, 7));
+        assert_eq!(min.len(), 2);
+        assert!(has(&min, 2) && has(&min, 7));
+    }
+
+    #[test]
+    fn shrink_schedule_reports_unreproducible() {
+        let events: Vec<_> = (0..4).map(fake_event).collect();
+        let err = shrink_schedule(7, &events, |_| false).unwrap_err();
+        assert!(err.contains("did not reproduce"));
+    }
+
+    #[test]
+    fn shrink_schedule_renders_repro() {
+        let events: Vec<_> = (0..6).map(fake_event).collect();
+        let shrunk = shrink_schedule(42, &events, |plan| {
+            // Reproduce iff the plan would fire on the seq=3 frame.
+            let mut counters = plan.counters();
+            let ctx = fake_event(3).ctx;
+            plan.decide(42, &zeroed_profile(), &mut counters, &ctx).is_some()
+        })
+        .unwrap();
+        assert_eq!(shrunk.events.len(), 1);
+        assert_eq!(shrunk.events[0].ctx.seq, 3);
+        assert!(shrunk.repro.contains("seed 42"), "repro:\n{}", shrunk.repro);
+        assert!(shrunk.repro.contains("FaultAction::Drop"), "repro:\n{}", shrunk.repro);
+        assert!(shrunk.runs >= 2);
+    }
+
+    #[test]
+    fn fault_key_orders_events() {
+        let a = fake_event(1).ctx.key();
+        let b = fake_event(2).ctx.key();
+        assert!(a < b);
+        assert_eq!(a, FaultKey { client: 0, attempt: 1, seq: 1, dir: Dir::Up });
+    }
+}

@@ -222,9 +222,20 @@ pub fn read_frame(r: &mut impl Read, f: &mut FrameBuf) -> Result<(), TransportEr
             "frame length {payload_len} inconsistent with payload_bits {payload_bits}"
         )));
     }
+    // Grow the payload buffer only as bytes actually arrive (≤ 64 KiB at
+    // a time): a hostile length field can then waste at most one chunk of
+    // allocation before the read fails, instead of reserving the full
+    // claimed size (up to MAX_PAYLOAD_BYTES) up front.
+    const READ_CHUNK: usize = 64 * 1024;
     f.payload.clear();
-    f.payload.resize(payload_len as usize, 0);
-    r.read_exact(&mut f.payload)?;
+    let mut remaining = payload_len as usize;
+    while remaining > 0 {
+        let take = remaining.min(READ_CHUNK);
+        let start = f.payload.len();
+        f.payload.resize(start + take, 0);
+        r.read_exact(&mut f.payload[start..])?;
+        remaining -= take;
+    }
     let crc = crc32(&[&head[..INNER_HEADER], &f.payload]);
     if crc != crc_wire {
         return Err(TransportError::BadFrame(format!(

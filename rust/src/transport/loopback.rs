@@ -7,11 +7,24 @@
 use std::collections::VecDeque;
 use std::io::{self, Read, Write};
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Duration;
 
 use crate::transport::frame::FrameBuf;
 use crate::transport::{Acceptor, Connector, FramedConn, Transport, TransportCfg, TransportError};
+
+/// A peer thread that panicked mid-round poisons the shared mutexes; a
+/// dead peer must look like a dead socket (typed error), never propagate
+/// the panic into this thread. The queue state itself stays coherent
+/// under poison — writers mutate it only through single non-panicking
+/// statements — so recovering the guard is safe.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn peer_died() -> io::Error {
+    io::Error::new(io::ErrorKind::BrokenPipe, "loopback peer thread died")
+}
 
 /// One direction of a connection: a byte queue with socket semantics.
 struct Pipe {
@@ -30,7 +43,7 @@ impl Pipe {
     }
 
     fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        lock_ignore_poison(&self.state).closed = true;
         self.cv.notify_all();
     }
 }
@@ -50,12 +63,14 @@ impl Read for LoopbackStream {
         if out.is_empty() {
             return Ok(0);
         }
-        let mut st = self.rx.state.lock().unwrap();
+        let Ok(mut st) = self.rx.state.lock() else { return Err(peer_died()) };
         while st.buf.is_empty() {
             if st.closed {
                 return Ok(0); // EOF
             }
-            let (next, timed_out) = self.rx.cv.wait_timeout(st, self.read_timeout).unwrap();
+            let Ok((next, timed_out)) = self.rx.cv.wait_timeout(st, self.read_timeout) else {
+                return Err(peer_died());
+            };
             st = next;
             if timed_out.timed_out() && st.buf.is_empty() && !st.closed {
                 return Err(io::Error::new(io::ErrorKind::TimedOut, "loopback read timed out"));
@@ -71,7 +86,7 @@ impl Read for LoopbackStream {
 
 impl Write for LoopbackStream {
     fn write(&mut self, data: &[u8]) -> io::Result<usize> {
-        let mut st = self.tx.state.lock().unwrap();
+        let Ok(mut st) = self.tx.state.lock() else { return Err(peer_died()) };
         if st.closed {
             return Err(io::Error::new(io::ErrorKind::BrokenPipe, "loopback peer closed"));
         }
@@ -165,7 +180,7 @@ impl LoopbackHub {
             sent: inner.to_clients.clone(),
             read_timeout: inner.read_timeout,
         };
-        let mut st = inner.state.lock().unwrap();
+        let mut st = inner.state.lock().map_err(|_| TransportError::Closed)?;
         if st.closed {
             return Err(TransportError::Closed);
         }
@@ -179,7 +194,7 @@ impl LoopbackHub {
 impl Acceptor for LoopbackHub {
     fn accept(&self) -> Result<Box<dyn Transport>, TransportError> {
         let inner = &self.0;
-        let mut st = inner.state.lock().unwrap();
+        let mut st = inner.state.lock().map_err(|_| TransportError::Closed)?;
         loop {
             if let Some(conn) = st.pending.pop_front() {
                 return Ok(conn);
@@ -187,12 +202,12 @@ impl Acceptor for LoopbackHub {
             if st.closed {
                 return Err(TransportError::Closed);
             }
-            st = inner.cv.wait(st).unwrap();
+            st = inner.cv.wait(st).map_err(|_| TransportError::Closed)?;
         }
     }
 
     fn shutdown(&self) {
-        self.0.state.lock().unwrap().closed = true;
+        lock_ignore_poison(&self.0.state).closed = true;
         self.0.cv.notify_all();
     }
 }
@@ -239,5 +254,76 @@ impl Transport for FaultyConn {
 
     fn peer(&self) -> String {
         self.inner.peer()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    /// Poison `run`'s mutex the only way possible: panic while holding it.
+    fn poison_by_panicking_while_locked(f: impl FnOnce() + Send + 'static) {
+        thread::spawn(f).join().unwrap_err();
+    }
+
+    #[test]
+    fn read_on_poisoned_pipe_errors_instead_of_panicking() {
+        let rx = Pipe::new();
+        let tx = Pipe::new();
+        {
+            let rx = rx.clone();
+            poison_by_panicking_while_locked(move || {
+                let _g = rx.state.lock().unwrap();
+                panic!("peer dies holding the pipe lock");
+            });
+        }
+        let mut stream = LoopbackStream {
+            rx,
+            tx,
+            sent: Arc::new(AtomicU64::new(0)),
+            read_timeout: Duration::from_millis(50),
+        };
+        let err = stream.read(&mut [0u8; 4]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe, "{err}");
+    }
+
+    #[test]
+    fn write_on_poisoned_pipe_errors_instead_of_panicking() {
+        let rx = Pipe::new();
+        let tx = Pipe::new();
+        {
+            let tx = tx.clone();
+            poison_by_panicking_while_locked(move || {
+                let _g = tx.state.lock().unwrap();
+                panic!("peer dies holding the pipe lock");
+            });
+        }
+        let mut stream = LoopbackStream {
+            rx,
+            tx,
+            sent: Arc::new(AtomicU64::new(0)),
+            read_timeout: Duration::from_millis(50),
+        };
+        let err = stream.write(&[1, 2, 3]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe, "{err}");
+        // dropping the stream closes both pipes through the poisoned lock
+        // without panicking
+        drop(stream);
+    }
+
+    #[test]
+    fn hub_with_poisoned_state_surfaces_closed() {
+        let hub = LoopbackHub::new(&TransportCfg::default());
+        {
+            let hub = hub.clone();
+            poison_by_panicking_while_locked(move || {
+                let _g = hub.0.state.lock().unwrap();
+                panic!("accept-side thread dies holding the hub lock");
+            });
+        }
+        assert!(matches!(hub.accept(), Err(TransportError::Closed)));
+        assert!(matches!(hub.connector().connect(), Err(TransportError::Closed)));
+        hub.shutdown(); // must not panic either
     }
 }

@@ -22,6 +22,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
+use std::time::Duration;
 
 use crate::codec::accounting::CommStats;
 use crate::codec::message::{self, WireCodec, WIRE_VERSION};
@@ -32,6 +33,7 @@ use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::trainer::TrainConfig;
 use crate::model::TensorLayout;
 use crate::netsim::NetSim;
+use crate::simnet::clock::{Clock, RealClock};
 use crate::transport::frame::{
     self, encode_done, encode_error, FrameBuf, FrameKind, Hello, HelloAck,
 };
@@ -39,6 +41,7 @@ use crate::transport::{config_digest, weight_digest, Acceptor, Transport, Transp
 use crate::util::tensor;
 
 /// What the server hands back after a completed federated run.
+#[derive(Clone, Debug)]
 pub struct FederatedResult {
     /// Final master weights.
     pub final_params: Vec<f32>,
@@ -102,6 +105,22 @@ impl FederatedServer {
     /// Typed error if a round cannot be completed within the retry/
     /// timeout budget.
     pub fn run(&mut self, acceptor: Arc<dyn Acceptor>) -> Result<FederatedResult, TransportError> {
+        self.run_with_clock(acceptor, Arc::new(RealClock::new()))
+    }
+
+    /// [`FederatedServer::run`] with an explicit [`Clock`]: every wait
+    /// (round collection, handler replies, accept backoff) parks on it,
+    /// so the deterministic simulator can run this exact server on
+    /// virtual time. Threads spawned here register as clock actors
+    /// *before* they start, which is what lets a [`SimClock`] account for
+    /// them in its quiescence rule.
+    ///
+    /// [`SimClock`]: crate::simnet::clock::SimClock
+    pub fn run_with_clock(
+        &mut self,
+        acceptor: Arc<dyn Acceptor>,
+        clock: Arc<dyn Clock>,
+    ) -> Result<FederatedResult, TransportError> {
         let shared = Arc::new(Shared {
             stop: AtomicBool::new(false),
             round: AtomicU32::new(0),
@@ -114,26 +133,36 @@ impl FederatedServer {
         let accept_thread = {
             let acceptor = acceptor.clone();
             let shared = shared.clone();
+            let clock = clock.clone();
             let round_timeout = self.cfg.transport.round_timeout;
-            thread::spawn(move || loop {
-                match acceptor.accept() {
-                    Ok(conn) => {
-                        let tx = tx.clone();
-                        let shared = shared.clone();
-                        thread::spawn(move || handle_connection(conn, tx, shared, round_timeout));
-                    }
-                    Err(_) => {
-                        if shared.stop.load(Ordering::SeqCst) {
-                            return;
+            let accept_actor = clock.actor();
+            thread::spawn(move || {
+                let _actor = accept_actor;
+                loop {
+                    match acceptor.accept() {
+                        Ok(conn) => {
+                            let tx = tx.clone();
+                            let shared = shared.clone();
+                            let clock = clock.clone();
+                            let handler_actor = clock.actor();
+                            thread::spawn(move || {
+                                let _actor = handler_actor;
+                                handle_connection(conn, tx, shared, round_timeout, &*clock)
+                            });
                         }
-                        // transient accept failure: keep listening
-                        thread::sleep(std::time::Duration::from_millis(10));
+                        Err(_) => {
+                            if shared.stop.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            // transient accept failure: keep listening
+                            clock.sleep(Duration::from_millis(10));
+                        }
                     }
                 }
             })
         };
 
-        let result = self.round_loop(&rx, &shared);
+        let result = self.round_loop(&rx, &shared, &*clock);
         shared.stop.store(true, Ordering::SeqCst);
         acceptor.shutdown();
         let _ = accept_thread.join();
@@ -146,6 +175,7 @@ impl FederatedServer {
         &mut self,
         rx: &mpsc::Receiver<Packet>,
         shared: &Shared,
+        clock: &dyn Clock,
     ) -> Result<FederatedResult, TransportError> {
         let cfg = &self.cfg;
         let n = self.layout.total;
@@ -179,11 +209,12 @@ impl FederatedServer {
             // collect one update per client for this round
             let mut have = 0usize;
             while have < nclients {
-                let pkt = rx.recv_timeout(cfg.transport.round_timeout).map_err(|_| {
-                    TransportError::Timeout(format!(
-                        "round {round}: got {have}/{nclients} client updates"
-                    ))
-                })?;
+                let pkt =
+                    recv_with_clock(rx, clock, cfg.transport.round_timeout).ok_or_else(|| {
+                        TransportError::Timeout(format!(
+                            "round {round}: got {have}/{nclients} client updates"
+                        ))
+                    })?;
                 if pkt.round == round as u32 {
                     if slots[pkt.client].is_none() {
                         have += 1;
@@ -196,6 +227,13 @@ impl FederatedServer {
                     // a reconnecting client re-sent the previous round's
                     // update: answer from the broadcast cache
                     let _ = pkt.reply.send(c.clone());
+                    clock.wake_all();
+                } else if pkt.round < round as u32 {
+                    // a stale duplicate from a round no longer covered by
+                    // the depth-1 cache (a delayed or duplicated frame):
+                    // drop it — its client already got that broadcast,
+                    // and the handler that relayed it winds down on its
+                    // reply timeout
                 } else {
                     return Err(TransportError::Protocol(format!(
                         "client {} sent round {} while server is at {round}",
@@ -250,11 +288,38 @@ impl FederatedServer {
                 // reconnect and be served from the cache
                 let _ = pkt.reply.send(reply.clone());
             }
+            clock.wake_all();
             cached = Some(reply);
         }
 
         let digest = weight_digest(&master);
         Ok(FederatedResult { final_params: master, digest, comm, net, rounds })
+    }
+}
+
+/// Poll-and-park replacement for `Receiver::recv_timeout` that waits on
+/// the [`Clock`] instead of wall time (a virtual clock can then jump
+/// straight over the wait). `None` means timeout or disconnection. The
+/// epoch is read *before* the poll so a send+wake between poll and park
+/// is never lost.
+fn recv_with_clock<T>(
+    rx: &mpsc::Receiver<T>,
+    clock: &dyn Clock,
+    timeout: Duration,
+) -> Option<T> {
+    let deadline = clock.now().checked_add(timeout).unwrap_or(Duration::MAX);
+    loop {
+        let seen = clock.epoch();
+        match rx.try_recv() {
+            Ok(v) => return Some(v),
+            Err(mpsc::TryRecvError::Disconnected) => return None,
+            Err(mpsc::TryRecvError::Empty) => {}
+        }
+        let now = clock.now();
+        if now >= deadline {
+            return None;
+        }
+        clock.park(seen, deadline - now);
     }
 }
 
@@ -266,7 +331,8 @@ fn handle_connection(
     mut conn: Box<dyn Transport>,
     tx: mpsc::Sender<Packet>,
     shared: Arc<Shared>,
-    round_timeout: std::time::Duration,
+    round_timeout: Duration,
+    clock: &dyn Clock,
 ) {
     let mut buf = FrameBuf::default();
     if conn.recv(&mut buf).is_err() || buf.kind != FrameKind::Hello {
@@ -307,9 +373,10 @@ fn handle_connection(
         if tx.send(pkt).is_err() {
             return; // round loop ended
         }
-        let reply = match reply_rx.recv_timeout(round_timeout) {
-            Ok(r) => r,
-            Err(_) => return, // superseded by a reconnect, or server error
+        clock.wake_all();
+        let reply = match recv_with_clock(&reply_rx, clock, round_timeout) {
+            Some(r) => r,
+            None => return, // superseded by a reconnect, or server error
         };
         buf.set(FrameKind::Broadcast, reply.round, hello.client, &reply.bytes, reply.bits);
         if conn.send(&buf).is_err() {

@@ -30,6 +30,7 @@ use crate::coordinator::client::ClientState;
 use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::trainer::TrainConfig;
 use crate::coordinator::TrainBackend;
+use crate::simnet::clock::{Clock, RealClock};
 use crate::transport::frame::{decode_done, decode_error, FrameBuf, FrameKind, Hello, HelloAck};
 use crate::transport::server::{FederatedResult, FederatedServer};
 use crate::transport::{
@@ -38,6 +39,7 @@ use crate::transport::{
 use crate::util::tensor;
 
 /// What one client session hands back after a completed federated run.
+#[derive(Clone, Debug)]
 pub struct ClientOutcome {
     /// This client's converged master weights.
     pub final_params: Vec<f32>,
@@ -58,13 +60,20 @@ pub struct ClientOutcome {
 struct Session<'a> {
     connector: &'a dyn Connector,
     cfg: &'a TrainConfig,
+    clock: &'a dyn Clock,
     hello: Hello,
     conn: Option<Box<dyn Transport>>,
     retries: u32,
 }
 
 impl<'a> Session<'a> {
-    fn new(cfg: &'a TrainConfig, id: usize, n_params: usize, connector: &'a dyn Connector) -> Self {
+    fn new(
+        cfg: &'a TrainConfig,
+        id: usize,
+        n_params: usize,
+        connector: &'a dyn Connector,
+        clock: &'a dyn Clock,
+    ) -> Self {
         let hello = Hello {
             client: id as u32,
             clients: cfg.clients as u32,
@@ -72,7 +81,7 @@ impl<'a> Session<'a> {
             wire_version: WIRE_VERSION,
             config_digest: config_digest(cfg),
         };
-        Session { connector, cfg, hello, conn: None, retries: 0 }
+        Session { connector, cfg, clock, hello, conn: None, retries: 0 }
     }
 
     /// Connect + handshake if there is no live connection.
@@ -131,7 +140,7 @@ impl<'a> Session<'a> {
                             last: Box::new(e),
                         });
                     }
-                    thread::sleep(self.cfg.transport.retry_backoff * (1 << attempt.min(16)));
+                    self.clock.sleep(self.cfg.transport.retry_backoff * (1 << attempt.min(16)));
                     attempt += 1;
                 }
                 Err(e) => return Err(e),
@@ -154,7 +163,8 @@ impl<'a> Session<'a> {
                 // a reconnect can replay the previous round's broadcast
                 // out of the server cache: skip anything stale
                 FrameKind::Broadcast if reply.round < update.round => continue,
-                FrameKind::Done => continue, // stale final marker
+                FrameKind::Done => continue,     // stale final marker
+                FrameKind::HelloAck => continue, // duplicated handshake ack
                 FrameKind::Error => {
                     return Err(TransportError::Rejected(decode_error(
                         &reply.payload[..reply.payload_bytes()],
@@ -170,17 +180,24 @@ impl<'a> Session<'a> {
         }
     }
 
-    /// Read the server's `Done` digest after the final broadcast.
+    /// Read the server's `Done` digest after the final broadcast,
+    /// skipping any duplicated broadcast/ack frames still in flight.
     fn read_done(&mut self, scratch: &mut FrameBuf) -> Result<u64, TransportError> {
         let conn = self.conn.as_mut().ok_or(TransportError::Closed)?;
-        conn.recv(scratch)?;
-        if scratch.kind != FrameKind::Done {
-            return Err(TransportError::Protocol(format!(
-                "expected Done, got {:?} frame",
-                scratch.kind
-            )));
+        loop {
+            conn.recv(scratch)?;
+            match scratch.kind {
+                FrameKind::Done => {
+                    return decode_done(&scratch.payload[..scratch.payload_bytes()])
+                }
+                FrameKind::Broadcast | FrameKind::HelloAck => continue,
+                k => {
+                    return Err(TransportError::Protocol(format!(
+                        "expected Done, got {k:?} frame"
+                    )))
+                }
+            }
         }
-        decode_done(&scratch.payload[..scratch.payload_bytes()])
     }
 }
 
@@ -192,6 +209,19 @@ pub fn run_client<B: TrainBackend>(
     id: usize,
     connector: &dyn Connector,
     backend: &mut B,
+) -> Result<ClientOutcome, TransportError> {
+    run_client_with_clock(cfg, id, connector, backend, &RealClock::new())
+}
+
+/// [`run_client`] with an explicit [`Clock`]: the retry backoff waits on
+/// it, so the deterministic simulator can drive the identical session
+/// code on virtual time.
+pub fn run_client_with_clock<B: TrainBackend>(
+    cfg: &TrainConfig,
+    id: usize,
+    connector: &dyn Connector,
+    backend: &mut B,
+    clock: &dyn Clock,
 ) -> Result<ClientOutcome, TransportError> {
     let n = backend.n_params();
     let layout = backend.layout().clone();
@@ -210,7 +240,7 @@ pub fn run_client<B: TrainBackend>(
     let mut down_decoded = UpdateMsg::scratch();
     let mut update = FrameBuf::default();
     let mut reply = FrameBuf::default();
-    let mut session = Session::new(cfg, id, n, connector);
+    let mut session = Session::new(cfg, id, n, connector, clock);
 
     for round in 0..rounds {
         let lr = cfg.lr.at(round * delay);

@@ -1,0 +1,263 @@
+//! Deterministic-simulation tests for the federation stack: the real
+//! `FederatedServer` and real client sessions run on a virtual clock
+//! over a seeded fault-injecting fabric, sweeping many schedules of
+//! drops, delays, duplicates, corruption, connection kills and
+//! stragglers. The invariant checked for *every* schedule: the run
+//! either completes with weights bit-identical to the serial trainer
+//! and exact communication accounting, or fails with a typed error —
+//! never a hang, panic, or silent divergence. Plus: byte-identical
+//! replay from `(seed, config)`, exact virtual-time retry backoff, and
+//! a shrinker demo that reduces an injected regression to a minimal
+//! one-fault schedule.
+//!
+//! Environment knobs (for CI matrices):
+//! - `SBC_SIM_SEED`: base seed for the sweep (default 1)
+//! - `SBC_SIM_SWEEP`: number of schedules to sweep (default 100)
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use sbc::compression::registry::MethodConfig;
+use sbc::coordinator::schedule::LrSchedule;
+use sbc::coordinator::trainer::{TrainConfig, TrainResult, Trainer};
+use sbc::sgd::NativeMlpBackend;
+use sbc::simnet::fault::render_repro;
+use sbc::simnet::{
+    check_run, run_schedule, shrink_schedule, Clock, Dir, FaultAction, FaultPlan, SimClock,
+    SimConfig, SimProfile, Verdict, When,
+};
+use sbc::transport::frame::FrameKind;
+use sbc::transport::session::run_client_with_clock;
+use sbc::transport::{Connector, Transport, TransportError};
+
+fn backend() -> NativeMlpBackend {
+    NativeMlpBackend::digits_small(4, 1)
+}
+
+/// The sim training config: small (3 rounds of SBC), serial aggregation,
+/// and *virtual* timeouts tightened so a harsh straggler pause (900 ms)
+/// genuinely blows the round budget while light pauses (40 ms) recover.
+fn sim_train_cfg(iterations: usize) -> TrainConfig {
+    let mut cfg =
+        TrainConfig::new("mlp-small", MethodConfig::sbc2(), iterations, LrSchedule::constant(0.1));
+    cfg.eval_every_rounds = 50;
+    cfg.eval_batches = 2;
+    cfg.parallelism = 1;
+    cfg.transport.retry_backoff = Duration::from_millis(2);
+    cfg.transport.read_timeout = Duration::from_millis(300);
+    cfg.transport.round_timeout = Duration::from_millis(600);
+    cfg
+}
+
+fn serial_oracle(cfg: &TrainConfig) -> TrainResult {
+    let mut cfg = cfg.clone();
+    cfg.parallelism = 1;
+    let mut be = backend();
+    Trainer::new(&mut be, cfg).run()
+}
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// A clean schedule (no faults) must complete bit-identical to the
+/// serial trainer with exact `CommStats`/`NetSim` reconciliation, while
+/// consuming virtual — not wall — time.
+#[test]
+fn clean_schedule_is_bit_identical_to_serial_trainer() {
+    let cfg = sim_train_cfg(30);
+    let serial = serial_oracle(&cfg);
+    let run = run_schedule(&cfg, &SimConfig::new(1), |_| backend());
+    assert!(run.completed(), "clean run must complete: {:?}", run.first_failure());
+    assert_eq!(check_run(&serial, &run), Verdict::Completed);
+    assert!(run.applied.is_empty(), "clean profile must inject nothing");
+    assert!(run.virtual_time > Duration::ZERO, "delivery must consume virtual time");
+    assert!(!run.transcript.is_empty());
+}
+
+/// The tentpole sweep: ≥ 100 seeded schedules mixing the light and harsh
+/// fault profiles. Every schedule must classify as Completed (digest +
+/// accounting bit-exact vs the serial trainer) or TypedFailure — a
+/// Violation (panic, divergence, accounting drift) fails the test with a
+/// replayable repro. The sweep must also exercise every fault kind and
+/// complete at least once *with* faults applied.
+#[test]
+fn seeded_schedule_sweep_never_violates() {
+    let cfg = sim_train_cfg(30);
+    let serial = serial_oracle(&cfg);
+    let base = env_u64("SBC_SIM_SEED", 1);
+    let count = env_u64("SBC_SIM_SWEEP", 100);
+
+    let mut completed = 0u64;
+    let mut failed = 0u64;
+    let mut faulty_completed = 0u64;
+    let (mut drops, mut dups, mut corrupts, mut delays, mut kills) = (0u64, 0, 0, 0, 0);
+
+    for i in 0..count {
+        let seed = base.wrapping_add(i);
+        let mut sim = SimConfig::new(seed);
+        sim.profile = if i % 2 == 0 { SimProfile::light() } else { SimProfile::harsh() };
+        let run = run_schedule(&cfg, &sim, |_| backend());
+        for f in &run.applied {
+            match f.action {
+                FaultAction::Drop => drops += 1,
+                FaultAction::Duplicate => dups += 1,
+                FaultAction::CorruptBit(_) => corrupts += 1,
+                FaultAction::DelayMs(_) => delays += 1,
+                FaultAction::KillConn => kills += 1,
+            }
+        }
+        match check_run(&serial, &run) {
+            Verdict::Completed => {
+                completed += 1;
+                if !run.applied.is_empty() {
+                    faulty_completed += 1;
+                }
+            }
+            Verdict::TypedFailure(_) => failed += 1,
+            Verdict::Violation(why) => panic!(
+                "seed {seed}: INVARIANT VIOLATION: {why}\n{}\ntranscript:\n{}",
+                render_repro(seed, &run.applied),
+                run.transcript
+            ),
+        }
+    }
+
+    eprintln!(
+        "sim sweep: {count} schedules from seed {base}: {completed} completed \
+         ({faulty_completed} despite faults), {failed} typed failures; \
+         faults applied: {drops} drops, {dups} dups, {corrupts} corruptions, \
+         {delays} delays, {kills} kills"
+    );
+    assert!(completed > 0, "no schedule completed");
+    assert!(faulty_completed > 0, "no schedule completed with faults applied");
+    if count >= 50 {
+        assert!(failed > 0, "harsh profile never produced a typed failure");
+        assert!(
+            drops > 0 && dups > 0 && corrupts > 0 && delays > 0 && kills > 0,
+            "sweep must exercise every fault kind \
+             (drops={drops} dups={dups} corrupts={corrupts} delays={delays} kills={kills})"
+        );
+    }
+}
+
+/// Replay: the same `(seed, config)` produces a byte-identical event
+/// transcript and the same verdict; a different seed produces a
+/// different schedule.
+#[test]
+fn same_seed_replays_byte_identical_transcript() {
+    let cfg = sim_train_cfg(30);
+    let serial = serial_oracle(&cfg);
+    let mut sim = SimConfig::new(11);
+    sim.profile = SimProfile::harsh();
+
+    let a = run_schedule(&cfg, &sim, |_| backend());
+    let b = run_schedule(&cfg, &sim, |_| backend());
+    assert!(!a.transcript.is_empty());
+    assert_eq!(a.transcript, b.transcript, "same seed must replay byte-identically");
+    assert_eq!(a.applied, b.applied);
+    assert_eq!(a.virtual_time, b.virtual_time);
+    assert_eq!(check_run(&serial, &a), check_run(&serial, &b));
+
+    let mut other = sim.clone();
+    other.seed = 12;
+    let c = run_schedule(&cfg, &other, |_| backend());
+    assert_ne!(a.transcript, c.transcript, "different seed must explore a different schedule");
+}
+
+/// Shrinker demo: inject a regression (a straggler pause longer than the
+/// round timeout on one specific Update) buried among decoy faults, then
+/// shrink the failing schedule down to the single event that matters and
+/// render it as a copy-pastable repro.
+#[test]
+fn shrinker_reduces_injected_regression_to_one_event() {
+    let cfg = sim_train_cfg(30);
+    let seed = 5;
+    let lethal_ms = 700; // > round_timeout (600 ms)
+
+    let plan = FaultPlan::new()
+        // decoys: all individually recoverable
+        .rule(When::any().client(0).kind(FrameKind::Update).round(0), FaultAction::Duplicate)
+        .rule(When::any().client(2).kind(FrameKind::Update).round(0), FaultAction::DelayMs(1))
+        .rule(
+            When::any().client(3).kind(FrameKind::Update).round(2).nth(1),
+            FaultAction::CorruptBit(9),
+        )
+        // the regression under test
+        .rule(
+            When::any().client(1).kind(FrameKind::Update).round(1).nth(1),
+            FaultAction::DelayMs(lethal_ms),
+        );
+
+    let mut sim = SimConfig::new(seed);
+    sim.plan = plan;
+    let run = run_schedule(&cfg, &sim, |_| backend());
+    assert!(run.first_failure().is_some(), "the injected regression must fail the run");
+    assert!(run.applied.len() >= 3, "decoys must fire too, got {:?}", run.applied);
+
+    let shrunk = shrink_schedule(seed, &run.applied, |candidate| {
+        let mut sim = SimConfig::new(seed);
+        sim.plan = candidate.clone();
+        run_schedule(&cfg, &sim, |_| backend()).first_failure().is_some()
+    })
+    .expect("exact replay reproduces the failure");
+
+    assert_eq!(
+        shrunk.events.len(),
+        1,
+        "minimal schedule should be the single lethal delay, got:\n{}",
+        shrunk.repro
+    );
+    let ev = &shrunk.events[0];
+    assert_eq!(ev.action, FaultAction::DelayMs(lethal_ms));
+    assert_eq!((ev.ctx.client, ev.ctx.dir), (1, Dir::Up));
+    assert_eq!(ev.ctx.kind, FrameKind::Update);
+    assert!(shrunk.repro.contains("DelayMs(700)"), "repro:\n{}", shrunk.repro);
+    assert!(shrunk.runs >= 2);
+}
+
+/// A connector that never reaches a server but records the virtual time
+/// of every attempt.
+struct RecordingConnector {
+    clock: SimClock,
+    attempts: Mutex<Vec<Duration>>,
+}
+
+impl Connector for RecordingConnector {
+    fn connect(&self) -> Result<Box<dyn Transport>, TransportError> {
+        self.attempts.lock().unwrap().push(self.clock.now());
+        Err(TransportError::Io(std::io::Error::new(
+            std::io::ErrorKind::ConnectionRefused,
+            "nobody listening",
+        )))
+    }
+}
+
+/// Retry backoff timing, exactly: with backoff b, connection attempts
+/// must land at virtual times 0, b, 3b, 7b (b·(2^k − 1)), and the
+/// session must fail with `RetriesExhausted{attempts = max_retries + 1}`
+/// at exactly b·(2^max_retries − 1) — no wall-clock sleeps involved.
+#[test]
+fn retry_backoff_follows_exact_virtual_schedule() {
+    let mut cfg = sim_train_cfg(10);
+    let b = Duration::from_millis(50);
+    cfg.transport.retry_backoff = b;
+    cfg.transport.max_retries = 3;
+
+    let clock = SimClock::new();
+    let _actor = clock.actor();
+    let connector = RecordingConnector { clock: clock.clone(), attempts: Mutex::new(Vec::new()) };
+    let err = run_client_with_clock(&cfg, 0, &connector, &mut backend(), &clock)
+        .expect_err("no server to reach");
+    match err {
+        TransportError::RetriesExhausted { attempts, last } => {
+            assert_eq!(attempts, cfg.transport.max_retries + 1);
+            assert!(matches!(*last, TransportError::Io(_)), "last cause: {last}");
+        }
+        other => panic!("expected RetriesExhausted, got {other}"),
+    }
+
+    let times = connector.attempts.lock().unwrap().clone();
+    assert_eq!(times, vec![Duration::ZERO, b, 3 * b, 7 * b]);
+    assert_eq!(clock.now(), 7 * b, "failure must land at b·(2^max_retries − 1)");
+}
