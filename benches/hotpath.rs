@@ -181,6 +181,23 @@ fn alloc_accounting() {
         }
     });
 
+    // same steady-state loop with disabled tracing: the NullRecorder
+    // must be inert — emit takes the event as a closure, so the String
+    // the Stage event would allocate is never constructed
+    let trace = sbc::trace::Trace::disabled();
+    let clock = sbc::simnet::clock::RealClock::new();
+    let (traced_bytes, traced_calls) = count_allocs(|| {
+        for round in 1..=rounds {
+            one_round(round as u32);
+            trace.emit(&clock, || sbc::trace::Event::Stage {
+                round: round as u32,
+                client: 0,
+                stage: "compress".to_string(),
+                nanos: 0,
+            });
+        }
+    });
+
     // densification alone — the acceptance-criterion stage — must be
     // allocation-free in steady state
     let (densify_bytes, _) = count_allocs(|| {
@@ -202,6 +219,11 @@ fn alloc_accounting() {
             format!("{:.1}", scratch_calls as f64 / rounds as f64),
         ],
         vec![
+            "scratch + disabled trace (NullRecorder)".to_string(),
+            format!("{}", traced_bytes / rounds),
+            format!("{:.1}", traced_calls as f64 / rounds as f64),
+        ],
+        vec![
             "densify_into alone".to_string(),
             format!("{}", densify_bytes / rounds),
             "0.0".to_string(),
@@ -217,6 +239,10 @@ fn alloc_accounting() {
         scratch_bytes, 0,
         "scratch round (compress_into -> encode -> decode_into -> densify_into) \
          must be allocation-free in steady state"
+    );
+    assert_eq!(
+        traced_bytes, 0,
+        "disabled tracing must add zero steady-state allocations to the hot path"
     );
     println!("\n(scratch path steady state: 0 bytes/round — the residual-densify\n hot loop never touches the heap; legacy reallocated every stage)");
 }

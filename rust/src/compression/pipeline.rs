@@ -84,6 +84,42 @@ impl Pipeline {
         }
     }
 
+    /// [`Pipeline::compress_into`] with stage-boundary observation: the
+    /// select and quantize durations are summed across segments and
+    /// reported to `observe` as the `"select"` / `"quantize"` stage
+    /// timings ([`crate::trace::Event::Stage`] vocabulary). Only the
+    /// traced round path calls this; the untraced hot path keeps the
+    /// timing-free [`Pipeline::compress_into`], so disabling tracing
+    /// removes every clock read.
+    pub fn compress_into_observed(
+        &mut self,
+        acc: &[f32],
+        layout: &TensorLayout,
+        round: u32,
+        out: &mut UpdateMsg,
+        observe: &mut dyn FnMut(&'static str, u64),
+    ) {
+        assert_eq!(acc.len(), layout.total, "update length must match layout");
+        out.round = round;
+        let nseg = self.granularity.n_segments(layout);
+        out.tensors.truncate(nseg);
+        while out.tensors.len() < nseg {
+            out.tensors.push(TensorUpdate::placeholder());
+        }
+        let (mut select_ns, mut quantize_ns) = (0u64, 0u64);
+        for i in 0..nseg {
+            let x = &acc[self.granularity.segment(layout, i)];
+            let t0 = std::time::Instant::now();
+            let support = self.selector.select(x, &mut self.idx);
+            select_ns += t0.elapsed().as_nanos() as u64;
+            let t1 = std::time::Instant::now();
+            self.quantizer.quantize(x, support, &self.idx, &mut out.tensors[i]);
+            quantize_ns += t1.elapsed().as_nanos() as u64;
+        }
+        observe("select", select_ns);
+        observe("quantize", quantize_ns);
+    }
+
     /// Allocating convenience wrapper (tests, cold paths).
     pub fn compress(&mut self, acc: &[f32], layout: &TensorLayout, round: u32) -> UpdateMsg {
         let mut out = UpdateMsg::scratch();
@@ -214,6 +250,23 @@ mod tests {
         p.compress_into(&x, &layout, 1, &mut msg);
         assert_eq!(msg.tensors, first.tensors);
         assert_eq!(msg.round, 1);
+    }
+
+    #[test]
+    fn observed_compress_is_bit_identical_and_reports_both_stages() {
+        let layout = TensorLayout::new(vec![("a".into(), vec![800]), ("b".into(), vec![200])]);
+        let x = heavy(1000, 5);
+        let mut plain = MethodConfig::sbc(0.05, 1).build(9);
+        let mut observed = MethodConfig::sbc(0.05, 1).build(9);
+        let mut msg_a = UpdateMsg::scratch();
+        let mut msg_b = UpdateMsg::scratch();
+        plain.compress_into(&x, &layout, 2, &mut msg_a);
+        let mut stages = Vec::new();
+        observed.compress_into_observed(&x, &layout, 2, &mut msg_b, &mut |s, _ns| {
+            stages.push(s)
+        });
+        assert_eq!(msg_a, msg_b);
+        assert_eq!(stages, vec!["select", "quantize"]);
     }
 
     #[test]

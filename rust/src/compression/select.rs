@@ -134,8 +134,10 @@ impl Selector {
         self.mags.clear();
         self.mags.extend(x.iter().map(|v| v.abs()));
         let kth = {
-            let (_, kth, _) =
-                self.mags.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+            // total_cmp, not partial_cmp: NaN magnitudes (poisoned
+            // gradients) must order deterministically instead of
+            // panicking mid-round. NaN sorts above +inf here.
+            let (_, kth, _) = self.mags.select_nth_unstable_by(k - 1, |a, b| b.total_cmp(a));
             *kth
         };
         self.ties.clear();
@@ -179,8 +181,7 @@ impl Selector {
                 continue;
             }
             let thr = if k2 < self.mags.len() {
-                let (_, kth, _) =
-                    self.mags.select_nth_unstable_by(k2 - 1, |a, b| b.partial_cmp(a).unwrap());
+                let (_, kth, _) = self.mags.select_nth_unstable_by(k2 - 1, |a, b| b.total_cmp(a));
                 *kth
             } else {
                 0.0 // keep every element of this side
@@ -206,8 +207,10 @@ impl Selector {
 }
 
 /// Per-side k for fractional sparsity `p` over a segment of `n` elements.
+/// Clamped to `[1, n]`: `p` at or above 1.0 must select the whole segment,
+/// not index out of bounds in quickselect.
 fn frac_k(p: f64, n: usize) -> usize {
-    ((p * n as f64).round() as usize).max(1)
+    ((p * n as f64).round() as usize).clamp(1, n.max(1))
 }
 
 /// Histogram-threshold selection, both sides merged (mirrors the Pallas
@@ -355,6 +358,55 @@ mod tests {
         let mut idx = Vec::new();
         s.select(&x, &mut idx);
         assert_eq!(idx.len(), 3);
+    }
+
+    #[test]
+    fn topk_full_and_oversubscribed_p_select_everything() {
+        // regression: p >= 1.0 used to panic out of bounds in quickselect
+        let x = heavy(100, 21);
+        for p in [1.0f64, 1.5] {
+            let mut s = Selector::new(SelectorCfg::TopK { p, strategy: Selection::Exact }, 0);
+            let mut idx = Vec::new();
+            assert_eq!(s.select(&x, &mut idx), Support::Sparse, "p={p}");
+            assert_eq!(idx, (0..x.len() as u32).collect::<Vec<_>>(), "p={p}");
+        }
+    }
+
+    #[test]
+    fn two_sided_full_and_oversubscribed_p_select_all_nonzero() {
+        let mut x = heavy(100, 22);
+        x[7] = 0.0; // zeros belong to neither side
+        for p in [1.0f64, 1.5] {
+            let mut s = Selector::new(SelectorCfg::TwoSided { p, strategy: Selection::Exact }, 0);
+            let mut idx = Vec::new();
+            s.select(&x, &mut idx);
+            let nonzero: Vec<u32> = x
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(i, _)| i as u32)
+                .collect();
+            assert_eq!(idx, nonzero, "p={p}");
+        }
+    }
+
+    #[test]
+    fn nan_magnitudes_select_deterministically_without_panic() {
+        let mut x = heavy(200, 23);
+        x[3] = f32::NAN;
+        x[50] = f32::INFINITY;
+        x[51] = f32::NEG_INFINITY;
+        for cfg in [
+            SelectorCfg::TopK { p: 0.1, strategy: Selection::Exact },
+            SelectorCfg::TwoSided { p: 0.1, strategy: Selection::Exact },
+        ] {
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            Selector::new(cfg, 0).select(&x, &mut a);
+            Selector::new(cfg, 0).select(&x, &mut b);
+            assert_eq!(a, b, "{cfg:?}");
+            assert!(!a.is_empty(), "{cfg:?}");
+        }
     }
 
     #[test]

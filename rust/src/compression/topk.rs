@@ -20,7 +20,9 @@ pub fn topk_exact(x: &[f32], k: usize) -> Vec<u32> {
     }
     let mut mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
     let kth = {
-        let (_, kth, _) = mags.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+        // total_cmp: NaN magnitudes order deterministically (above +inf)
+        // instead of panicking in the comparator.
+        let (_, kth, _) = mags.select_nth_unstable_by(k - 1, |a, b| b.total_cmp(a));
         *kth
     };
     // collect everything strictly above, then fill ties up to k
@@ -55,7 +57,7 @@ pub fn topk_sampled(x: &[f32], k: usize, sample: usize, rng: &mut Rng) -> Vec<u3
     let frac = k as f64 / x.len() as f64;
     let ks = ((frac * sample as f64).round() as usize).clamp(1, sample);
     let thr = {
-        let (_, kth, _) = mags.select_nth_unstable_by(ks - 1, |a, b| b.partial_cmp(a).unwrap());
+        let (_, kth, _) = mags.select_nth_unstable_by(ks - 1, |a, b| b.total_cmp(a));
         *kth
     };
     let mut out: Vec<u32> =
@@ -178,7 +180,7 @@ mod tests {
             assert_eq!(got.len(), k);
             // reference: sort by magnitude
             let mut order: Vec<usize> = (0..x.len()).collect();
-            order.sort_by(|&a, &b| x[b].abs().partial_cmp(&x[a].abs()).unwrap());
+            order.sort_by(|&a, &b| x[b].abs().total_cmp(&x[a].abs()));
             let min_kept: f32 = got.iter().map(|&i| x[i as usize].abs()).fold(f32::MAX, f32::min);
             let kth = x[order[k - 1]].abs();
             assert_eq!(min_kept, kth, "k={k}");

@@ -158,6 +158,26 @@ pub fn load_sim_settings(path: &str) -> Result<SimSettings> {
     Ok(sim_settings_from_doc(&Doc::parse(&text)?))
 }
 
+/// Settings for structured-event tracing (the TOML `[trace]` section;
+/// every key optional, the `--trace <path>` CLI flag overrides).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TraceSettings {
+    /// JSONL output path (`trace.path`); `None` leaves tracing to the
+    /// `SBC_TRACE` environment variable (or disabled).
+    pub path: Option<String>,
+}
+
+/// Parse the `[trace]` section of a config doc (defaults where absent).
+pub fn trace_settings_from_doc(doc: &Doc) -> TraceSettings {
+    TraceSettings { path: doc.get("trace.path").and_then(Value::as_str).map(str::to_string) }
+}
+
+/// Read a TOML config file and parse its `[trace]` section.
+pub fn load_trace_settings(path: &str) -> Result<TraceSettings> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(trace_settings_from_doc(&Doc::parse(&text)?))
+}
+
 fn ms(v: i64) -> std::time::Duration {
     std::time::Duration::from_millis(v.max(0) as u64)
 }
@@ -264,6 +284,23 @@ mod tests {
         // absent section keeps the defaults
         let plain = sim_settings_from_doc(&Doc::parse("model = \"lenet\"").unwrap());
         assert_eq!(plain, SimSettings::default());
+    }
+
+    #[test]
+    fn trace_keys() {
+        let doc = Doc::parse(
+            r#"
+            model = "lenet"
+            [trace]
+            path = "run.jsonl"
+            "#,
+        )
+        .unwrap();
+        let trace = trace_settings_from_doc(&doc);
+        assert_eq!(trace, TraceSettings { path: Some("run.jsonl".into()) });
+        // absent section keeps the defaults
+        let plain = trace_settings_from_doc(&Doc::parse("model = \"lenet\"").unwrap());
+        assert_eq!(plain, TraceSettings::default());
     }
 
     #[test]

@@ -50,6 +50,12 @@ pub struct ClientState {
     pub round_bits: u64,
     /// Non-zero elements this client transmitted in the most recent round.
     pub round_nnz: u64,
+    /// Buffered `(stage, nanos)` trace observations of the most recent
+    /// round. Pool workers only push here; the coordinator drains in
+    /// client-index order and emits [`crate::trace::Event::Stage`], so a
+    /// traced pooled run records the same event order as a serial run.
+    /// Always empty when tracing is disabled.
+    pub trace_buf: Vec<(&'static str, u64)>,
 }
 
 impl ClientState {
@@ -80,6 +86,7 @@ impl ClientState {
             round_loss: 0.0,
             round_bits: 0,
             round_nnz: 0,
+            trace_buf: Vec::new(),
         }
     }
 

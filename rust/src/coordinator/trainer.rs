@@ -48,6 +48,8 @@ use crate::coordinator::{TrainBackend, WorkerBackend};
 use crate::metrics::{CurvePoint, RunLog};
 use crate::model::{Task, TensorLayout};
 use crate::netsim::{Link, NetSim};
+use crate::simnet::clock::{Clock, RealClock};
+use crate::trace::{Event, StageProfile, StageProfileBuilder, Trace, SERVER};
 use crate::transport::{frame, TransportCfg};
 use crate::util::rng::Rng;
 use crate::util::tensor;
@@ -107,6 +109,11 @@ pub struct TrainConfig {
     /// ([`crate::transport`]); also sets the framing-overhead model the
     /// in-process trainer charges to [`CommStats`] and [`NetSim`].
     pub transport: TransportCfg,
+    /// Structured-event sink ([`crate::trace`]): disabled by default
+    /// (inert `NullRecorder`), settable via `--trace` / `[trace]` TOML /
+    /// the `SBC_TRACE` env var. Never affects training results — digests
+    /// are bit-identical with tracing on or off.
+    pub trace: Trace,
 }
 
 impl TrainConfig {
@@ -129,6 +136,7 @@ impl TrainConfig {
             verbose: false,
             parallelism: default_parallelism(),
             transport: TransportCfg::default(),
+            trace: Trace::from_env(),
         }
     }
 }
@@ -143,6 +151,9 @@ pub struct TrainResult {
     pub net: NetSim,
     /// Final master weights.
     pub final_params: Vec<f32>,
+    /// Per-stage p50/p95/max timing profile — `Some` iff the run was
+    /// traced ([`TrainConfig::trace`] enabled).
+    pub stage_profile: Option<StageProfile>,
 }
 
 /// Drives one full distributed training over a [`TrainBackend`].
@@ -166,6 +177,49 @@ struct RoundCtx<'a> {
     sign_scale: f32,
     momentum_masking: bool,
     majority_vote: bool,
+    /// Whether stage timings are buffered into `ClientState::trace_buf`.
+    trace_on: bool,
+}
+
+/// Start a stage timing mark iff the round is traced — the untraced hot
+/// path never reads the clock.
+#[inline]
+fn mark(on: bool) -> Option<Instant> {
+    if on {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Close a [`mark`] into a buffered `(stage, nanos)` observation.
+#[inline]
+fn observe(buf: &mut Vec<(&'static str, u64)>, stage: &'static str, t0: Option<Instant>) {
+    if let Some(t0) = t0 {
+        buf.push((stage, t0.elapsed().as_nanos() as u64));
+    }
+}
+
+/// Close a [`mark`] on a server-side stage: record it into the profile
+/// and emit the [`Event::Stage`] with the [`SERVER`] client sentinel.
+fn server_stage(
+    trace: &Trace,
+    clock: &dyn Clock,
+    profile: &mut Option<StageProfileBuilder>,
+    round: u32,
+    stage: &'static str,
+    t0: Option<Instant>,
+) {
+    if let (Some(p), Some(t0)) = (profile.as_mut(), t0) {
+        let nanos = t0.elapsed().as_nanos() as u64;
+        p.observe(stage, nanos);
+        trace.emit(clock, || Event::Stage {
+            round,
+            client: SERVER,
+            stage: stage.to_string(),
+            nanos,
+        });
+    }
 }
 
 /// One pool worker: a forked backend plus the accumulator scratch that
@@ -201,16 +255,30 @@ fn run_client_round(
     acc: &mut [f32],
     local_steps: &mut dyn FnMut(&mut ClientState, &[f32]) -> (Vec<f32>, f32),
 ) {
+    let t_local = mark(ctx.trace_on);
     let (w_new, loss) = {
         let _t = span("local_steps");
         local_steps(c, ctx.master)
     };
+    observe(&mut c.trace_buf, "local_steps", t_local);
     c.iterations += ctx.delay;
     {
         let _t = span("compress");
+        let t_compress = mark(ctx.trace_on);
         tensor::sub_into(acc, &w_new, ctx.master);
         c.residual.accumulate_into(acc);
-        c.pipeline.compress_into(acc, ctx.layout, ctx.round, &mut c.msg);
+        if ctx.trace_on {
+            c.pipeline.compress_into_observed(
+                acc,
+                ctx.layout,
+                ctx.round,
+                &mut c.msg,
+                &mut |stage, nanos| c.trace_buf.push((stage, nanos)),
+            );
+        } else {
+            c.pipeline.compress_into(acc, ctx.layout, ctx.round, &mut c.msg);
+        }
+        observe(&mut c.trace_buf, "compress", t_compress);
     }
     finish_client_round(ctx, c, acc, loss);
 }
@@ -224,12 +292,16 @@ fn run_client_round(
 fn finish_client_round(ctx: &RoundCtx, c: &mut ClientState, acc: &[f32], loss: f32) {
     let nnz: usize = c.msg.tensors.iter().map(|t| t.nonzeros()).sum();
     let bits = {
+        let t_encode = mark(ctx.trace_on);
         let (bytes, bits) = {
             let _t = span("encode");
             c.wire.encode(&c.msg)
         };
+        observe(&mut c.trace_buf, "encode", t_encode);
         let _t = span("decode");
+        let t_decode = mark(ctx.trace_on);
         message::decode_into(bytes, bits, &mut c.decoded).expect("wire roundtrip failed");
+        observe(&mut c.trace_buf, "decode", t_decode);
         bits
     };
     c.up_bits += bits;
@@ -239,7 +311,9 @@ fn finish_client_round(ctx: &RoundCtx, c: &mut ClientState, acc: &[f32], loss: f
 
     {
         let _t = span("densify");
+        let t_densify = mark(ctx.trace_on);
         c.decoded.densify_into(ctx.layout, ctx.densify_gran, ctx.sign_scale, &mut c.dense);
+        observe(&mut c.trace_buf, "densify", t_densify);
     }
     c.residual.update(acc, &c.dense);
 
@@ -276,6 +350,11 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
         let layout = self.backend.layout().clone();
         let opt_size = self.backend.opt_size();
         let started = Instant::now();
+        // monotonic timestamps for emitted events; tracing the in-process
+        // trainer always runs on wall time (simnet traces via SimClock)
+        let clock = RealClock::new();
+        let trace_on = cfg.trace.enabled();
+        let mut profile = trace_on.then(StageProfileBuilder::new);
 
         assert_eq!(initial.len(), n, "initial params length mismatch");
         let mut master = initial;
@@ -349,6 +428,7 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
 
         for round in 0..rounds {
             let lr = cfg.lr.at(round * delay);
+            cfg.trace.emit(&clock, || Event::RoundStart { round: round as u32 });
 
             // --- phase 1: per-client local training + compress + wire ---
             {
@@ -362,11 +442,13 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
                     sign_scale,
                     momentum_masking: cfg.method.momentum_masking,
                     majority_vote,
+                    trace_on,
                 };
                 if workers.is_empty() && is_sbc_pjrt {
                     // serial-only: SBC through the AOT Pallas kernel
                     // graph, which is bound to the main backend
                     for c in clients.iter_mut() {
+                        let t_local = mark(trace_on);
                         let (w_new, loss) = {
                             let _t = span("local_steps");
                             self.backend.local_steps(
@@ -379,6 +461,7 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
                                 &mut c.rng,
                             )
                         };
+                        observe(&mut c.trace_buf, "local_steps", t_local);
                         c.iterations += delay;
                         {
                             let _t = span("compress");
@@ -388,6 +471,7 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
                         let p = cfg.method.sbc_p().unwrap() as f32;
                         {
                             let _t = span("compress_pjrt");
+                            let t_pjrt = mark(trace_on);
                             let (dense, _thr, mu, side_pos) = self
                                 .backend
                                 .compress_pjrt(&acc, p)
@@ -401,6 +485,7 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
                             tensor::nonzero_indices_into(&dense, idx);
                             *mu_slot = mu.abs();
                             *side = side_pos;
+                            observe(&mut c.trace_buf, "compress_pjrt", t_pjrt);
                         }
                         finish_client_round(&ctx, c, &acc, loss);
                     }
@@ -444,7 +529,7 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
 
             // --- deterministic read-back: accounting in client order ----
             let mut train_loss = 0.0f32;
-            for (ci, c) in clients.iter().enumerate() {
+            for (ci, c) in clients.iter_mut().enumerate() {
                 for _ in 0..delay {
                     comm.record_baseline_iter(n);
                 }
@@ -452,12 +537,40 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
                 comm.record_frame_overhead(frame::overhead_bits(c.round_bits));
                 round_up_bits[ci] = c.round_bits + frame::overhead_bits(c.round_bits);
                 train_loss += c.round_loss;
+                // funnel buffered worker observations back in client-index
+                // order (same event order as a serial run), and emit the
+                // upstream Frame event at exactly the accounting point so
+                // trace totals reconcile with CommStats/NetSim
+                if let Some(p) = profile.as_mut() {
+                    let t_now = clock.now().as_nanos() as u64;
+                    for (stage, nanos) in c.trace_buf.drain(..) {
+                        p.observe(stage, nanos);
+                        cfg.trace.emit_at(t_now, || Event::Stage {
+                            round: round as u32,
+                            client: ci as u32,
+                            stage: stage.to_string(),
+                            nanos,
+                        });
+                    }
+                    let (pb, ob) = (c.round_bits, frame::overhead_bits(c.round_bits));
+                    cfg.trace.emit_at(t_now, || Event::Frame {
+                        role: "server".into(),
+                        dir: "up".into(),
+                        kind: "update".into(),
+                        client: ci as u32,
+                        round: round as u32,
+                        payload_bits: pb,
+                        overhead_bits: ob,
+                    });
+                }
             }
 
             // --- phase 2: sharded server aggregation --------------------
             {
                 let _t = span("aggregate");
+                let t_agg = mark(trace_on);
                 aggregate_sharded(&ClientUpdates(&clients), agg_rule, &agg_pool, &mut delta);
+                server_stage(&cfg.trace, &clock, &mut profile, round as u32, "aggregate", t_agg);
             }
             // downstream: re-encode the aggregate exactly as it goes on
             // the wire (sparse when the union support is small, dense
@@ -465,10 +578,12 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
             // down_bits is the measured broadcast size, not an estimate.
             let down_bits = {
                 let _t = span("encode_down");
+                let t_down = mark(trace_on);
                 compress_broadcast_into(&delta, round as u32, &mut down_msg);
                 let (bytes, bits) = down_wire.encode(&down_msg);
                 message::decode_into(bytes, bits, &mut down_decoded)
                     .expect("downstream roundtrip failed");
+                server_stage(&cfg.trace, &clock, &mut profile, round as u32, "encode_down", t_down);
                 bits
             };
             down_decoded.densify_into(&layout, Granularity::Global, 1.0, &mut delta_rx);
@@ -477,13 +592,44 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
             // the per-frame header/padding overhead in both directions
             comm.record_frame_overhead(frame::overhead_bits(down_bits) * cfg.clients as u64);
             net.round(&round_up_bits, down_bits + frame::overhead_bits(down_bits));
+            if trace_on {
+                // one broadcast Frame per client: NetSim charges the same
+                // down_bits + overhead to every client's downlink
+                let oh = frame::overhead_bits(down_bits);
+                for ci in 0..cfg.clients {
+                    cfg.trace.emit(&clock, || Event::Frame {
+                        role: "server".into(),
+                        dir: "down".into(),
+                        kind: "broadcast".into(),
+                        client: ci as u32,
+                        round: round as u32,
+                        payload_bits: down_bits,
+                        overhead_bits: oh,
+                    });
+                }
+                let up_total: u64 = clients.iter().map(|c| c.round_bits).sum();
+                let mean_loss = train_loss / cfg.clients as f32;
+                cfg.trace.emit(&clock, || Event::RoundEnd {
+                    round: round as u32,
+                    train_loss: mean_loss,
+                    up_bits: up_total,
+                    down_bits,
+                });
+            }
 
             // --- evaluation ------------------------------------------
             let last = round + 1 == rounds;
             if round % cfg.eval_every_rounds == 0 || last {
                 let _t = span("evaluate");
+                let t_eval = mark(trace_on);
                 let ev = self.backend.evaluate(&master, cfg.eval_batches);
+                server_stage(&cfg.trace, &clock, &mut profile, round as u32, "evaluate", t_eval);
                 let metric = if self.backend.is_lm() { ev.loss.exp() } else { ev.metric };
+                cfg.trace.emit(&clock, || Event::Eval {
+                    round: round as u32,
+                    loss: ev.loss,
+                    metric,
+                });
                 let point = CurvePoint {
                     round,
                     iterations: (round + 1) * delay,
@@ -510,7 +656,9 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
         log.compression = comm.compression_rate();
         log.final_metric = log.points.last().map(|p| p.metric).unwrap_or(f32::NAN);
         log.wall_s = started.elapsed().as_secs_f64();
-        TrainResult { log, comm, net, final_params: master }
+        let stage_profile = profile.map(|p| p.finish(rounds as u32));
+        cfg.trace.flush();
+        TrainResult { log, comm, net, final_params: master, stage_profile }
     }
 }
 

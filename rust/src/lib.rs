@@ -43,5 +43,6 @@ pub mod netsim;
 pub mod runtime;
 pub mod sgd;
 pub mod simnet;
+pub mod trace;
 pub mod transport;
 pub mod util;

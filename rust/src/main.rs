@@ -100,6 +100,9 @@ fn print_help() {
                     [--connect ADDR --client-id K] join as federated client K\n\
                     (federated runs use the native backend and produce\n\
                      bit-identical weights to the in-process trainer)\n\
+                    [--trace out.jsonl]            write structured events (JSONL) and\n\
+                    print a per-stage latency profile; SBC_TRACE=jsonl\n\
+                    or a [trace] TOML section work too\n\
                     [--simulate] [--schedules N] [--sim-profile none|light|harsh|mixed]\n\
                     sweep N seeded fault schedules of the federation\n\
                     protocol on a virtual clock (deterministic: any\n\
@@ -141,6 +144,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if args.flag("pjrt-compress") {
         cfg.use_pjrt_compress = true;
+    }
+    // structured-event tracing: `[trace] path` from the TOML (if any),
+    // then the --trace flag overrides; both beat the SBC_TRACE env var
+    // already resolved by TrainConfig::new / the config loader
+    if let Some(path) = args.get("config") {
+        if let Some(p) = config::load_trace_settings(path)?.path {
+            cfg.trace = sbc::trace::Trace::jsonl(std::path::Path::new(&p))?;
+            println!("# tracing events to {p}");
+        }
+    }
+    if let Some(p) = args.get("trace") {
+        cfg.trace = sbc::trace::Trace::jsonl(std::path::Path::new(p))?;
+        println!("# tracing events to {p}");
     }
 
     // deterministic simulation: the full federation protocol on a
@@ -189,6 +205,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         result.comm.frame_overhead_bits as f64 / 8e6,
         result.net.total_comm_time_s,
     );
+    if let Some(profile) = &result.stage_profile {
+        println!("{}", profile.render_table());
+    }
     if let Some(csv) = args.get("csv") {
         result.log.append_csv(csv)?;
         println!("# appended curve to {csv}");

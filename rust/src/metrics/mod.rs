@@ -51,15 +51,18 @@ impl RunLog {
         "model,method,seed,round,iterations,client_up_bits,train_loss,eval_loss,metric"
     }
 
-    /// Render every curve point as CSV rows (no header).
+    /// Render every curve point as CSV rows (no header). Text fields are
+    /// RFC-4180-quoted when needed: method labels contain commas (e.g.
+    /// `SBC(p=0.001,n=1)`), which unquoted would shift every downstream
+    /// column.
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         for p in &self.points {
             let _ = writeln!(
                 out,
                 "{},{},{},{},{},{},{:.6},{:.6},{:.6}",
-                self.model,
-                self.method,
+                csv_field(&self.model),
+                csv_field(&self.method),
                 self.seed,
                 p.round,
                 p.iterations,
@@ -83,6 +86,16 @@ impl RunLog {
             writeln!(f, "{}", Self::csv_header())?;
         }
         write!(f, "{}", self.to_csv())
+    }
+}
+
+/// RFC-4180 field encoding: quote when the value contains a comma, quote
+/// or newline; embedded quotes double.
+pub fn csv_field(s: &str) -> String {
+    if s.contains([',', '"', '\n']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
     }
 }
 
@@ -120,9 +133,39 @@ pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
 mod tests {
     use super::*;
 
+    /// Minimal RFC-4180 row parser for the roundtrip assertions.
+    fn parse_csv_row(line: &str) -> Vec<String> {
+        let mut fields = Vec::new();
+        let mut cur = String::new();
+        let mut quoted = false;
+        let mut chars = line.chars().peekable();
+        while let Some(c) = chars.next() {
+            match (quoted, c) {
+                (false, ',') => fields.push(std::mem::take(&mut cur)),
+                (false, '"') => quoted = true,
+                (true, '"') => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        cur.push('"');
+                    } else {
+                        quoted = false;
+                    }
+                }
+                (_, c) => cur.push(c),
+            }
+        }
+        fields.push(cur);
+        fields
+    }
+
     #[test]
     fn csv_roundtrip_fields() {
-        let mut log = RunLog { model: "mlp".into(), method: "sbc".into(), seed: 1, ..Default::default() };
+        let mut log = RunLog {
+            model: "mlp".into(),
+            method: "SBC(p=0.001,n=1)".into(),
+            seed: 1,
+            ..Default::default()
+        };
         log.push(CurvePoint {
             round: 1,
             iterations: 10,
@@ -132,8 +175,22 @@ mod tests {
             metric: 0.9,
         });
         let csv = log.to_csv();
-        assert!(csv.contains("mlp,sbc,1,1,10,1234"));
-        assert_eq!(RunLog::csv_header().split(',').count(), csv.trim().split(',').count());
+        // the comma-bearing label is quoted, so the row keeps exactly as
+        // many columns as the header
+        let cols = parse_csv_row(csv.trim());
+        assert_eq!(cols.len(), RunLog::csv_header().split(',').count());
+        assert_eq!(cols[0], "mlp");
+        assert_eq!(cols[1], "SBC(p=0.001,n=1)");
+        assert_eq!(&cols[2..6], ["1", "1", "10", "1234"]);
+        assert_eq!(cols[6], "0.500000");
+    }
+
+    #[test]
+    fn csv_field_quotes_per_rfc4180() {
+        assert_eq!(csv_field("plain"), "plain");
+        assert_eq!(csv_field("a,b"), "\"a,b\"");
+        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_field("two\nlines"), "\"two\nlines\"");
     }
 
     #[test]

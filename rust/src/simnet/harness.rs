@@ -160,7 +160,8 @@ where
         sim.up_link,
         sim.down_link,
         cfg.transport.read_timeout,
-    );
+    )
+    .with_trace(cfg.trace.clone());
 
     let (layout, initial) = {
         let mut probe = make_backend(0);

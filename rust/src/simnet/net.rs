@@ -31,6 +31,7 @@ use crate::simnet::clock::{Clock, SimClock};
 use crate::simnet::fault::{
     jitter_rng, AppliedFault, Dir, FaultAction, FaultPlan, FrameCtx, PlanCounters, SimProfile,
 };
+use crate::trace::{Event, Trace};
 use crate::transport::frame::{read_frame, write_frame, FrameBuf};
 use crate::transport::{Acceptor, Connector, Transport, TransportError};
 
@@ -96,6 +97,7 @@ struct NetInner {
     up_link: Link,
     down_link: Link,
     read_timeout: Duration,
+    trace: Trace,
     state: Mutex<NetState>,
 }
 
@@ -129,6 +131,7 @@ impl SimNet {
                 up_link,
                 down_link,
                 read_timeout,
+                trace: Trace::disabled(),
                 state: Mutex::new(NetState {
                     counters,
                     pending: VecDeque::new(),
@@ -138,6 +141,17 @@ impl SimNet {
                 }),
             }),
         }
+    }
+
+    /// Attach a structured-event sink: every fault-injection decision
+    /// then emits an [`Event::Fault`] annotated with its replay-stable
+    /// `(seed, client, attempt, seq, dir)` RNG key, timestamped on the
+    /// fabric's virtual clock. Must be called before the fabric is
+    /// cloned or shared.
+    pub fn with_trace(mut self, trace: Trace) -> SimNet {
+        Arc::get_mut(&mut self.inner).expect("with_trace before sharing the fabric").trace =
+            trace;
+        self
     }
 
     /// The connector for client `client` — each [`Connector::connect`] is
@@ -315,6 +329,17 @@ impl Transport for SimConn {
             }
             fault
         };
+        if let Some(action) = fault {
+            let net = &*self.net;
+            net.trace.emit(&net.clock, || Event::Fault {
+                seed: net.seed,
+                client: ctx.client,
+                attempt: ctx.attempt,
+                seq: ctx.seq,
+                dir: ctx.dir.to_string(),
+                action: action.to_string(),
+            });
+        }
 
         let link = match self.dir {
             Dir::Up => &self.net.up_link,

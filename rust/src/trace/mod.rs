@@ -1,0 +1,816 @@
+//! Structured-event observability for the federation stack.
+//!
+//! The repo's accounting ([`crate::codec::accounting::CommStats`],
+//! [`crate::netsim::NetSim`], [`crate::metrics::RunLog`]) answers "what
+//! did the run cost" only *after* it finishes. This module answers "what
+//! is the run doing" *while* it runs: a lightweight, std-only
+//! structured-event subsystem threaded through the coordinator round
+//! loop, the compression pipeline's stage boundaries, the federation
+//! transport (`transport::{session,server}`), and the deterministic
+//! simulator (`simnet`).
+//!
+//! The pieces:
+//!
+//! - [`Event`] — the closed event taxonomy (round lifecycle, per-stage
+//!   timings, frame byte counts, connect/retry, fault injections keyed
+//!   by their replay-stable RNG key).
+//! - [`Recorder`] — the sink trait. [`NullRecorder`] (the default) is a
+//!   compiled-out no-op; [`JsonlRecorder`] appends one JSON line per
+//!   event; [`RingRecorder`] keeps the last N events in memory for tests
+//!   and programmatic inspection.
+//! - [`Trace`] — the cheap cloneable handle call sites hold
+//!   ([`crate::coordinator::trainer::TrainConfig::trace`]). Its
+//!   [`Trace::emit`] stamps each event with a monotonic timestamp from
+//!   the caller's [`Clock`], so the same recorder works under
+//!   [`crate::simnet::RealClock`] and [`crate::simnet::SimClock`].
+//! - [`StageProfile`] — p50/p95/max aggregation of [`Event::Stage`]
+//!   timings, exposed on
+//!   [`crate::coordinator::trainer::TrainResult::stage_profile`] and
+//!   rendered as a table at end of run (`sbc-train --trace`).
+//!
+//! # Determinism invariant
+//!
+//! Tracing is **provably inert**: weight digests are bit-identical with
+//! tracing on or off at any `parallelism`, and with the default
+//! [`NullRecorder`] every call site reduces to one branch on
+//! [`Recorder::enabled`] — no event is constructed, no clock is read, no
+//! allocation happens (pinned by the alloc counters in
+//! `benches/hotpath.rs` and by `rust/tests/trace.rs`). Events produced
+//! by pool workers are buffered per client and funneled back in
+//! client-index order, so a traced pooled run emits the same
+//! client-major event order as a serial run.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::sync::{Arc, Mutex};
+
+use crate::simnet::clock::Clock;
+
+/// Sentinel client id for server-side (non-per-client) [`Event::Stage`]
+/// observations.
+pub const SERVER: u32 = u32::MAX;
+
+/// One structured observation from the training/federation stack.
+///
+/// String fields use a small closed vocabulary (stage names match the
+/// `util::timer` span names; `dir` is `"up"`/`"down"`; `role` is
+/// `"server"` or `"client"`) but are carried as `String` so traces
+/// round-trip through [`Event::from_jsonl`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// A communication round began on the aggregating side.
+    RoundStart {
+        /// Round index.
+        round: u32,
+    },
+    /// A named stage of the round completed.
+    Stage {
+        /// Round index.
+        round: u32,
+        /// Client the stage ran for, or [`SERVER`] for server-side
+        /// stages (aggregate, encode_down, evaluate).
+        client: u32,
+        /// Stage name — same vocabulary as the `util::timer` spans
+        /// (`local_steps`, `compress`, `select`, `quantize`, `encode`,
+        /// `decode`, `densify`, `aggregate`, `encode_down`, `evaluate`).
+        stage: String,
+        /// Stage duration in nanoseconds.
+        nanos: u64,
+    },
+    /// A framed message was accounted, with its exact wire bit counts.
+    ///
+    /// Emitted once per *accepted* message (retries emit [`Event::Retry`]
+    /// instead), on the side named by `role` — so summing the events of
+    /// one role reconciles exactly with that side's
+    /// [`CommStats`](crate::codec::accounting::CommStats) /
+    /// [`NetSim`](crate::netsim::NetSim) totals.
+    Frame {
+        /// Which side accounted the frame: `"server"` (the coordinator /
+        /// federated server) or `"client"` (a transport session).
+        role: String,
+        /// Direction over the wire: `"up"` (client→server) or `"down"`.
+        dir: String,
+        /// Frame kind label: `"update"`, `"broadcast"`, `"hello"`,
+        /// `"helloack"`, `"done"`.
+        kind: String,
+        /// Client the frame belongs to.
+        client: u32,
+        /// Round the frame belongs to.
+        round: u32,
+        /// Exact payload bits (the compressed message).
+        payload_bits: u64,
+        /// Framing overhead bits for this payload
+        /// ([`crate::transport::frame::overhead_bits`]).
+        overhead_bits: u64,
+    },
+    /// A transport session completed its connect + handshake.
+    Connect {
+        /// Client id.
+        client: u32,
+        /// Connection attempt index (0 = first connect).
+        attempt: u32,
+    },
+    /// A retryable transport error scheduled a reconnect backoff.
+    Retry {
+        /// Client id.
+        client: u32,
+        /// Attempt that failed (0-based).
+        attempt: u32,
+        /// Backoff that will be slept before the next attempt, ns.
+        backoff_ns: u64,
+        /// Display of the retryable error.
+        error: String,
+    },
+    /// Round finished on the aggregating side: aggregate applied,
+    /// broadcast encoded.
+    RoundEnd {
+        /// Round index.
+        round: u32,
+        /// Mean train loss across clients this round.
+        train_loss: f32,
+        /// Total upstream payload bits this round (all clients).
+        up_bits: u64,
+        /// Broadcast payload bits this round.
+        down_bits: u64,
+    },
+    /// An evaluation point.
+    Eval {
+        /// Round index.
+        round: u32,
+        /// Held-out loss.
+        loss: f32,
+        /// Task metric (accuracy or perplexity).
+        metric: f32,
+    },
+    /// A seeded fault-injection decision in the deterministic simulator,
+    /// annotated with the full RNG key `(seed, client, attempt, seq,
+    /// dir)` that makes it replay-stable — the same key the schedule's
+    /// [`AppliedFault`](crate::simnet::fault::AppliedFault) records.
+    Fault {
+        /// Simulation seed.
+        seed: u64,
+        /// Client id (RNG key).
+        client: u32,
+        /// Connection attempt (RNG key).
+        attempt: u32,
+        /// Per-connection frame sequence number (RNG key).
+        seq: u64,
+        /// Direction: `"up"` or `"down"` (RNG key).
+        dir: String,
+        /// Display of the injected
+        /// [`FaultAction`](crate::simnet::fault::FaultAction).
+        action: String,
+    },
+}
+
+// ---------------------------------------------------------------------
+// JSONL serialization (hand-rolled: the dependency set is std-only)
+// ---------------------------------------------------------------------
+
+fn esc(s: &str, out: &mut String) {
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+}
+
+fn unesc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut it = s.chars();
+    while let Some(c) = it.next() {
+        if c == '\\' {
+            match it.next() {
+                Some('n') => out.push('\n'),
+                Some(other) => out.push(other),
+                None => {}
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Raw text of `"key":<value>` in `line`, or `None` if absent.
+fn raw_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let rest = &line[at..];
+    if let Some(stripped) = rest.strip_prefix('"') {
+        // string value: scan to the closing unescaped quote
+        let mut end = 0;
+        let bytes = stripped.as_bytes();
+        while end < bytes.len() {
+            match bytes[end] {
+                b'\\' => end += 2,
+                b'"' => return Some(&stripped[..end]),
+                _ => end += 1,
+            }
+        }
+        None
+    } else {
+        let end = rest.find([',', '}'])?;
+        Some(&rest[..end])
+    }
+}
+
+fn str_field(line: &str, key: &str) -> Option<String> {
+    raw_field(line, key).map(unesc)
+}
+
+fn u64_field(line: &str, key: &str) -> Option<u64> {
+    raw_field(line, key)?.trim().parse().ok()
+}
+
+fn u32_field(line: &str, key: &str) -> Option<u32> {
+    raw_field(line, key)?.trim().parse().ok()
+}
+
+fn f32_field(line: &str, key: &str) -> Option<f32> {
+    raw_field(line, key)?.trim().parse().ok()
+}
+
+impl Event {
+    /// Serialize as one JSON line (no trailing newline), with the event
+    /// timestamp `t_ns` as the first field. Floats use Rust's
+    /// shortest-roundtrip formatting, so [`Event::from_jsonl`] parses the
+    /// exact value back.
+    pub fn to_jsonl(&self, t_ns: u64) -> String {
+        let mut s = String::with_capacity(96);
+        let _ = write!(s, "{{\"t_ns\":{t_ns},\"ev\":");
+        match self {
+            Event::RoundStart { round } => {
+                let _ = write!(s, "\"round_start\",\"round\":{round}");
+            }
+            Event::Stage { round, client, stage, nanos } => {
+                let _ = write!(s, "\"stage\",\"round\":{round},\"client\":{client},\"stage\":\"");
+                esc(stage, &mut s);
+                let _ = write!(s, "\",\"nanos\":{nanos}");
+            }
+            Event::Frame { role, dir, kind, client, round, payload_bits, overhead_bits } => {
+                let _ = write!(s, "\"frame\",\"role\":\"");
+                esc(role, &mut s);
+                let _ = write!(s, "\",\"dir\":\"");
+                esc(dir, &mut s);
+                let _ = write!(s, "\",\"kind\":\"");
+                esc(kind, &mut s);
+                let _ = write!(
+                    s,
+                    "\",\"client\":{client},\"round\":{round},\"payload_bits\":{payload_bits},\
+                     \"overhead_bits\":{overhead_bits}"
+                );
+            }
+            Event::Connect { client, attempt } => {
+                let _ = write!(s, "\"connect\",\"client\":{client},\"attempt\":{attempt}");
+            }
+            Event::Retry { client, attempt, backoff_ns, error } => {
+                let _ = write!(
+                    s,
+                    "\"retry\",\"client\":{client},\"attempt\":{attempt},\
+                     \"backoff_ns\":{backoff_ns},\"error\":\""
+                );
+                esc(error, &mut s);
+                s.push('"');
+            }
+            Event::RoundEnd { round, train_loss, up_bits, down_bits } => {
+                let _ = write!(
+                    s,
+                    "\"round_end\",\"round\":{round},\"train_loss\":{train_loss},\
+                     \"up_bits\":{up_bits},\"down_bits\":{down_bits}"
+                );
+            }
+            Event::Eval { round, loss, metric } => {
+                let _ =
+                    write!(s, "\"eval\",\"round\":{round},\"loss\":{loss},\"metric\":{metric}");
+            }
+            Event::Fault { seed, client, attempt, seq, dir, action } => {
+                let _ = write!(
+                    s,
+                    "\"fault\",\"seed\":{seed},\"client\":{client},\"attempt\":{attempt},\
+                     \"seq\":{seq},\"dir\":\""
+                );
+                esc(dir, &mut s);
+                let _ = write!(s, "\",\"action\":\"");
+                esc(action, &mut s);
+                s.push('"');
+            }
+        }
+        s.push('}');
+        s
+    }
+
+    /// Parse one line produced by [`Event::to_jsonl`] back into
+    /// `(t_ns, Event)`. Returns `None` for malformed or unknown lines
+    /// (forward compatibility: readers skip what they don't know).
+    pub fn from_jsonl(line: &str) -> Option<(u64, Event)> {
+        let t_ns = u64_field(line, "t_ns")?;
+        let ev = match str_field(line, "ev")?.as_str() {
+            "round_start" => Event::RoundStart { round: u32_field(line, "round")? },
+            "stage" => Event::Stage {
+                round: u32_field(line, "round")?,
+                client: u32_field(line, "client")?,
+                stage: str_field(line, "stage")?,
+                nanos: u64_field(line, "nanos")?,
+            },
+            "frame" => Event::Frame {
+                role: str_field(line, "role")?,
+                dir: str_field(line, "dir")?,
+                kind: str_field(line, "kind")?,
+                client: u32_field(line, "client")?,
+                round: u32_field(line, "round")?,
+                payload_bits: u64_field(line, "payload_bits")?,
+                overhead_bits: u64_field(line, "overhead_bits")?,
+            },
+            "connect" => Event::Connect {
+                client: u32_field(line, "client")?,
+                attempt: u32_field(line, "attempt")?,
+            },
+            "retry" => Event::Retry {
+                client: u32_field(line, "client")?,
+                attempt: u32_field(line, "attempt")?,
+                backoff_ns: u64_field(line, "backoff_ns")?,
+                error: str_field(line, "error")?,
+            },
+            "round_end" => Event::RoundEnd {
+                round: u32_field(line, "round")?,
+                train_loss: f32_field(line, "train_loss")?,
+                up_bits: u64_field(line, "up_bits")?,
+                down_bits: u64_field(line, "down_bits")?,
+            },
+            "eval" => Event::Eval {
+                round: u32_field(line, "round")?,
+                loss: f32_field(line, "loss")?,
+                metric: f32_field(line, "metric")?,
+            },
+            "fault" => Event::Fault {
+                seed: u64_field(line, "seed")?,
+                client: u32_field(line, "client")?,
+                attempt: u32_field(line, "attempt")?,
+                seq: u64_field(line, "seq")?,
+                dir: str_field(line, "dir")?,
+                action: str_field(line, "action")?,
+            },
+            _ => return None,
+        };
+        Some((t_ns, ev))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Recorders
+// ---------------------------------------------------------------------
+
+/// An event sink. Implementations must be `Send + Sync`: one recorder is
+/// shared by the coordinator, its pool workers, and (in federated runs)
+/// the server plus every client session thread.
+pub trait Recorder: Send + Sync {
+    /// Whether events should be constructed at all. Call sites guard on
+    /// this *before* building an [`Event`] or reading a clock, which is
+    /// what makes the [`NullRecorder`] path allocation-free.
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    /// Record one event with its clock timestamp (nanoseconds since the
+    /// recording clock's epoch).
+    fn record(&self, t_ns: u64, event: Event);
+
+    /// Flush any buffered output (no-op for in-memory recorders).
+    fn flush(&self) {}
+}
+
+/// The default sink: records nothing. [`Recorder::enabled`] returns
+/// `false`, so guarded call sites skip event construction entirely — the
+/// hot path stays allocation-free (pinned by `benches/hotpath.rs`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullRecorder;
+
+impl Recorder for NullRecorder {
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn record(&self, _t_ns: u64, _event: Event) {}
+}
+
+/// Appends one JSON line per event to a file (see [`Event::to_jsonl`]).
+/// Writes are buffered; call [`Recorder::flush`] (or drop the recorder)
+/// before reading the file back.
+pub struct JsonlRecorder {
+    w: Mutex<std::io::BufWriter<std::fs::File>>,
+}
+
+impl JsonlRecorder {
+    /// Create (truncate) `path` and record into it.
+    pub fn create(path: &std::path::Path) -> std::io::Result<JsonlRecorder> {
+        let f = std::fs::File::create(path)?;
+        Ok(JsonlRecorder { w: Mutex::new(std::io::BufWriter::new(f)) })
+    }
+
+    /// Open `path` for appending (shared by every run in a process, e.g.
+    /// under the `SBC_TRACE=jsonl` test-suite sweep).
+    pub fn append(path: &std::path::Path) -> std::io::Result<JsonlRecorder> {
+        let f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(JsonlRecorder { w: Mutex::new(std::io::BufWriter::new(f)) })
+    }
+}
+
+impl Recorder for JsonlRecorder {
+    fn record(&self, t_ns: u64, event: Event) {
+        let line = event.to_jsonl(t_ns);
+        let mut w = self.w.lock().unwrap_or_else(|p| p.into_inner());
+        let _ = w.write_all(line.as_bytes());
+        let _ = w.write_all(b"\n");
+    }
+
+    fn flush(&self) {
+        let mut w = self.w.lock().unwrap_or_else(|p| p.into_inner());
+        let _ = w.flush();
+    }
+}
+
+impl Drop for JsonlRecorder {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+/// Keeps the most recent `cap` events in memory — the programmatic sink
+/// for tests and live inspection.
+pub struct RingRecorder {
+    cap: usize,
+    buf: Mutex<VecDeque<(u64, Event)>>,
+}
+
+impl RingRecorder {
+    /// A ring holding at most `cap` events (oldest evicted first).
+    pub fn new(cap: usize) -> RingRecorder {
+        RingRecorder { cap: cap.max(1), buf: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Snapshot of the buffered `(t_ns, event)` pairs, oldest first.
+    pub fn events(&self) -> Vec<(u64, Event)> {
+        self.buf.lock().unwrap_or_else(|p| p.into_inner()).iter().cloned().collect()
+    }
+
+    /// Number of events currently buffered.
+    pub fn len(&self) -> usize {
+        self.buf.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    /// Whether no events have been recorded (or all were evicted).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Recorder for RingRecorder {
+    fn record(&self, t_ns: u64, event: Event) {
+        let mut buf = self.buf.lock().unwrap_or_else(|p| p.into_inner());
+        if buf.len() == self.cap {
+            buf.pop_front();
+        }
+        buf.push_back((t_ns, event));
+    }
+}
+
+// ---------------------------------------------------------------------
+// The handle call sites hold
+// ---------------------------------------------------------------------
+
+/// Cheap cloneable handle to a [`Recorder`], carried by
+/// [`crate::coordinator::trainer::TrainConfig::trace`] into every layer.
+/// The default ([`Trace::disabled`]) wraps a [`NullRecorder`].
+#[derive(Clone)]
+pub struct Trace {
+    rec: Arc<dyn Recorder>,
+}
+
+impl std::fmt::Debug for Trace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Trace").field("enabled", &self.enabled()).finish()
+    }
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Trace::disabled()
+    }
+}
+
+impl Trace {
+    /// The inert default: every emit is a single `false` branch.
+    pub fn disabled() -> Trace {
+        Trace { rec: Arc::new(NullRecorder) }
+    }
+
+    /// Trace into an arbitrary recorder.
+    pub fn with(rec: Arc<dyn Recorder>) -> Trace {
+        Trace { rec }
+    }
+
+    /// Trace into a fresh JSONL file at `path` (truncating).
+    pub fn jsonl(path: &std::path::Path) -> std::io::Result<Trace> {
+        Ok(Trace { rec: Arc::new(JsonlRecorder::create(path)?) })
+    }
+
+    /// Trace into an in-memory ring of `cap` events; returns the handle
+    /// plus the recorder for later inspection.
+    pub fn ring(cap: usize) -> (Trace, Arc<RingRecorder>) {
+        let rec = Arc::new(RingRecorder::new(cap));
+        (Trace { rec: rec.clone() }, rec)
+    }
+
+    /// Build from the `SBC_TRACE` environment variable: unset/empty →
+    /// disabled; `jsonl` → append to `sbc-trace-<pid>.jsonl` in the OS
+    /// temp dir; `jsonl:<path>` → append to `<path>`. Used by
+    /// `TrainConfig::new` so a whole test-suite run can be swept under
+    /// tracing (`SBC_TRACE=jsonl cargo test`) to prove inertness.
+    /// Falls back to disabled if the file cannot be opened.
+    pub fn from_env() -> Trace {
+        let Ok(v) = std::env::var("SBC_TRACE") else { return Trace::disabled() };
+        let path = match v.as_str() {
+            "" => return Trace::disabled(),
+            "jsonl" => {
+                std::env::temp_dir().join(format!("sbc-trace-{}.jsonl", std::process::id()))
+            }
+            other => match other.strip_prefix("jsonl:") {
+                Some(p) => std::path::PathBuf::from(p),
+                None => return Trace::disabled(),
+            },
+        };
+        match JsonlRecorder::append(&path) {
+            Ok(rec) => Trace { rec: Arc::new(rec) },
+            Err(_) => Trace::disabled(),
+        }
+    }
+
+    /// Whether emits reach a real sink. Guard any non-trivial event
+    /// preparation (buffers, string building) on this.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.rec.enabled()
+    }
+
+    /// Emit an event stamped with `clock.now()`. The closure runs only
+    /// when the recorder is enabled, so disabled tracing constructs
+    /// nothing and reads no clock.
+    #[inline]
+    pub fn emit<F: FnOnce() -> Event>(&self, clock: &dyn Clock, f: F) {
+        if self.rec.enabled() {
+            self.rec.record(clock.now().as_nanos() as u64, f());
+        }
+    }
+
+    /// Emit an event with a caller-supplied timestamp (used when
+    /// funneling buffered pool-worker events in client order).
+    #[inline]
+    pub fn emit_at<F: FnOnce() -> Event>(&self, t_ns: u64, f: F) {
+        if self.rec.enabled() {
+            self.rec.record(t_ns, f());
+        }
+    }
+
+    /// Flush the underlying recorder.
+    pub fn flush(&self) {
+        self.rec.flush();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stage profiling
+// ---------------------------------------------------------------------
+
+/// Timing summary for one stage across a run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageStats {
+    /// Stage name (see [`Event::Stage`]).
+    pub stage: String,
+    /// Number of observations.
+    pub count: u64,
+    /// Median observation, nanoseconds.
+    pub p50_ns: u64,
+    /// 95th-percentile observation, nanoseconds.
+    pub p95_ns: u64,
+    /// Largest observation, nanoseconds.
+    pub max_ns: u64,
+    /// Sum of all observations, nanoseconds.
+    pub total_ns: u64,
+}
+
+/// Per-stage p50/p95/max timing profile of a traced run, aggregated from
+/// [`Event::Stage`] observations and exposed on
+/// [`crate::coordinator::trainer::TrainResult::stage_profile`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StageProfile {
+    /// Communication rounds the profile covers.
+    pub rounds: u32,
+    /// One summary per observed stage, in first-observation order.
+    pub stages: Vec<StageStats>,
+}
+
+impl StageProfile {
+    /// Render the profile with [`crate::metrics::render_table`]
+    /// (millisecond columns; `ms/round` divides by [`StageProfile::rounds`]).
+    pub fn render_table(&self) -> String {
+        let ms = |ns: u64| format!("{:.3}", ns as f64 / 1e6);
+        let rows: Vec<Vec<String>> = self
+            .stages
+            .iter()
+            .map(|s| {
+                vec![
+                    s.stage.clone(),
+                    s.count.to_string(),
+                    ms(s.p50_ns),
+                    ms(s.p95_ns),
+                    ms(s.max_ns),
+                    format!("{:.3}", s.total_ns as f64 / 1e6 / self.rounds.max(1) as f64),
+                ]
+            })
+            .collect();
+        crate::metrics::render_table(
+            &["stage", "count", "p50 ms", "p95 ms", "max ms", "ms/round"],
+            &rows,
+        )
+    }
+}
+
+/// Accumulates [`Event::Stage`] observations into a [`StageProfile`].
+#[derive(Debug, Default)]
+pub struct StageProfileBuilder {
+    order: Vec<String>,
+    samples: BTreeMap<String, Vec<u64>>,
+}
+
+impl StageProfileBuilder {
+    /// An empty builder.
+    pub fn new() -> StageProfileBuilder {
+        StageProfileBuilder::default()
+    }
+
+    /// Record one observation of `stage` taking `nanos`.
+    pub fn observe(&mut self, stage: &str, nanos: u64) {
+        if !self.samples.contains_key(stage) {
+            self.order.push(stage.to_string());
+        }
+        self.samples.entry(stage.to_string()).or_default().push(nanos);
+    }
+
+    /// Finalize into a [`StageProfile`] covering `rounds` rounds.
+    pub fn finish(self, rounds: u32) -> StageProfile {
+        let pct = |sorted: &[u64], q: usize| sorted[(sorted.len() - 1) * q / 100];
+        let stages = self
+            .order
+            .iter()
+            .map(|name| {
+                let mut xs = self.samples[name].clone();
+                xs.sort_unstable();
+                StageStats {
+                    stage: name.clone(),
+                    count: xs.len() as u64,
+                    p50_ns: pct(&xs, 50),
+                    p95_ns: pct(&xs, 95),
+                    max_ns: *xs.last().unwrap(),
+                    total_ns: xs.iter().sum(),
+                }
+            })
+            .collect();
+        StageProfile { rounds, stages }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::clock::{Clock, SimClock};
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::RoundStart { round: 3 },
+            Event::Stage { round: 3, client: 1, stage: "compress".into(), nanos: 12_345 },
+            Event::Stage { round: 3, client: SERVER, stage: "aggregate".into(), nanos: 99 },
+            Event::Frame {
+                role: "server".into(),
+                dir: "up".into(),
+                kind: "update".into(),
+                client: 2,
+                round: 3,
+                payload_bits: 12_007,
+                overhead_bits: 217,
+            },
+            Event::Connect { client: 0, attempt: 2 },
+            Event::Retry {
+                client: 1,
+                attempt: 0,
+                backoff_ns: 50_000_000,
+                error: "io: connection \"refused\"\nretrying".into(),
+            },
+            Event::RoundEnd { round: 3, train_loss: 0.125, up_bits: 48_028, down_bits: 4_096 },
+            Event::Eval { round: 3, loss: f32::NAN, metric: 0.875 },
+            Event::Fault {
+                seed: 77,
+                client: 3,
+                attempt: 1,
+                seq: 42,
+                dir: "down".into(),
+                action: "delay(700ms)".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn jsonl_roundtrips_every_variant() {
+        for (i, ev) in sample_events().into_iter().enumerate() {
+            let line = ev.to_jsonl(1_000 + i as u64);
+            let (t, back) = Event::from_jsonl(&line).unwrap_or_else(|| panic!("parse: {line}"));
+            assert_eq!(t, 1_000 + i as u64, "{line}");
+            // NaN != NaN: compare through re-serialization for the Eval case
+            assert_eq!(back.to_jsonl(t), line);
+            if !matches!(ev, Event::Eval { .. }) {
+                assert_eq!(back, ev, "{line}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_jsonl_rejects_garbage_and_unknown_events() {
+        assert!(Event::from_jsonl("").is_none());
+        assert!(Event::from_jsonl("not json at all").is_none());
+        assert!(Event::from_jsonl("{\"t_ns\":5,\"ev\":\"warp_drive\",\"round\":1}").is_none());
+        // missing required field
+        assert!(Event::from_jsonl("{\"t_ns\":5,\"ev\":\"round_start\"}").is_none());
+    }
+
+    #[test]
+    fn null_recorder_is_disabled_and_skips_event_construction() {
+        let trace = Trace::disabled();
+        assert!(!trace.enabled());
+        let clock = SimClock::new();
+        let mut built = false;
+        trace.emit(&clock, || {
+            built = true;
+            Event::RoundStart { round: 0 }
+        });
+        trace.emit_at(7, || {
+            built = true;
+            Event::RoundStart { round: 0 }
+        });
+        assert!(!built, "disabled trace must not construct events");
+    }
+
+    #[test]
+    fn ring_recorder_caps_and_orders() {
+        let (trace, ring) = Trace::ring(3);
+        assert!(trace.enabled());
+        assert!(ring.is_empty());
+        for r in 0..5u32 {
+            trace.emit_at(r as u64, || Event::RoundStart { round: r });
+        }
+        let evs = ring.events();
+        assert_eq!(ring.len(), 3);
+        assert_eq!(
+            evs,
+            vec![
+                (2, Event::RoundStart { round: 2 }),
+                (3, Event::RoundStart { round: 3 }),
+                (4, Event::RoundStart { round: 4 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn emit_stamps_clock_time() {
+        let clock = SimClock::new();
+        let _me = clock.actor();
+        clock.sleep(std::time::Duration::from_millis(5));
+        let (trace, ring) = Trace::ring(8);
+        trace.emit(&clock, || Event::RoundStart { round: 1 });
+        assert_eq!(ring.events(), vec![(5_000_000, Event::RoundStart { round: 1 })]);
+    }
+
+    #[test]
+    fn stage_profile_percentiles_and_render() {
+        let mut b = StageProfileBuilder::new();
+        for ns in 1..=100u64 {
+            b.observe("compress", ns);
+        }
+        b.observe("encode", 7);
+        let p = b.finish(10);
+        assert_eq!(p.stages.len(), 2);
+        let c = &p.stages[0];
+        assert_eq!((c.stage.as_str(), c.count), ("compress", 100));
+        assert_eq!((c.p50_ns, c.p95_ns, c.max_ns), (50, 95, 100));
+        assert_eq!(c.total_ns, 5050);
+        let e = &p.stages[1];
+        assert_eq!((e.stage.as_str(), e.count, e.max_ns), ("encode", 1, 7));
+        let table = p.render_table();
+        assert!(table.contains("compress"), "{table}");
+        assert!(table.contains("p95 ms"), "{table}");
+        assert_eq!(table.lines().count(), 4, "{table}");
+    }
+}

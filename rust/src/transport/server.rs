@@ -34,6 +34,7 @@ use crate::coordinator::trainer::TrainConfig;
 use crate::model::TensorLayout;
 use crate::netsim::NetSim;
 use crate::simnet::clock::{Clock, RealClock};
+use crate::trace::Event;
 use crate::transport::frame::{
     self, encode_done, encode_error, FrameBuf, FrameKind, Hello, HelloAck,
 };
@@ -205,6 +206,7 @@ impl FederatedServer {
 
         for round in 0..rounds {
             shared.round.store(round as u32, Ordering::SeqCst);
+            cfg.trace.emit(clock, || Event::RoundStart { round: round as u32 });
 
             // collect one update per client for this round
             let mut have = 0usize;
@@ -259,6 +261,19 @@ impl FederatedServer {
                 comm.record_message(pkt.bits, nnz as u64);
                 comm.record_frame_overhead(frame::overhead_bits(pkt.bits));
                 round_up_bits[ci] = pkt.bits + frame::overhead_bits(pkt.bits);
+                // the upstream Frame event fires at exactly the accounting
+                // point, so server-role trace totals reconcile field-for-
+                // field with CommStats/NetSim
+                let (pb, ob) = (pkt.bits, frame::overhead_bits(pkt.bits));
+                cfg.trace.emit(clock, || Event::Frame {
+                    role: "server".into(),
+                    dir: "up".into(),
+                    kind: "update".into(),
+                    client: ci as u32,
+                    round: round as u32,
+                    payload_bits: pb,
+                    overhead_bits: ob,
+                });
                 decoded[ci].densify_into(&self.layout, gran, sign_scale, &mut denses[ci]);
                 if majority_vote {
                     for v in denses[ci].iter_mut() {
@@ -278,6 +293,20 @@ impl FederatedServer {
             tensor::add_assign(&mut master, &delta_rx);
             comm.record_frame_overhead(frame::overhead_bits(bits) * nclients as u64);
             net.round(&round_up_bits, bits + frame::overhead_bits(bits));
+            if cfg.trace.enabled() {
+                let oh = frame::overhead_bits(bits);
+                for ci in 0..nclients {
+                    cfg.trace.emit(clock, || Event::Frame {
+                        role: "server".into(),
+                        dir: "down".into(),
+                        kind: "broadcast".into(),
+                        client: ci as u32,
+                        round: round as u32,
+                        payload_bits: bits,
+                        overhead_bits: oh,
+                    });
+                }
+            }
 
             let last = round + 1 == rounds;
             let done = if last { Some(weight_digest(&master)) } else { None };
@@ -293,6 +322,7 @@ impl FederatedServer {
         }
 
         let digest = weight_digest(&master);
+        cfg.trace.flush();
         Ok(FederatedResult { final_params: master, digest, comm, net, rounds })
     }
 }

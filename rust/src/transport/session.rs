@@ -22,6 +22,7 @@
 
 use std::sync::Arc;
 use std::thread;
+use std::time::Duration;
 
 use crate::codec::message::{self, WIRE_VERSION};
 use crate::compression::momentum_mask::mask_momentum;
@@ -31,12 +32,22 @@ use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::trainer::TrainConfig;
 use crate::coordinator::TrainBackend;
 use crate::simnet::clock::{Clock, RealClock};
-use crate::transport::frame::{decode_done, decode_error, FrameBuf, FrameKind, Hello, HelloAck};
+use crate::trace::Event;
+use crate::transport::frame::{
+    decode_done, decode_error, overhead_bits, FrameBuf, FrameKind, Hello, HelloAck,
+};
 use crate::transport::server::{FederatedResult, FederatedServer};
 use crate::transport::{
     config_digest, weight_digest, Acceptor, Connector, Transport, TransportError,
 };
 use crate::util::tensor;
+
+/// Ceiling for the exponential reconnect backoff. Without it,
+/// `retry_backoff * 2^attempt` can overflow `Duration` for large
+/// configured backoffs, which panics; the schedule saturates here
+/// instead (pinned by `huge_retry_backoff_saturates_at_cap` in
+/// `rust/tests/sim_federation.rs`).
+pub const BACKOFF_CAP: Duration = Duration::from_secs(60);
 
 /// What one client session hands back after a completed federated run.
 #[derive(Clone, Debug)]
@@ -116,6 +127,8 @@ impl<'a> Session<'a> {
             }
         }
         self.conn = Some(conn);
+        let (client, attempt) = (self.hello.client, self.retries);
+        self.cfg.trace.emit(self.clock, || Event::Connect { client, attempt });
         Ok(())
     }
 
@@ -140,7 +153,23 @@ impl<'a> Session<'a> {
                             last: Box::new(e),
                         });
                     }
-                    self.clock.sleep(self.cfg.transport.retry_backoff * (1 << attempt.min(16)));
+                    // checked: `retry_backoff << attempt` overflows
+                    // Duration for large configured backoffs
+                    let backoff = self
+                        .cfg
+                        .transport
+                        .retry_backoff
+                        .checked_mul(1 << attempt.min(16))
+                        .map(|d| d.min(BACKOFF_CAP))
+                        .unwrap_or(BACKOFF_CAP);
+                    let client = self.hello.client;
+                    self.cfg.trace.emit(self.clock, || Event::Retry {
+                        client,
+                        attempt,
+                        backoff_ns: backoff.as_nanos() as u64,
+                        error: e.to_string(),
+                    });
+                    self.clock.sleep(backoff);
                     attempt += 1;
                 }
                 Err(e) => return Err(e),
@@ -259,6 +288,28 @@ pub fn run_client_with_clock<B: TrainBackend>(
         c.up_bits += bits;
 
         session.exchange(&update, &mut reply)?;
+
+        // one Frame event per *accepted* exchange (retries surface as
+        // Event::Retry), so client-role totals reconcile with CommStats
+        cfg.trace.emit(clock, || Event::Frame {
+            role: "client".into(),
+            dir: "up".into(),
+            kind: "update".into(),
+            client: id as u32,
+            round: round as u32,
+            payload_bits: bits,
+            overhead_bits: overhead_bits(bits),
+        });
+        let down_bits = reply.payload_bits as u64;
+        cfg.trace.emit(clock, || Event::Frame {
+            role: "client".into(),
+            dir: "down".into(),
+            kind: "broadcast".into(),
+            client: id as u32,
+            round: round as u32,
+            payload_bits: down_bits,
+            overhead_bits: overhead_bits(down_bits),
+        });
 
         // client-side bookkeeping against its own decoded bytes — the
         // residual and momentum mask see exactly what the server decoded

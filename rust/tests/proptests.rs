@@ -308,6 +308,48 @@ fn paper_presets() -> [MethodConfig; 8] {
 }
 
 #[test]
+fn prop_nan_inf_gradients_never_panic_and_stay_deterministic() {
+    // bugfix regression: the magnitude sorts used partial_cmp().unwrap(),
+    // which panicked on NaN gradients (and NaN ordering made selection
+    // nondeterministic). With total_cmp, NaN has a fixed sort position:
+    // poisoned inputs must compress without panicking, bit-identically
+    // across same-seed pipelines, and survive the full wire round trip,
+    // for every paper preset.
+    forall(12, |rng, seed| {
+        let n = 500 + rng.below(3_000);
+        let layout =
+            TensorLayout::new(vec![("a".into(), vec![n / 3]), ("b".into(), vec![n - n / 3])]);
+        let mut delta = random_delta(rng, layout.total);
+        let poison = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY];
+        for _ in 0..1 + layout.total / 20 {
+            let at = rng.below(layout.total);
+            delta[at] = poison[rng.below(3)];
+        }
+        for cfg in paper_presets() {
+            let mut a = cfg.build(seed);
+            let mut b = cfg.build(seed);
+            let msg_a = a.compress(&delta, &layout, 0);
+            let msg_b = b.compress(&delta, &layout, 0);
+            let mut wire = WireCodec::new(PosCodec::Golomb);
+            let (bytes_a, bits_a) = wire.encode(&msg_a);
+            let bytes_a = bytes_a.to_vec();
+            let (bytes_b, bits_b) = wire.encode(&msg_b);
+            // byte-level comparison sidesteps NaN != NaN
+            assert_eq!(
+                (&bytes_a[..], bits_a),
+                (bytes_b, bits_b),
+                "seed {seed} {}: same-seed pipelines diverged on poisoned input",
+                a.name()
+            );
+            let decoded = sbc::codec::message::decode(&bytes_a, bits_a)
+                .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", a.name()));
+            let mut dense = vec![0.0f32; layout.total];
+            decoded.densify_into(&layout, cfg.granularity, cfg.sign_scale(), &mut dense);
+        }
+    });
+}
+
+#[test]
 fn prop_sharded_aggregate_bit_identical_to_serial() {
     // the tentpole determinism invariant: sharded parallel aggregation
     // equals the serial fold bit-for-bit across thread counts, client

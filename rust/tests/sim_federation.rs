@@ -27,7 +27,7 @@ use sbc::simnet::{
     SimConfig, SimProfile, Verdict, When,
 };
 use sbc::transport::frame::FrameKind;
-use sbc::transport::session::run_client_with_clock;
+use sbc::transport::session::{run_client_with_clock, BACKOFF_CAP};
 use sbc::transport::{Connector, Transport, TransportError};
 
 fn backend() -> NativeMlpBackend {
@@ -260,4 +260,28 @@ fn retry_backoff_follows_exact_virtual_schedule() {
     let times = connector.attempts.lock().unwrap().clone();
     assert_eq!(times, vec![Duration::ZERO, b, 3 * b, 7 * b]);
     assert_eq!(clock.now(), 7 * b, "failure must land at b·(2^max_retries − 1)");
+}
+
+/// A huge configured backoff must not overflow `Duration` (which would
+/// panic mid-retry): every retry's wait saturates at [`BACKOFF_CAP`], so
+/// connection attempts land at exact multiples of the cap.
+#[test]
+fn huge_retry_backoff_saturates_at_cap() {
+    let mut cfg = sim_train_cfg(10);
+    cfg.transport.retry_backoff = Duration::MAX;
+    cfg.transport.max_retries = 3;
+
+    let clock = SimClock::new();
+    let _actor = clock.actor();
+    let connector = RecordingConnector { clock: clock.clone(), attempts: Mutex::new(Vec::new()) };
+    let err = run_client_with_clock(&cfg, 0, &connector, &mut backend(), &clock)
+        .expect_err("no server to reach");
+    assert!(
+        matches!(err, TransportError::RetriesExhausted { attempts: 4, .. }),
+        "expected RetriesExhausted after 4 attempts, got {err}"
+    );
+
+    let times = connector.attempts.lock().unwrap().clone();
+    assert_eq!(times, vec![Duration::ZERO, BACKOFF_CAP, 2 * BACKOFF_CAP, 3 * BACKOFF_CAP]);
+    assert_eq!(clock.now(), 3 * BACKOFF_CAP, "every retry must wait exactly the cap");
 }

@@ -1,0 +1,234 @@
+//! Integration tests for the structured-event trace subsystem
+//! (`rust/src/trace`): tracing must be provably inert (bit-identical
+//! digests with tracing on or off, at any parallelism), its Frame events
+//! must reconcile field-for-field with `CommStats`/`NetSim` accounting,
+//! the JSONL file format must round-trip, and under the deterministic
+//! simulator every applied fault must surface as a `Fault` event
+//! annotated with its replay-stable `(seed, client, attempt, seq, dir)`
+//! RNG key.
+
+use std::time::Duration;
+
+use sbc::codec::accounting::CommStats;
+use sbc::compression::registry::MethodConfig;
+use sbc::coordinator::trainer::{TrainConfig, TrainResult, Trainer};
+use sbc::coordinator::schedule::LrSchedule;
+use sbc::netsim::NetSim;
+use sbc::sgd::NativeMlpBackend;
+use sbc::simnet::{run_schedule, SimConfig, SimProfile};
+use sbc::trace::{Event, Trace};
+
+fn backend() -> NativeMlpBackend {
+    NativeMlpBackend::digits_small(4, 1)
+}
+
+/// A small training config with tracing explicitly disabled (so an
+/// ambient `SBC_TRACE` sweep cannot leak into these tests' sinks).
+fn train_cfg(iterations: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new(
+        "mlp-small",
+        MethodConfig::sbc2(),
+        iterations,
+        LrSchedule::constant(0.1),
+    );
+    cfg.eval_every_rounds = 5;
+    cfg.eval_batches = 2;
+    cfg.parallelism = 1;
+    cfg.trace = Trace::disabled();
+    cfg
+}
+
+fn run(cfg: &TrainConfig) -> TrainResult {
+    let mut be = backend();
+    Trainer::new(&mut be, cfg.clone()).run()
+}
+
+/// The reconciliation identity pinned by ISSUE acceptance: summing the
+/// server-role Frame events reproduces `CommStats` (payload and framing
+/// bits) and every client's `NetSim` link totals exactly.
+fn check_frame_reconciliation(
+    events: &[Event],
+    comm: &CommStats,
+    net: &NetSim,
+    nclients: usize,
+) {
+    let mut up_payload = 0u64;
+    let mut overhead = 0u64;
+    let mut per_client_up = vec![0u64; nclients];
+    let mut per_client_down = vec![0u64; nclients];
+    for e in events {
+        if let Event::Frame { role, dir, client, payload_bits, overhead_bits, .. } = e {
+            if role != "server" {
+                continue;
+            }
+            match dir.as_str() {
+                "up" => {
+                    up_payload += payload_bits;
+                    overhead += overhead_bits;
+                    per_client_up[*client as usize] += payload_bits + overhead_bits;
+                }
+                "down" => {
+                    overhead += overhead_bits;
+                    per_client_down[*client as usize] += payload_bits + overhead_bits;
+                }
+                other => panic!("unexpected frame dir {other:?}"),
+            }
+        }
+    }
+    assert_eq!(up_payload, comm.upstream_bits, "up-frame payload sum vs CommStats");
+    assert_eq!(overhead, comm.frame_overhead_bits, "frame overhead sum vs CommStats");
+    assert_eq!(net.clients.len(), nclients);
+    for (i, c) in net.clients.iter().enumerate() {
+        assert_eq!(per_client_up[i], c.up_bits, "client {i} uplink vs NetSim");
+        assert_eq!(per_client_down[i], c.down_bits, "client {i} downlink vs NetSim");
+    }
+}
+
+/// The determinism invariant: a traced run (RingRecorder) produces
+/// bit-identical weights and accounting to an untraced run, under both
+/// the serial and the pooled round loop — and only the traced run
+/// carries a stage profile covering every hot-path stage.
+#[test]
+fn tracing_never_changes_results() {
+    for par in [1usize, 8] {
+        let mut plain_cfg = train_cfg(30);
+        plain_cfg.parallelism = par;
+        let plain = run(&plain_cfg);
+        assert!(plain.stage_profile.is_none(), "untraced run must not profile");
+
+        let (trace, ring) = Trace::ring(1_000_000);
+        let mut traced_cfg = plain_cfg.clone();
+        traced_cfg.trace = trace;
+        let traced = run(&traced_cfg);
+
+        let a: Vec<u32> = plain.final_params.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = traced.final_params.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "weights must be bit-identical (parallelism={par})");
+        assert_eq!(plain.comm.upstream_bits, traced.comm.upstream_bits);
+        assert_eq!(plain.comm.frame_overhead_bits, traced.comm.frame_overhead_bits);
+        assert_eq!(plain.net.total_up_bits(), traced.net.total_up_bits());
+
+        assert!(!ring.is_empty(), "traced run must record events");
+        let profile = traced.stage_profile.expect("traced run must profile");
+        assert!(profile.rounds > 0);
+        let names: Vec<&str> = profile.stages.iter().map(|s| s.stage.as_str()).collect();
+        for want in [
+            "local_steps",
+            "compress",
+            "select",
+            "quantize",
+            "encode",
+            "decode",
+            "densify",
+            "aggregate",
+            "encode_down",
+            "evaluate",
+        ] {
+            assert!(names.contains(&want), "missing stage {want} in {names:?}");
+        }
+        assert!(profile.render_table().contains("ms/round"));
+    }
+}
+
+/// Trainer-emitted Frame events reconcile with `CommStats`/`NetSim`, and
+/// the round structure is well-formed (one RoundStart/RoundEnd pair per
+/// round, evals present).
+#[test]
+fn trainer_trace_reconciles_with_accounting() {
+    let (trace, ring) = Trace::ring(1_000_000);
+    let mut cfg = train_cfg(30);
+    cfg.trace = trace;
+    let r = run(&cfg);
+
+    let events: Vec<Event> = ring.events().into_iter().map(|(_, e)| e).collect();
+    let starts = events.iter().filter(|e| matches!(e, Event::RoundStart { .. })).count();
+    let ends = events.iter().filter(|e| matches!(e, Event::RoundEnd { .. })).count();
+    assert!(starts > 0 && starts == ends, "round events: {starts} starts, {ends} ends");
+    assert!(events.iter().any(|e| matches!(e, Event::Eval { .. })));
+    check_frame_reconciliation(&events, &r.comm, &r.net, cfg.clients);
+}
+
+/// The JSONL sink: every line a traced run writes parses back through
+/// `Event::from_jsonl` with monotonically plausible timestamps, and the
+/// parsed events satisfy the same reconciliation identity.
+#[test]
+fn jsonl_file_roundtrips_and_reconciles() {
+    let path = std::env::temp_dir().join(format!("sbc-trace-test-{}.jsonl", std::process::id()));
+    let mut cfg = train_cfg(20);
+    cfg.trace = Trace::jsonl(&path).expect("create trace file");
+    let r = run(&cfg);
+
+    let text = std::fs::read_to_string(&path).expect("trace file readable");
+    let _ = std::fs::remove_file(&path);
+    let mut events = Vec::new();
+    for line in text.lines() {
+        let (_t, e) = Event::from_jsonl(line)
+            .unwrap_or_else(|| panic!("unparseable trace line: {line}"));
+        events.push(e);
+    }
+    assert!(!events.is_empty(), "traced run must write events");
+    assert!(events.iter().any(|e| matches!(e, Event::RoundStart { .. })));
+    assert!(events.iter().any(|e| matches!(e, Event::Stage { .. })));
+    check_frame_reconciliation(&events, &r.comm, &r.net, cfg.clients);
+}
+
+/// Under the deterministic simulator with the harsh fault profile, every
+/// fault the fabric applies must surface as exactly one `Fault` event
+/// carrying its replay-stable RNG key — and for completed schedules the
+/// server-role Frame events reconcile with the federated accounting.
+#[test]
+fn sim_fault_events_match_schedule_and_frames_reconcile() {
+    let mut base = train_cfg(30);
+    base.transport.retry_backoff = Duration::from_millis(2);
+    base.transport.read_timeout = Duration::from_millis(300);
+    base.transport.round_timeout = Duration::from_millis(600);
+
+    let mut completed = 0u64;
+    let mut total_faults = 0usize;
+    for i in 0..20u64 {
+        let seed = 1 + i;
+        let (trace, ring) = Trace::ring(1_000_000);
+        let mut cfg = base.clone();
+        cfg.trace = trace;
+        let mut sim = SimConfig::new(seed);
+        sim.profile = SimProfile::harsh();
+        let run = run_schedule(&cfg, &sim, |_| backend());
+
+        let events: Vec<Event> = ring.events().into_iter().map(|(_, e)| e).collect();
+        let mut traced: Vec<(u32, u32, u64, String, String)> = events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Fault { seed: s, client, attempt, seq, dir, action } => {
+                    assert_eq!(*s, seed, "fault event must carry the schedule seed");
+                    Some((*client, *attempt, *seq, dir.clone(), action.clone()))
+                }
+                _ => None,
+            })
+            .collect();
+        let mut applied: Vec<(u32, u32, u64, String, String)> = run
+            .applied
+            .iter()
+            .map(|f| {
+                (
+                    f.ctx.client,
+                    f.ctx.attempt,
+                    f.ctx.seq,
+                    f.ctx.dir.to_string(),
+                    f.action.to_string(),
+                )
+            })
+            .collect();
+        traced.sort();
+        applied.sort();
+        assert_eq!(traced, applied, "seed {seed}: Fault events vs applied schedule");
+        total_faults += applied.len();
+
+        if run.completed() {
+            completed += 1;
+            let res = run.server.ok().expect("completed run has a server result");
+            check_frame_reconciliation(&events, &res.comm, &res.net, cfg.clients);
+        }
+    }
+    assert!(completed > 0, "no harsh schedule completed");
+    assert!(total_faults > 0, "harsh profile applied no faults");
+}
