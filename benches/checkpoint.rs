@@ -1,0 +1,135 @@
+//! Checkpoint snapshot I/O latency vs model size.
+//!
+//! Measures the durable-write (encode + atomic write-rename + fsync)
+//! and load (read + CRC + decode) latency of server and client
+//! snapshots across model sizes, prints a table, and emits
+//! `BENCH_checkpoint.json` at the repo root (shared schema:
+//! `sbc::metrics::bench`).
+//!
+//!     cargo bench --bench checkpoint
+
+use std::time::Instant;
+
+use sbc::metrics::bench::{BenchArtifact, BenchRow};
+use sbc::metrics::render_table;
+use sbc::persist::{CheckpointStore, ClientSnapshot, ServerSnapshot};
+use sbc::transport::weight_digest;
+
+const DIGEST: u64 = 0xbe5c_0f1e_5bc0_ffee;
+
+fn synth_weights(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i as f32) * 0.001).sin()).collect()
+}
+
+fn server_snap(n: usize, clients: usize) -> ServerSnapshot {
+    ServerSnapshot {
+        round: 7,
+        master: synth_weights(n),
+        comm: [1, 2, 3, 4, 5],
+        net_clients: (0..clients as u64).map(|c| (c, c + 1, c + 2, c + 3, c + 4)).collect(),
+        net_total_time_bits: 0f64.to_bits(),
+        ledger: vec![6; clients],
+        cache: None,
+    }
+}
+
+fn client_snap(n: usize) -> ClientSnapshot {
+    ClientSnapshot {
+        client: 0,
+        round: 7,
+        weights: synth_weights(n),
+        opt: synth_weights(n),
+        residual: synth_weights(n),
+        residual_enabled: true,
+        iterations: 70,
+        up_bits: 12_345,
+        rng: [1, 2, 3, 4],
+        selector_rng: [5, 6, 7, 8],
+        quantizer_rng: [9, 10, 11, 12],
+    }
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("sbc-bench-checkpoint-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = CheckpointStore::open(dir.clone(), 1).expect("open store");
+
+    let sizes = [1_000usize, 10_000, 100_000, 1_000_000];
+    let clients = 8;
+    let mut art = BenchArtifact::new(
+        "checkpoint",
+        format!("snapshot save/load latency, {clients} clients, sizes {sizes:?}"),
+    );
+    let mut table: Vec<Vec<String>> = Vec::new();
+
+    for &n in &sizes {
+        let reps = (2_000_000 / n).clamp(3, 200) as u32;
+        let digest = weight_digest(&synth_weights(n));
+
+        let snap = server_snap(n, clients);
+        let start = Instant::now();
+        for _ in 0..reps {
+            store.save_server(&snap, DIGEST).expect("save server snapshot");
+        }
+        let save_ns = (start.elapsed().as_nanos() / reps as u128) as u64;
+        let bits = 8 * std::fs::metadata(dir.join("server-r00000007.ckpt")).unwrap().len();
+        let start = Instant::now();
+        for _ in 0..reps {
+            let loaded = store.load_latest_server(DIGEST).expect("load").expect("snapshot");
+            assert_eq!(loaded.master.len(), n);
+        }
+        let load_ns = (start.elapsed().as_nanos() / reps as u128) as u64;
+        art.push(
+            BenchRow::new(format!("server n={n} save"), save_ns, bits, digest)
+                .field("n_params", n.to_string()),
+        );
+        art.push(
+            BenchRow::new(format!("server n={n} load"), load_ns, bits, digest)
+                .field("n_params", n.to_string()),
+        );
+        table.push(vec![
+            "server".into(),
+            format!("{n}"),
+            format!("{}", bits / 8),
+            format!("{:.3}", save_ns as f64 / 1e6),
+            format!("{:.3}", load_ns as f64 / 1e6),
+        ]);
+
+        let snap = client_snap(n);
+        let start = Instant::now();
+        for _ in 0..reps {
+            store.save_client(&snap, DIGEST).expect("save client snapshot");
+        }
+        let save_ns = (start.elapsed().as_nanos() / reps as u128) as u64;
+        let bits = 8 * std::fs::metadata(dir.join("client0000-r00000007.ckpt")).unwrap().len();
+        let start = Instant::now();
+        for _ in 0..reps {
+            let loaded = store.load_latest_client(0, DIGEST).expect("load").expect("snapshot");
+            assert_eq!(loaded.weights.len(), n);
+        }
+        let load_ns = (start.elapsed().as_nanos() / reps as u128) as u64;
+        art.push(
+            BenchRow::new(format!("client n={n} save"), save_ns, bits, digest)
+                .field("n_params", n.to_string()),
+        );
+        art.push(
+            BenchRow::new(format!("client n={n} load"), load_ns, bits, digest)
+                .field("n_params", n.to_string()),
+        );
+        table.push(vec![
+            "client".into(),
+            format!("{n}"),
+            format!("{}", bits / 8),
+            format!("{:.3}", save_ns as f64 / 1e6),
+            format!("{:.3}", load_ns as f64 / 1e6),
+        ]);
+    }
+
+    println!(
+        "{}",
+        render_table(&["role", "params", "snapshot bytes", "save ms", "load ms"], &table)
+    );
+    let path = art.write().expect("write bench artifact");
+    println!("wrote {}", path.display());
+    let _ = std::fs::remove_dir_all(&dir);
+}

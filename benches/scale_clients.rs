@@ -3,7 +3,8 @@
 //! Measures full-training wall time for 1→512 simulated clients at
 //! 1/4/8 pool workers, checks every pooled run is bit-identical to its
 //! serial twin (a digest of the final master weights), prints a table,
-//! and emits machine-readable `BENCH_scale.json`.
+//! and emits machine-readable `BENCH_scale.json` at the repo root
+//! (shared schema: `sbc::metrics::bench`).
 //!
 //!     cargo bench --bench scale_clients
 //!     SBC_SCALE_FULL=1 cargo bench --bench scale_clients   # adds 512 clients
@@ -13,12 +14,12 @@
 //! local-step-dominated, so the measured speedup tracks the physical
 //! core count on smaller machines).
 
-use std::fmt::Write as _;
 use std::time::Instant;
 
 use sbc::compression::registry::MethodConfig;
 use sbc::coordinator::schedule::LrSchedule;
 use sbc::coordinator::trainer::{TrainConfig, Trainer};
+use sbc::metrics::bench::{BenchArtifact, BenchRow};
 use sbc::metrics::render_table;
 use sbc::sgd::NativeMlpBackend;
 
@@ -42,9 +43,10 @@ struct Row {
     wall_s: f64,
     speedup: f64,
     digest: u64,
+    up_bits: u64,
 }
 
-fn run_once(clients: usize, threads: usize, iterations: usize) -> (f64, usize, u64) {
+fn run_once(clients: usize, threads: usize, iterations: usize) -> (f64, usize, u64, u64) {
     let method = MethodConfig::sbc(0.01, 5);
     let mut cfg = TrainConfig::new("digits16", method, iterations, LrSchedule::constant(0.1));
     cfg.clients = clients;
@@ -54,7 +56,12 @@ fn run_once(clients: usize, threads: usize, iterations: usize) -> (f64, usize, u
     let mut backend = NativeMlpBackend::digits_small(clients, cfg.seed);
     let start = Instant::now();
     let r = Trainer::new(&mut backend, cfg.clone()).run();
-    (start.elapsed().as_secs_f64(), cfg.iterations / cfg.method.delay, digest(&r.final_params))
+    (
+        start.elapsed().as_secs_f64(),
+        cfg.iterations / cfg.method.delay,
+        digest(&r.final_params),
+        r.comm.upstream_bits,
+    )
 }
 
 fn main() {
@@ -71,7 +78,7 @@ fn main() {
         let mut serial_wall = 0.0f64;
         let mut serial_digest = 0u64;
         for &threads in &thread_counts {
-            let (wall_s, rounds, d) = run_once(clients, threads, iterations);
+            let (wall_s, rounds, d, up_bits) = run_once(clients, threads, iterations);
             if threads == 1 {
                 serial_wall = wall_s;
                 serial_digest = d;
@@ -88,6 +95,7 @@ fn main() {
                 wall_s,
                 speedup: serial_wall / wall_s.max(1e-12),
                 digest: d,
+                up_bits,
             });
             eprintln!(
                 "clients {clients:4}  threads {threads}  wall {wall_s:8.3}s  x{:.2}",
@@ -118,22 +126,24 @@ fn main() {
     );
     println!("(digest column: identical per clients row == pooled rounds are bit-identical)");
 
-    let mut json = String::from("{\n  \"bench\": \"scale_clients\",\n  \"results\": [\n");
-    for (i, r) in rows.iter().enumerate() {
-        let _ = write!(
-            json,
-            "    {{\"clients\": {}, \"threads\": {}, \"rounds\": {}, \"wall_s\": {:.6}, \
-             \"speedup_vs_serial\": {:.4}, \"weights_digest\": \"{:016x}\"}}{}\n",
-            r.clients,
-            r.threads,
-            r.rounds,
-            r.wall_s,
-            r.speedup,
-            r.digest,
-            if i + 1 == rows.len() { "" } else { "," }
+    let mut art = BenchArtifact::new(
+        "scale",
+        format!("sbc(p=0.01,n=5), {iterations} iterations, clients x threads sweep"),
+    );
+    for r in &rows {
+        art.push(
+            BenchRow::new(
+                format!("{} clients / {} threads", r.clients, r.threads),
+                (r.wall_s * 1e9) as u64,
+                r.up_bits,
+                r.digest,
+            )
+            .field("clients", r.clients.to_string())
+            .field("threads", r.threads.to_string())
+            .field("rounds", r.rounds.to_string())
+            .field("speedup_vs_serial", format!("{:.4}", r.speedup)),
         );
     }
-    json.push_str("  ]\n}\n");
-    std::fs::write("BENCH_scale.json", &json).expect("write BENCH_scale.json");
-    println!("wrote BENCH_scale.json ({} configs)", rows.len());
+    let path = art.write().expect("write bench artifact");
+    println!("wrote {} ({} configs)", path.display(), rows.len());
 }

@@ -44,6 +44,17 @@ impl Pipeline {
         &self.quantizer
     }
 
+    /// Both stage RNG cursors `(selector, quantizer)`, for checkpointing.
+    pub fn rng_states(&self) -> ([u64; 4], [u64; 4]) {
+        (self.selector.rng_state(), self.quantizer.rng_state())
+    }
+
+    /// Restore the stage RNG cursors captured by [`Pipeline::rng_states`].
+    pub fn restore_rng_states(&mut self, selector: [u64; 4], quantizer: [u64; 4]) {
+        self.selector.restore_rng_state(selector);
+        self.quantizer.restore_rng_state(quantizer);
+    }
+
     /// Short method name derived from the stage composition (labels,
     /// logs; the human-facing label lives on `MethodConfig`).
     pub fn name(&self) -> &'static str {

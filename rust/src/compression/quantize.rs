@@ -66,6 +66,17 @@ impl Quantizer {
         self.cfg
     }
 
+    /// The RNG cursor (for checkpointing; only the stochastic quantizers
+    /// draw from it, but capturing it is always safe).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Restore the RNG cursor captured by [`Quantizer::rng_state`].
+    pub fn restore_rng_state(&mut self, s: [u64; 4]) {
+        self.rng = Rng::from_state(s);
+    }
+
     /// Quantize segment `x` with the selector's support into `out`,
     /// reusing `out`'s buffers where the variant matches.
     pub fn quantize(&mut self, x: &[f32], support: Support, idx: &[u32], out: &mut TensorUpdate) {

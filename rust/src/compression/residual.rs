@@ -50,6 +50,13 @@ impl Residual {
     pub fn as_slice(&self) -> &[f32] {
         &self.r
     }
+
+    /// Overwrite the residual vector from a checkpoint. The length must
+    /// match the vector this residual was created over.
+    pub fn restore(&mut self, r: &[f32]) {
+        assert_eq!(r.len(), self.r.len(), "residual length mismatch on restore");
+        self.r.copy_from_slice(r);
+    }
 }
 
 #[cfg(test)]

@@ -83,6 +83,17 @@ impl Selector {
         self.cfg
     }
 
+    /// The RNG cursor (for checkpointing; only the sampled strategy
+    /// draws from it, but capturing it is always safe).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Restore the RNG cursor captured by [`Selector::rng_state`].
+    pub fn restore_rng_state(&mut self, s: [u64; 4]) {
+        self.rng = Rng::from_state(s);
+    }
+
     /// Select surviving positions of segment `x` into `idx` (cleared
     /// first; left empty for [`Support::All`]).
     pub fn select(&mut self, x: &[f32], idx: &mut Vec<u32>) -> Support {

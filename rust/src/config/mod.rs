@@ -119,6 +119,10 @@ pub fn train_config_from_doc(doc: &Doc) -> Result<TrainConfig> {
     t.max_retries = doc.i64_or("transport.max_retries", t.max_retries as i64).max(0) as u32;
     t.retry_backoff = ms(doc.i64_or("transport.retry_backoff_ms", ms_i64(t.retry_backoff)));
     t.round_timeout = ms(doc.i64_or("transport.round_timeout_ms", ms_i64(t.round_timeout)));
+    let ck = &mut cfg.checkpoint;
+    ck.dir = doc.get("checkpoint.dir").and_then(Value::as_str).map(str::to_string);
+    ck.every_rounds = doc.i64_or("checkpoint.every_rounds", ck.every_rounds as i64).max(1) as usize;
+    ck.keep = doc.i64_or("checkpoint.keep", ck.keep as i64).max(0) as usize;
     Ok(cfg)
 }
 
@@ -301,6 +305,29 @@ mod tests {
         // absent section keeps the defaults
         let plain = trace_settings_from_doc(&Doc::parse("model = \"lenet\"").unwrap());
         assert_eq!(plain, TraceSettings::default());
+    }
+
+    #[test]
+    fn checkpoint_keys() {
+        use crate::coordinator::trainer::CheckpointCfg;
+        let doc = Doc::parse(
+            r#"
+            model = "lenet"
+            [checkpoint]
+            dir = "ckpts"
+            every_rounds = 5
+            keep = 3
+            "#,
+        )
+        .unwrap();
+        let cfg = train_config_from_doc(&doc).unwrap();
+        assert_eq!(
+            cfg.checkpoint,
+            CheckpointCfg { dir: Some("ckpts".into()), every_rounds: 5, keep: 3, resume: false }
+        );
+        // absent section keeps the defaults (checkpointing disabled)
+        let plain = train_config_from_doc(&Doc::parse("model = \"lenet\"").unwrap()).unwrap();
+        assert_eq!(plain.checkpoint, CheckpointCfg::default());
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::codec::message::{PosCodec, WireCodec};
 use crate::compression::residual::Residual;
 use crate::compression::{Pipeline, UpdateMsg};
 use crate::coordinator::trainer::TrainConfig;
+use crate::persist::ClientSnapshot;
 use crate::util::rng::Rng;
 
 /// All state one simulated client owns across a training run.
@@ -107,6 +108,42 @@ impl ClientState {
             &root,
         )
     }
+
+    /// Capture everything convergence-relevant into a checkpoint payload:
+    /// optimizer moments, the error-feedback residual, the iteration
+    /// counter and all three RNG cursors. `round` is the next round this
+    /// state will run; `weights` is the session's local model copy (empty
+    /// in the in-process trainer, which shares one master vector).
+    pub fn snapshot(&self, round: u32, weights: &[f32]) -> ClientSnapshot {
+        let (selector_rng, quantizer_rng) = self.pipeline.rng_states();
+        ClientSnapshot {
+            client: self.id as u32,
+            round,
+            weights: weights.to_vec(),
+            opt: self.opt.clone(),
+            residual: self.residual.as_slice().to_vec(),
+            residual_enabled: self.residual.enabled(),
+            iterations: self.iterations as u64,
+            up_bits: self.up_bits,
+            rng: self.rng.state(),
+            selector_rng,
+            quantizer_rng,
+        }
+    }
+
+    /// Restore the state captured by [`ClientState::snapshot`]. The
+    /// snapshot must come from the same `(config, client id)` — the
+    /// store's digest check enforces that before this runs.
+    pub fn restore(&mut self, snap: &ClientSnapshot) {
+        assert_eq!(snap.client as usize, self.id, "client id mismatch on restore");
+        assert_eq!(snap.opt.len(), self.opt.len(), "optimizer size mismatch on restore");
+        self.opt.copy_from_slice(&snap.opt);
+        self.residual.restore(&snap.residual);
+        self.iterations = snap.iterations as usize;
+        self.up_bits = snap.up_bits;
+        self.rng = Rng::from_state(snap.rng);
+        self.pipeline.restore_rng_states(snap.selector_rng, snap.quantizer_rng);
+    }
 }
 
 #[cfg(test)]
@@ -135,6 +172,24 @@ mod tests {
         let mut a = ClientState::new(0, 4, 1, false, cfg.build(0), PosCodec::Golomb, &root);
         let mut b = ClientState::new(1, 4, 1, false, cfg.build(0), PosCodec::Golomb, &root);
         assert_ne!(a.rng.next_u64(), b.rng.next_u64());
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let root = Rng::new(1);
+        let cfg = MethodConfig::sbc(0.1, 4);
+        let mut c = ClientState::new(2, 32, 32, true, cfg.build(7), PosCodec::Golomb, &root);
+        c.iterations = 12;
+        c.up_bits = 777;
+        c.rng.next_u64();
+        let snap = c.snapshot(3, &[]);
+        let mut fresh = ClientState::new(2, 32, 32, true, cfg.build(7), PosCodec::Golomb, &root);
+        fresh.restore(&snap);
+        assert_eq!(fresh.iterations, 12);
+        assert_eq!(fresh.up_bits, 777);
+        assert_eq!(fresh.rng.state(), c.rng.state());
+        assert_eq!(fresh.pipeline.rng_states(), c.pipeline.rng_states());
+        assert_eq!(fresh.snapshot(3, &[]), snap);
     }
 
     #[test]

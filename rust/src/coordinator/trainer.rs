@@ -48,6 +48,7 @@ use crate::coordinator::{TrainBackend, WorkerBackend};
 use crate::metrics::{CurvePoint, RunLog};
 use crate::model::{Task, TensorLayout};
 use crate::netsim::{Link, NetSim};
+use crate::persist::{CheckpointStore, ClientSnapshot, PersistError, ServerSnapshot};
 use crate::simnet::clock::{Clock, RealClock};
 use crate::trace::{Event, StageProfile, StageProfileBuilder, Trace, SERVER};
 use crate::transport::{frame, TransportCfg};
@@ -65,6 +66,37 @@ fn default_parallelism() -> usize {
         .and_then(|v| v.parse::<usize>().ok())
         .filter(|&p| p >= 1)
         .unwrap_or(1)
+}
+
+/// Durable-checkpoint knobs ([`crate::persist`], `ARCHITECTURE.md` §8).
+/// Checkpointing is off unless `dir` is set; it never changes the
+/// trained bits — a checkpointed run and an untouched run produce
+/// identical weight digests, and a resumed run is bit-identical to one
+/// that never crashed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CheckpointCfg {
+    /// Snapshot directory. `None` disables checkpointing entirely.
+    pub dir: Option<String>,
+    /// Snapshot at every Nth round barrier (values < 1 behave as 1).
+    pub every_rounds: usize,
+    /// Generations retained per role (`0` = keep everything).
+    pub keep: usize,
+    /// On start, load the newest generation from `dir` and continue from
+    /// its round instead of training from fresh initialization.
+    pub resume: bool,
+}
+
+impl Default for CheckpointCfg {
+    fn default() -> Self {
+        CheckpointCfg { dir: None, every_rounds: 1, keep: 2, resume: false }
+    }
+}
+
+impl CheckpointCfg {
+    /// The snapshot cadence with the `< 1` guard applied.
+    pub fn every(&self) -> usize {
+        self.every_rounds.max(1)
+    }
 }
 
 /// Everything one training run needs to know (model, method, schedule,
@@ -114,6 +146,10 @@ pub struct TrainConfig {
     /// the `SBC_TRACE` env var. Never affects training results — digests
     /// are bit-identical with tracing on or off.
     pub trace: Trace,
+    /// Durable checkpoint/resume policy ([`crate::persist`]). Off by
+    /// default; excluded from [`crate::transport::config_digest`] because
+    /// it cannot change the trained bits.
+    pub checkpoint: CheckpointCfg,
 }
 
 impl TrainConfig {
@@ -137,6 +173,7 @@ impl TrainConfig {
             parallelism: default_parallelism(),
             transport: TransportCfg::default(),
             trace: Trace::from_env(),
+            checkpoint: CheckpointCfg::default(),
         }
     }
 }
@@ -227,6 +264,13 @@ fn server_stage(
 struct PoolWorker {
     backend: Box<dyn WorkerBackend>,
     acc: Vec<f32>,
+}
+
+/// A decoded checkpoint generation: the server snapshot plus one client
+/// snapshot per client, all at the same round barrier.
+struct ResumeState {
+    server: ServerSnapshot,
+    clients: Vec<ClientSnapshot>,
 }
 
 /// The trainer's zero-copy view of the round's densified client updates
@@ -345,6 +389,36 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
     /// Run from explicit initial master weights (warm start — used by the
     /// adaptive-sparsity schedule to chain phases).
     pub fn run_from(&mut self, initial: Vec<f32>) -> TrainResult {
+        self.run_inner(initial, None)
+    }
+
+    /// Resume from the newest checkpoint generation in
+    /// `cfg.checkpoint.dir`, continuing the round loop exactly where the
+    /// snapshot left off — the result is bit-identical to a run that
+    /// never stopped. Falls back to a fresh run when the directory holds
+    /// no snapshot yet; damaged or mismatched snapshots are typed
+    /// [`PersistError`]s, never a silent restart.
+    pub fn resume(&mut self) -> Result<TrainResult, PersistError> {
+        let ck = self.cfg.checkpoint.clone();
+        let dir = ck.dir.as_deref().expect("resume requires checkpoint.dir to be set");
+        let store = CheckpointStore::open(dir, ck.keep)?;
+        let digest = crate::transport::config_digest(&self.cfg);
+        let Some(server) = store.load_latest_server(digest)? else {
+            let init = self.backend.init_params(self.cfg.seed);
+            return Ok(self.run_inner(init, None));
+        };
+        let mut snaps = Vec::with_capacity(self.cfg.clients);
+        for id in 0..self.cfg.clients {
+            let snap = store.load_client_at(id as u32, server.round, digest)?.ok_or(
+                PersistError::Corrupt("server snapshot has no matching client snapshot"),
+            )?;
+            snaps.push(snap);
+        }
+        let initial = server.master.clone();
+        Ok(self.run_inner(initial, Some(ResumeState { server, clients: snaps })))
+    }
+
+    fn run_inner(&mut self, initial: Vec<f32>, resumed: Option<ResumeState>) -> TrainResult {
         let cfg = self.cfg.clone();
         let n = self.backend.n_params();
         let layout = self.backend.layout().clone();
@@ -426,7 +500,44 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
         let mut down_msg = UpdateMsg::scratch();
         let mut down_decoded = UpdateMsg::scratch();
 
-        for round in 0..rounds {
+        // durable checkpointing: open the store once; snapshots land at
+        // round barriers every `checkpoint.every()` rounds (§8)
+        let store = cfg.checkpoint.dir.as_ref().map(|d| {
+            CheckpointStore::open(d.as_str(), cfg.checkpoint.keep)
+                .expect("cannot open checkpoint directory")
+        });
+        let ckpt_digest = crate::transport::config_digest(&cfg);
+
+        // resuming: overwrite the freshly built accounting and client
+        // state with the checkpointed values, then start the round loop
+        // at the snapshot's barrier
+        let mut start_round = 0usize;
+        if let Some(rs) = &resumed {
+            start_round = rs.server.round as usize;
+            comm.upstream_bits = rs.server.comm[0];
+            comm.messages = rs.server.comm[1];
+            comm.nonzeros = rs.server.comm[2];
+            comm.baseline_bits = rs.server.comm[3];
+            comm.frame_overhead_bits = rs.server.comm[4];
+            for (c, &(ub, db, ut, dt, ms)) in net.clients.iter_mut().zip(&rs.server.net_clients) {
+                c.up_bits = ub;
+                c.down_bits = db;
+                c.up_time_s = f64::from_bits(ut);
+                c.down_time_s = f64::from_bits(dt);
+                c.messages = ms;
+            }
+            net.total_comm_time_s = f64::from_bits(rs.server.net_total_time_bits);
+            for (c, snap) in clients.iter_mut().zip(&rs.clients) {
+                c.restore(snap);
+            }
+            cfg.trace.emit(&clock, || Event::Restore {
+                role: "trainer".into(),
+                client: SERVER,
+                round: rs.server.round,
+            });
+        }
+
+        for round in start_round..rounds {
             let lr = cfg.lr.at(round * delay);
             cfg.trace.emit(&clock, || Event::RoundStart { round: round as u32 });
 
@@ -651,6 +762,57 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
                 }
                 log.push(point);
             }
+
+            // --- durable checkpoint at the round barrier ----------------
+            if let Some(store) = &store {
+                if (round + 1) % cfg.checkpoint.every() == 0 || last {
+                    let barrier = (round + 1) as u32;
+                    let snap = ServerSnapshot {
+                        round: barrier,
+                        master: master.clone(),
+                        comm: [
+                            comm.upstream_bits,
+                            comm.messages,
+                            comm.nonzeros,
+                            comm.baseline_bits,
+                            comm.frame_overhead_bits,
+                        ],
+                        net_clients: net
+                            .clients
+                            .iter()
+                            .map(|c| {
+                                (
+                                    c.up_bits,
+                                    c.down_bits,
+                                    c.up_time_s.to_bits(),
+                                    c.down_time_s.to_bits(),
+                                    c.messages,
+                                )
+                            })
+                            .collect(),
+                        net_total_time_bits: net.total_comm_time_s.to_bits(),
+                        ledger: vec![round as u32; cfg.clients],
+                        cache: None,
+                    };
+                    let path =
+                        store.save_server(&snap, ckpt_digest).expect("checkpoint write failed");
+                    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                    for c in clients.iter() {
+                        store
+                            .save_client(&c.snapshot(barrier, &[]), ckpt_digest)
+                            .expect("checkpoint write failed");
+                    }
+                    cfg.trace.emit(&clock, || Event::Snapshot {
+                        role: "trainer".into(),
+                        client: SERVER,
+                        round: barrier,
+                        bytes,
+                    });
+                    // a kill right after the barrier must still leave a
+                    // readable trace up to the snapshot event
+                    cfg.trace.flush();
+                }
+            }
         }
 
         log.compression = comm.compression_rate();
@@ -777,6 +939,66 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Checkpoint/resume invariant: a run that snapshots every barrier is
+    /// bit-identical to an untouched run, and a run resumed from a
+    /// mid-run generation finishes bit-identical to one that never
+    /// stopped — weights and accounting both.
+    #[test]
+    fn checkpoint_resume_is_bit_identical() {
+        let dir =
+            std::env::temp_dir().join(format!("sbc-trainer-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mk = |ck: CheckpointCfg| {
+            let mut cfg = TrainConfig::new(
+                "mlp-small",
+                MethodConfig::sbc(0.1, 4),
+                40,
+                LrSchedule::constant(0.1),
+            );
+            cfg.eval_every_rounds = 50;
+            cfg.eval_batches = 2;
+            cfg.checkpoint = ck;
+            cfg
+        };
+        let mut be = tiny_backend();
+        let full = Trainer::new(&mut be, mk(CheckpointCfg::default())).run();
+
+        let ck = CheckpointCfg {
+            dir: Some(dir.to_string_lossy().into_owned()),
+            every_rounds: 1,
+            keep: 0,
+            resume: false,
+        };
+        let mut be = tiny_backend();
+        let checkpointed = Trainer::new(&mut be, mk(ck.clone())).run();
+        assert_eq!(full.final_params, checkpointed.final_params);
+
+        // strip everything after the round-3 barrier so the newest
+        // surviving generation is mid-run, then resume against the oracle
+        for r in 4..=10u32 {
+            let _ = std::fs::remove_file(dir.join(format!("server-r{r:08}.ckpt")));
+            for c in 0..4u32 {
+                let _ = std::fs::remove_file(dir.join(format!("client{c:04}-r{r:08}.ckpt")));
+            }
+        }
+        let mut be = tiny_backend();
+        let resumed =
+            Trainer::new(&mut be, mk(CheckpointCfg { resume: true, ..ck })).resume().unwrap();
+        let a: Vec<u32> = full.final_params.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = resumed.final_params.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+        assert_eq!(full.comm.upstream_bits, resumed.comm.upstream_bits);
+        assert_eq!(full.comm.messages, resumed.comm.messages);
+        assert_eq!(full.comm.nonzeros, resumed.comm.nonzeros);
+        assert_eq!(full.comm.baseline_bits, resumed.comm.baseline_bits);
+        assert_eq!(full.comm.frame_overhead_bits, resumed.comm.frame_overhead_bits);
+        assert_eq!(
+            full.net.total_comm_time_s.to_bits(),
+            resumed.net.total_comm_time_s.to_bits()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -40,6 +40,7 @@ pub mod formats;
 pub mod metrics;
 pub mod model;
 pub mod netsim;
+pub mod persist;
 pub mod runtime;
 pub mod sgd;
 pub mod simnet;

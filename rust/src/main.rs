@@ -108,6 +108,11 @@ fn print_help() {
                     protocol on a virtual clock (deterministic: any\n\
                     failure replays from --seed alone); exits nonzero\n\
                     on invariant violations\n\
+                    [--checkpoint-dir DIR] [--checkpoint-every N] [--checkpoint-keep K]\n\
+                    write a durable snapshot every N rounds (keep K\n\
+                    newest generations, 0 = all); [--resume] restarts\n\
+                    from the newest snapshot, bit-identical to a run\n\
+                    that was never interrupted\n\
            table1   print theoretical compression rates (paper Table I)\n\
            inspect  [--artifacts DIR] summarize the AOT manifest\n\
            golomb   print eq.-5 optimal position-bit table\n\
@@ -158,6 +163,25 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.trace = sbc::trace::Trace::jsonl(std::path::Path::new(p))?;
         println!("# tracing events to {p}");
     }
+    // durable checkpoints: `[checkpoint]` TOML keys come in via the
+    // config loader; CLI flags override. --resume additionally asks the
+    // run (trainer, server or client) to restart from the newest
+    // snapshot generation instead of from scratch.
+    if let Some(d) = args.get("checkpoint-dir") {
+        cfg.checkpoint.dir = Some(d.to_string());
+    }
+    if let Some(n) = args.get("checkpoint-every") {
+        cfg.checkpoint.every_rounds = n.parse::<usize>()?.max(1);
+    }
+    if let Some(k) = args.get("checkpoint-keep") {
+        cfg.checkpoint.keep = k.parse()?;
+    }
+    if args.flag("resume") {
+        if cfg.checkpoint.dir.is_none() {
+            bail!("--resume requires --checkpoint-dir (or a [checkpoint] dir in the TOML)");
+        }
+        cfg.checkpoint.resume = true;
+    }
 
     // deterministic simulation: the full federation protocol on a
     // virtual clock under seeded fault schedules (ARCHITECTURE.md §6)
@@ -183,13 +207,23 @@ fn cmd_train(args: &Args) -> Result<()> {
         "native" => {
             let mut be = NativeMlpBackend::mnist_mlp(cfg.clients, cfg.seed);
             cfg.model = "mlp-native".into();
-            Trainer::new(&mut be, cfg.clone()).run()
+            let mut trainer = Trainer::new(&mut be, cfg.clone());
+            if cfg.checkpoint.resume {
+                trainer.resume().map_err(|e| anyhow!("resume failed: {e}"))?
+            } else {
+                trainer.run()
+            }
         }
         "pjrt" => {
             let manifest = Manifest::load(&args.get_or("artifacts", "artifacts"))?;
             let mut be = PjrtBackend::load(&manifest, &cfg.model, cfg.clients, cfg.seed)?;
             println!("# platform: {}  model: {} ({} params)", be.platform(), cfg.model, be.spec.n_params);
-            Trainer::new(&mut be, cfg.clone()).run()
+            let mut trainer = Trainer::new(&mut be, cfg.clone());
+            if cfg.checkpoint.resume {
+                trainer.resume().map_err(|e| anyhow!("resume failed: {e}"))?
+            } else {
+                trainer.run()
+            }
         }
         other => bail!("unknown backend '{other}'"),
     };

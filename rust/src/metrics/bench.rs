@@ -1,0 +1,170 @@
+//! Machine-readable benchmark artifacts.
+//!
+//! Every bench harness emits one `BENCH_<name>.json` at the repository
+//! root (next to `Cargo.toml`, independent of the invocation CWD)
+//! through [`BenchArtifact`], sharing one schema so CI can collect and
+//! diff the artifacts uniformly:
+//!
+//! ```text
+//! {
+//!   "bench": "<name>",
+//!   "config": "<free-form config summary>",
+//!   "results": [
+//!     {"label": "...", "wall_ns": 1234, "bits": 0, "digest": "00c0ffee00c0ffee", ...}
+//!   ]
+//! }
+//! ```
+//!
+//! The three shared measurements are wall time (`wall_ns`), payload
+//! size (`bits`, 0 when not applicable) and a bit-identity `digest`
+//! (hex, 0 when not applicable); bench-specific columns ride along as
+//! extra JSON fields via [`BenchRow::field`].
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// One measured configuration in a bench artifact.
+#[derive(Clone, Debug, Default)]
+pub struct BenchRow {
+    /// Human-readable row label (e.g. `"256 clients / 8 threads"`).
+    pub label: String,
+    /// Wall-clock of the measured section, nanoseconds.
+    pub wall_ns: u64,
+    /// Bits processed or produced by the measured section (0 if n/a).
+    pub bits: u64,
+    /// Bit-identity digest of the row's output (0 if n/a).
+    pub digest: u64,
+    extra: Vec<(String, String)>,
+}
+
+impl BenchRow {
+    /// A row with the three shared measurements.
+    pub fn new(label: impl Into<String>, wall_ns: u64, bits: u64, digest: u64) -> BenchRow {
+        BenchRow { label: label.into(), wall_ns, bits, digest, extra: Vec::new() }
+    }
+
+    /// Attach a bench-specific field. `value` must already be rendered
+    /// JSON — a bare number, `"a quoted string"`, `true` — it is
+    /// embedded verbatim.
+    pub fn field(mut self, key: &str, value: impl Into<String>) -> BenchRow {
+        self.extra.push((key.to_string(), value.into()));
+        self
+    }
+}
+
+/// Collects [`BenchRow`]s and writes `BENCH_<name>.json` at the
+/// repository root.
+#[derive(Clone, Debug)]
+pub struct BenchArtifact {
+    name: String,
+    config: String,
+    rows: Vec<BenchRow>,
+}
+
+impl BenchArtifact {
+    /// Start an artifact for bench `name` with a free-form config
+    /// summary (method, sizes swept, env knobs — whatever identifies
+    /// the run).
+    pub fn new(name: impl Into<String>, config: impl Into<String>) -> BenchArtifact {
+        BenchArtifact { name: name.into(), config: config.into(), rows: Vec::new() }
+    }
+
+    /// Append one measured row.
+    pub fn push(&mut self, row: BenchRow) {
+        self.rows.push(row);
+    }
+
+    /// Where the artifact lands: `BENCH_<name>.json` next to
+    /// `Cargo.toml`, so `cargo bench` run from any directory produces
+    /// artifacts in one collectable place.
+    pub fn path(&self) -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{}.json", self.name))
+    }
+
+    /// Render the shared JSON schema.
+    pub fn to_json(&self) -> String {
+        let mut j = String::new();
+        let _ = write!(
+            j,
+            "{{\n  \"bench\": \"{}\",\n  \"config\": \"{}\",\n  \"results\": [\n",
+            esc(&self.name),
+            esc(&self.config)
+        );
+        for (i, r) in self.rows.iter().enumerate() {
+            let _ = write!(
+                j,
+                "    {{\"label\": \"{}\", \"wall_ns\": {}, \"bits\": {}, \"digest\": \"{:016x}\"",
+                esc(&r.label),
+                r.wall_ns,
+                r.bits,
+                r.digest
+            );
+            for (k, v) in &r.extra {
+                let _ = write!(j, ", \"{}\": {}", esc(k), v);
+            }
+            j.push_str(if i + 1 == self.rows.len() { "}\n" } else { "},\n" });
+        }
+        j.push_str("  ]\n}\n");
+        j
+    }
+
+    /// Write the artifact; returns the path written.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let path = self.path();
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_shared_schema() {
+        let mut art = BenchArtifact::new("demo", "2 rows, test config");
+        art.push(BenchRow::new("first", 1_000, 64, 0xc0ffee));
+        art.push(BenchRow::new("second", 2_000, 0, 0).field("speedup", "1.5"));
+        let j = art.to_json();
+        assert!(j.contains("\"bench\": \"demo\""));
+        assert!(j.contains("\"config\": \"2 rows, test config\""));
+        assert!(j.contains("\"label\": \"first\", \"wall_ns\": 1000, \"bits\": 64"));
+        assert!(j.contains("\"digest\": \"0000000000c0ffee\""));
+        assert!(j.contains("\"speedup\": 1.5"));
+        // exactly one trailing row without a comma
+        assert_eq!(j.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn path_is_repo_root_bench_json() {
+        let art = BenchArtifact::new("scale", "");
+        let path = art.path();
+        assert!(path.ends_with("BENCH_scale.json"), "{path:?}");
+        assert!(path.parent().unwrap().join("Cargo.toml").exists(), "{path:?} not at repo root");
+    }
+
+    #[test]
+    fn escapes_json_metacharacters() {
+        let mut art = BenchArtifact::new("x", "a \"quoted\" \\ line\nnext");
+        art.push(BenchRow::new("tab\there", 1, 0, 0));
+        let j = art.to_json();
+        assert!(j.contains("a \\\"quoted\\\" \\\\ line\\nnext"));
+        assert!(j.contains("tab\\u0009here"));
+    }
+}

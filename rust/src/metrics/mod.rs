@@ -1,4 +1,7 @@
-//! Experiment metrics: time-series logging (CSV/JSONL) + run summaries.
+//! Experiment metrics: time-series logging (CSV/JSONL) + run summaries,
+//! plus the shared machine-readable bench artifact writer ([`bench`]).
+
+pub mod bench;
 
 use std::fmt::Write as _;
 use std::io::Write as _;

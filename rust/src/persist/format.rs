@@ -1,0 +1,614 @@
+//! The snapshot wire format: a versioned, CRC-guarded, length-prefixed
+//! binary layout shared by server and client checkpoints.
+//!
+//! Layout (big-endian, mirroring the transport frame conventions):
+//!
+//! ```text
+//! magic:          u32   0x5342_434B  (b"SBCK")
+//! format version: u16   1
+//! role:           u8    0 = server, 1 = client
+//! reserved:       u8    0
+//! client:         u32   client id (u32::MAX for server snapshots)
+//! config digest:  u64   transport::config_digest of the TrainConfig
+//! round:          u32   next round the snapshot resumes into
+//! payload length: u32   bytes of payload that follow
+//! payload:        [u8]  role-specific body (see below)
+//! crc:            u32   CRC-32 over every preceding byte
+//! ```
+//!
+//! Every load failure is a typed [`PersistError`] — a truncated file, a
+//! flipped bit, a foreign config or a role/client mix-up can never panic
+//! or silently resume wrong state. The CRC covers the whole file, so any
+//! single-bit corruption is caught even when it lands in a length field.
+
+use std::fmt;
+
+use crate::transport::frame::crc32;
+
+/// Snapshot file magic (`b"SBCK"` big-endian).
+pub const MAGIC: u32 = 0x5342_434B;
+/// Current snapshot format version.
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes (everything before the payload).
+pub const HEADER_BYTES: usize = 28;
+/// `client` field value marking a server snapshot.
+pub const SERVER_CLIENT_ID: u32 = u32::MAX;
+
+/// Which side of the federation a snapshot belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// The aggregation server (or the in-process trainer's server half).
+    Server,
+    /// One client session.
+    Client,
+}
+
+impl Role {
+    fn tag(self) -> u8 {
+        match self {
+            Role::Server => 0,
+            Role::Client => 1,
+        }
+    }
+
+    fn from_tag(t: u8) -> Option<Role> {
+        match t {
+            0 => Some(Role::Server),
+            1 => Some(Role::Client),
+            _ => None,
+        }
+    }
+}
+
+/// Typed snapshot load/store failures. Loading never panics on hostile
+/// input; every damage mode maps to one of these.
+#[derive(Debug)]
+pub enum PersistError {
+    /// Filesystem error (open, read, write, rename, sync).
+    Io(std::io::Error),
+    /// The file ends before the declared layout does.
+    Truncated,
+    /// The leading magic is not `SBCK` — not a snapshot file.
+    BadMagic,
+    /// A snapshot from an unknown format version.
+    BadVersion(u16),
+    /// The CRC-32 trailer does not match the file contents.
+    BadCrc,
+    /// The snapshot was written under a different `TrainConfig`.
+    ConfigMismatch {
+        /// Digest the loader expected.
+        expected: u64,
+        /// Digest found in the file.
+        found: u64,
+    },
+    /// The snapshot belongs to a different role or client id.
+    RoleMismatch,
+    /// Structurally invalid payload (bad enum tag, trailing bytes, …).
+    Corrupt(&'static str),
+}
+
+impl fmt::Display for PersistError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PersistError::Io(e) => write!(f, "snapshot I/O error: {e}"),
+            PersistError::Truncated => write!(f, "snapshot truncated"),
+            PersistError::BadMagic => write!(f, "not a snapshot file (bad magic)"),
+            PersistError::BadVersion(v) => write!(f, "unknown snapshot format version {v}"),
+            PersistError::BadCrc => write!(f, "snapshot CRC mismatch (corrupt file)"),
+            PersistError::ConfigMismatch { expected, found } => write!(
+                f,
+                "snapshot config digest {found:016x} does not match this run's {expected:016x}"
+            ),
+            PersistError::RoleMismatch => write!(f, "snapshot belongs to a different role/client"),
+            PersistError::Corrupt(what) => write!(f, "snapshot payload corrupt: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for PersistError {}
+
+impl From<std::io::Error> for PersistError {
+    fn from(e: std::io::Error) -> Self {
+        PersistError::Io(e)
+    }
+}
+
+/// The server's previous-round broadcast, persisted so a restarted
+/// server can serve stragglers that re-request the round it already
+/// finished (the depth-1 reply cache survives the crash).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CachedReply {
+    /// Round the cached broadcast belongs to.
+    pub round: u32,
+    /// Encoded broadcast bytes.
+    pub bytes: Vec<u8>,
+    /// Exact payload bit-length of the broadcast.
+    pub bits: u64,
+    /// Final weight digest, present when the cached round was the last.
+    pub done: Option<u64>,
+}
+
+/// Everything the server needs to resume a run at a round barrier.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerSnapshot {
+    /// Next round to collect (rounds `0..round` are fully applied).
+    pub round: u32,
+    /// Aggregate model weights after round `round - 1`.
+    pub master: Vec<f32>,
+    /// `CommStats` counters, field order: upstream, messages, nonzeros,
+    /// baseline, frame-overhead bits.
+    pub comm: [u64; 5],
+    /// Per-client `NetSim` counters: `(up_bits, down_bits,
+    /// up_time_s.to_bits(), down_time_s.to_bits(), messages)`.
+    pub net_clients: Vec<(u64, u64, u64, u64, u64)>,
+    /// `NetSim::total_comm_time_s.to_bits()`.
+    pub net_total_time_bits: u64,
+    /// Per-client ledger: last round each client completed (`u32::MAX`
+    /// when a client has not completed any round yet).
+    pub ledger: Vec<u32>,
+    /// The previous round's broadcast, for straggler re-service.
+    pub cache: Option<CachedReply>,
+}
+
+/// Everything one client needs to resume its session at a round barrier.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClientSnapshot {
+    /// Client id.
+    pub client: u32,
+    /// Next round to train (rounds `0..round` are fully applied).
+    pub round: u32,
+    /// Local model weights (empty in the in-process trainer, which
+    /// shares one master vector across clients).
+    pub weights: Vec<f32>,
+    /// Flat optimizer state (momentum / Adam moments).
+    pub opt: Vec<f32>,
+    /// Error-feedback residual vector.
+    pub residual: Vec<f32>,
+    /// Whether error feedback is active.
+    pub residual_enabled: bool,
+    /// Local iterations completed (Adam bias-correction step index).
+    pub iterations: u64,
+    /// Payload bits this client has uploaded so far.
+    pub up_bits: u64,
+    /// Data-sampling RNG cursor.
+    pub rng: [u64; 4],
+    /// Selector-stage RNG cursor.
+    pub selector_rng: [u64; 4],
+    /// Quantizer-stage RNG cursor.
+    pub quantizer_rng: [u64; 4],
+}
+
+// ---------------------------------------------------------------------
+// payload writer / reader
+// ---------------------------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_be_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_be_bytes());
+    }
+
+    fn f32s(&mut self, xs: &[f32]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.u32(x.to_bits());
+        }
+    }
+
+    fn rng(&mut self, s: [u64; 4]) {
+        for w in s {
+            self.u64(w);
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], PersistError> {
+        if self.buf.len() - self.pos < n {
+            return Err(PersistError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, PersistError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, PersistError> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, PersistError> {
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, PersistError> {
+        let n = self.u32()? as usize;
+        // bound the allocation by the bytes actually present
+        if self.buf.len() - self.pos < n * 4 {
+            return Err(PersistError::Truncated);
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(f32::from_bits(self.u32()?));
+        }
+        Ok(v)
+    }
+
+    fn rng(&mut self) -> Result<[u64; 4], PersistError> {
+        Ok([self.u64()?, self.u64()?, self.u64()?, self.u64()?])
+    }
+
+    fn finish(self) -> Result<(), PersistError> {
+        if self.pos != self.buf.len() {
+            return Err(PersistError::Corrupt("trailing bytes after payload"));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// encode / decode
+// ---------------------------------------------------------------------
+
+fn encode(role: Role, client: u32, round: u32, config_digest: u64, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len() + 4);
+    out.extend_from_slice(&MAGIC.to_be_bytes());
+    out.extend_from_slice(&VERSION.to_be_bytes());
+    out.push(role.tag());
+    out.push(0); // reserved
+    out.extend_from_slice(&client.to_be_bytes());
+    out.extend_from_slice(&config_digest.to_be_bytes());
+    out.extend_from_slice(&round.to_be_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(payload);
+    let crc = crc32(&[&out]);
+    out.extend_from_slice(&crc.to_be_bytes());
+    out
+}
+
+/// The validated header of a snapshot file, minus role-specific payload.
+struct Header {
+    role: Role,
+    client: u32,
+    config_digest: u64,
+    round: u32,
+}
+
+/// Validate framing + CRC and return the header and payload slice.
+fn check(bytes: &[u8]) -> Result<(Header, &[u8]), PersistError> {
+    if bytes.len() < HEADER_BYTES {
+        return Err(PersistError::Truncated);
+    }
+    let magic = u32::from_be_bytes(bytes[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(PersistError::BadMagic);
+    }
+    let version = u16::from_be_bytes(bytes[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(PersistError::BadVersion(version));
+    }
+    let role = Role::from_tag(bytes[6]).ok_or(PersistError::Corrupt("unknown role tag"))?;
+    let client = u32::from_be_bytes(bytes[8..12].try_into().unwrap());
+    let config_digest = u64::from_be_bytes(bytes[12..20].try_into().unwrap());
+    let round = u32::from_be_bytes(bytes[20..24].try_into().unwrap());
+    let payload_len = u32::from_be_bytes(bytes[24..28].try_into().unwrap()) as usize;
+    let total = HEADER_BYTES
+        .checked_add(payload_len)
+        .and_then(|t| t.checked_add(4))
+        .ok_or(PersistError::Corrupt("payload length overflows"))?;
+    if bytes.len() < total {
+        return Err(PersistError::Truncated);
+    }
+    if bytes.len() > total {
+        return Err(PersistError::Corrupt("trailing bytes after CRC"));
+    }
+    let crc = u32::from_be_bytes(bytes[total - 4..].try_into().unwrap());
+    if crc != crc32(&[&bytes[..total - 4]]) {
+        return Err(PersistError::BadCrc);
+    }
+    let payload = &bytes[HEADER_BYTES..total - 4];
+    Ok((Header { role, client, config_digest, round }, payload))
+}
+
+fn check_identity(
+    h: &Header,
+    role: Role,
+    client: u32,
+    config_digest: u64,
+) -> Result<(), PersistError> {
+    if h.role != role || h.client != client {
+        return Err(PersistError::RoleMismatch);
+    }
+    if h.config_digest != config_digest {
+        return Err(PersistError::ConfigMismatch {
+            expected: config_digest,
+            found: h.config_digest,
+        });
+    }
+    Ok(())
+}
+
+/// Serialize a server snapshot under `config_digest`.
+pub fn encode_server(snap: &ServerSnapshot, config_digest: u64) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.f32s(&snap.master);
+    for c in snap.comm {
+        w.u64(c);
+    }
+    w.u32(snap.net_clients.len() as u32);
+    for &(up, down, ut, dt, msgs) in &snap.net_clients {
+        w.u64(up);
+        w.u64(down);
+        w.u64(ut);
+        w.u64(dt);
+        w.u64(msgs);
+    }
+    w.u64(snap.net_total_time_bits);
+    w.u32(snap.ledger.len() as u32);
+    for &r in &snap.ledger {
+        w.u32(r);
+    }
+    match &snap.cache {
+        None => w.u8(0),
+        Some(c) => {
+            w.u8(1);
+            w.u32(c.round);
+            w.u64(c.bits);
+            match c.done {
+                None => w.u8(0),
+                Some(d) => {
+                    w.u8(1);
+                    w.u64(d);
+                }
+            }
+            w.u32(c.bytes.len() as u32);
+            w.buf.extend_from_slice(&c.bytes);
+        }
+    }
+    encode(Role::Server, SERVER_CLIENT_ID, snap.round, config_digest, &w.buf)
+}
+
+/// Deserialize and validate a server snapshot written under
+/// `config_digest`. Every damage mode returns a typed [`PersistError`].
+pub fn decode_server(bytes: &[u8], config_digest: u64) -> Result<ServerSnapshot, PersistError> {
+    let (h, payload) = check(bytes)?;
+    check_identity(&h, Role::Server, SERVER_CLIENT_ID, config_digest)?;
+    let mut r = Reader::new(payload);
+    let master = r.f32s()?;
+    let mut comm = [0u64; 5];
+    for c in &mut comm {
+        *c = r.u64()?;
+    }
+    let n = r.u32()? as usize;
+    if payload.len() - r.pos < n * 8 {
+        return Err(PersistError::Truncated);
+    }
+    let mut net_clients = Vec::with_capacity(n);
+    for _ in 0..n {
+        net_clients.push((r.u64()?, r.u64()?, r.u64()?, r.u64()?, r.u64()?));
+    }
+    let net_total_time_bits = r.u64()?;
+    let m = r.u32()? as usize;
+    if payload.len() - r.pos < m * 4 {
+        return Err(PersistError::Truncated);
+    }
+    let mut ledger = Vec::with_capacity(m);
+    for _ in 0..m {
+        ledger.push(r.u32()?);
+    }
+    let cache = match r.u8()? {
+        0 => None,
+        1 => {
+            let round = r.u32()?;
+            let bits = r.u64()?;
+            let done = match r.u8()? {
+                0 => None,
+                1 => Some(r.u64()?),
+                _ => return Err(PersistError::Corrupt("bad done flag")),
+            };
+            let blen = r.u32()? as usize;
+            let bytes = r.take(blen)?.to_vec();
+            Some(CachedReply { round, bits, bytes, done })
+        }
+        _ => return Err(PersistError::Corrupt("bad cache flag")),
+    };
+    r.finish()?;
+    Ok(ServerSnapshot {
+        round: h.round,
+        master,
+        comm,
+        net_clients,
+        net_total_time_bits,
+        ledger,
+        cache,
+    })
+}
+
+/// Serialize a client snapshot under `config_digest`.
+pub fn encode_client(snap: &ClientSnapshot, config_digest: u64) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.f32s(&snap.weights);
+    w.f32s(&snap.opt);
+    w.f32s(&snap.residual);
+    w.u8(snap.residual_enabled as u8);
+    w.u64(snap.iterations);
+    w.u64(snap.up_bits);
+    w.rng(snap.rng);
+    w.rng(snap.selector_rng);
+    w.rng(snap.quantizer_rng);
+    encode(Role::Client, snap.client, snap.round, config_digest, &w.buf)
+}
+
+/// Deserialize and validate a client snapshot for `client` written
+/// under `config_digest`.
+pub fn decode_client(
+    bytes: &[u8],
+    client: u32,
+    config_digest: u64,
+) -> Result<ClientSnapshot, PersistError> {
+    let (h, payload) = check(bytes)?;
+    check_identity(&h, Role::Client, client, config_digest)?;
+    let mut r = Reader::new(payload);
+    let weights = r.f32s()?;
+    let opt = r.f32s()?;
+    let residual = r.f32s()?;
+    let residual_enabled = match r.u8()? {
+        0 => false,
+        1 => true,
+        _ => return Err(PersistError::Corrupt("bad residual flag")),
+    };
+    let iterations = r.u64()?;
+    let up_bits = r.u64()?;
+    let rng = r.rng()?;
+    let selector_rng = r.rng()?;
+    let quantizer_rng = r.rng()?;
+    r.finish()?;
+    Ok(ClientSnapshot {
+        client: h.client,
+        round: h.round,
+        weights,
+        opt,
+        residual,
+        residual_enabled,
+        iterations,
+        up_bits,
+        rng,
+        selector_rng,
+        quantizer_rng,
+    })
+}
+
+/// The round field of a snapshot file without decoding the payload
+/// (still CRC-validated — used to find a common restorable round).
+pub fn peek_round(bytes: &[u8]) -> Result<u32, PersistError> {
+    let (h, _) = check(bytes)?;
+    Ok(h.round)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_server() -> ServerSnapshot {
+        ServerSnapshot {
+            round: 7,
+            master: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE],
+            comm: [10, 20, 30, 40, 50],
+            net_clients: vec![(1, 2, 3, 4, 5), (6, 7, 8, 9, 10)],
+            net_total_time_bits: 0.25f64.to_bits(),
+            ledger: vec![6, u32::MAX],
+            cache: Some(CachedReply { round: 6, bits: 123, bytes: vec![9, 8, 7], done: None }),
+        }
+    }
+
+    fn sample_client() -> ClientSnapshot {
+        ClientSnapshot {
+            client: 3,
+            round: 7,
+            weights: vec![0.5, -0.5],
+            opt: vec![0.1; 4],
+            residual: vec![0.0, 1.0],
+            residual_enabled: true,
+            iterations: 700,
+            up_bits: 4096,
+            rng: [1, 2, 3, 4],
+            selector_rng: [5, 6, 7, 8],
+            quantizer_rng: [9, 10, 11, 12],
+        }
+    }
+
+    #[test]
+    fn server_roundtrip_bit_identical() {
+        let snap = sample_server();
+        let bytes = encode_server(&snap, 0xDEAD);
+        assert_eq!(decode_server(&bytes, 0xDEAD).unwrap(), snap);
+        assert_eq!(peek_round(&bytes).unwrap(), 7);
+    }
+
+    #[test]
+    fn client_roundtrip_bit_identical() {
+        let snap = sample_client();
+        let bytes = encode_client(&snap, 0xBEEF);
+        assert_eq!(decode_client(&bytes, 3, 0xBEEF).unwrap(), snap);
+    }
+
+    #[test]
+    fn identity_checks_are_typed() {
+        let bytes = encode_client(&sample_client(), 0xBEEF);
+        assert!(matches!(
+            decode_client(&bytes, 4, 0xBEEF),
+            Err(PersistError::RoleMismatch)
+        ));
+        assert!(matches!(
+            decode_client(&bytes, 3, 0xF00D),
+            Err(PersistError::ConfigMismatch { .. })
+        ));
+        assert!(matches!(
+            decode_server(&bytes, 0xBEEF),
+            Err(PersistError::RoleMismatch)
+        ));
+    }
+
+    #[test]
+    fn every_truncation_is_typed() {
+        let bytes = encode_server(&sample_server(), 1);
+        for n in 0..bytes.len() {
+            let err = decode_server(&bytes[..n], 1).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    PersistError::Truncated | PersistError::BadCrc | PersistError::Corrupt(_)
+                ),
+                "truncation to {n} gave {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_bitflip_is_typed() {
+        let bytes = encode_client(&sample_client(), 1);
+        for bit in 0..bytes.len() * 8 {
+            let mut bad = bytes.clone();
+            bad[bit / 8] ^= 1 << (bit % 8);
+            assert!(decode_client(&bad, 3, 1).is_err(), "bit {bit} accepted");
+        }
+    }
+
+    #[test]
+    fn version_gate() {
+        let mut bytes = encode_client(&sample_client(), 1);
+        bytes[5] = 99; // version low byte
+        // recompute CRC so only the version differs
+        let len = bytes.len();
+        let crc = crc32(&[&bytes[..len - 4]]);
+        bytes[len - 4..].copy_from_slice(&crc.to_be_bytes());
+        assert!(matches!(decode_client(&bytes, 3, 1), Err(PersistError::BadVersion(99))));
+    }
+}

@@ -1,0 +1,27 @@
+//! Durable checkpoint & crash-recovery (ARCHITECTURE.md §8).
+//!
+//! A std-only snapshot subsystem covering both halves of the
+//! federation:
+//!
+//! * [`format`] — the versioned, CRC-guarded snapshot layout
+//!   ([`ServerSnapshot`], [`ClientSnapshot`]) with typed
+//!   [`PersistError`] load failures for truncated, corrupt,
+//!   version- or config-mismatched files;
+//! * [`store`] — [`CheckpointStore`]: atomic write-rename persistence
+//!   into a checkpoint directory with a retained-generations policy.
+//!
+//! The invariant the subsystem exists to uphold: a run that crashes at
+//! any snapshot barrier and resumes from disk produces weight digests
+//! **bit-identical** to the uninterrupted run, with `CommStats`/`NetSim`
+//! accounting reconciling exactly. Everything convergence-relevant —
+//! weights, optimizer moments, error-feedback residuals, and every RNG
+//! cursor — is captured; nothing is re-derived approximately.
+
+pub mod format;
+pub mod store;
+
+pub use format::{
+    decode_client, decode_server, encode_client, encode_server, peek_round, CachedReply,
+    ClientSnapshot, PersistError, Role, ServerSnapshot,
+};
+pub use store::{atomic_write, CheckpointStore};

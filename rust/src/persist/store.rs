@@ -1,0 +1,262 @@
+//! Durable checkpoint storage: atomic write-rename persistence with a
+//! retained-generations policy.
+//!
+//! Every save goes through [`atomic_write`]: the bytes land in a
+//! `.tmp-` sibling first (created with `create_new`, never truncating
+//! an existing snapshot), are fsynced, and only then renamed over the
+//! final name — a crash mid-save can lose the *new* generation but
+//! never damage an existing one. After each save, generations beyond
+//! the `keep` budget are pruned oldest-first per role.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use super::format::{
+    decode_client, decode_server, encode_client, encode_server, ClientSnapshot, PersistError,
+    ServerSnapshot,
+};
+
+/// A checkpoint directory plus its retention policy.
+#[derive(Clone, Debug)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl CheckpointStore {
+    /// Open (creating if needed) a checkpoint directory. `keep` is the
+    /// number of generations retained per role (`0` = keep everything).
+    pub fn open(dir: impl Into<PathBuf>, keep: usize) -> Result<CheckpointStore, PersistError> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        Ok(CheckpointStore { dir, keep })
+    }
+
+    /// The directory this store persists into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn server_name(round: u32) -> String {
+        format!("server-r{round:08}.ckpt")
+    }
+
+    fn client_name(client: u32, round: u32) -> String {
+        format!("client{client:04}-r{round:08}.ckpt")
+    }
+
+    /// Persist a server snapshot atomically; returns the final path.
+    pub fn save_server(
+        &self,
+        snap: &ServerSnapshot,
+        config_digest: u64,
+    ) -> Result<PathBuf, PersistError> {
+        let path = self.dir.join(Self::server_name(snap.round));
+        atomic_write(&path, &encode_server(snap, config_digest))?;
+        self.prune("server-r", snap.round)?;
+        Ok(path)
+    }
+
+    /// Persist a client snapshot atomically; returns the final path.
+    pub fn save_client(
+        &self,
+        snap: &ClientSnapshot,
+        config_digest: u64,
+    ) -> Result<PathBuf, PersistError> {
+        let path = self.dir.join(Self::client_name(snap.client, snap.round));
+        atomic_write(&path, &encode_client(snap, config_digest))?;
+        self.prune(&format!("client{:04}-r", snap.client), snap.round)?;
+        Ok(path)
+    }
+
+    /// Load the newest server snapshot, if any exists. Damage in that
+    /// newest generation is a typed error, not a silent fallback.
+    pub fn load_latest_server(
+        &self,
+        config_digest: u64,
+    ) -> Result<Option<ServerSnapshot>, PersistError> {
+        match self.latest("server-r")? {
+            None => Ok(None),
+            Some(path) => Ok(Some(decode_server(&fs::read(path)?, config_digest)?)),
+        }
+    }
+
+    /// Load the newest snapshot of `client`, if any exists.
+    pub fn load_latest_client(
+        &self,
+        client: u32,
+        config_digest: u64,
+    ) -> Result<Option<ClientSnapshot>, PersistError> {
+        match self.latest(&format!("client{client:04}-r"))? {
+            None => Ok(None),
+            Some(path) => Ok(Some(decode_client(&fs::read(path)?, client, config_digest)?)),
+        }
+    }
+
+    /// Load the server snapshot for an exact round, if present.
+    pub fn load_server_at(
+        &self,
+        round: u32,
+        config_digest: u64,
+    ) -> Result<Option<ServerSnapshot>, PersistError> {
+        let path = self.dir.join(Self::server_name(round));
+        if !path.exists() {
+            return Ok(None);
+        }
+        Ok(Some(decode_server(&fs::read(path)?, config_digest)?))
+    }
+
+    /// Load the snapshot of `client` for an exact round, if present.
+    pub fn load_client_at(
+        &self,
+        client: u32,
+        round: u32,
+        config_digest: u64,
+    ) -> Result<Option<ClientSnapshot>, PersistError> {
+        let path = self.dir.join(Self::client_name(client, round));
+        if !path.exists() {
+            return Ok(None);
+        }
+        Ok(Some(decode_client(&fs::read(path)?, client, config_digest)?))
+    }
+
+    /// Rounds for which a snapshot with the given filename prefix exists,
+    /// ascending.
+    fn rounds(&self, prefix: &str) -> Result<Vec<u32>, PersistError> {
+        let mut rounds = Vec::new();
+        for entry in fs::read_dir(&self.dir)? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(rest) = name.strip_prefix(prefix) {
+                if let Some(digits) = rest.strip_suffix(".ckpt") {
+                    if let Ok(r) = digits.parse::<u32>() {
+                        rounds.push(r);
+                    }
+                }
+            }
+        }
+        rounds.sort_unstable();
+        Ok(rounds)
+    }
+
+    fn latest(&self, prefix: &str) -> Result<Option<PathBuf>, PersistError> {
+        Ok(self
+            .rounds(prefix)?
+            .last()
+            .map(|r| self.dir.join(format!("{prefix}{r:08}.ckpt"))))
+    }
+
+    /// Remove generations older than the `keep` newest (never the one
+    /// just written at `just_wrote`).
+    fn prune(&self, prefix: &str, just_wrote: u32) -> Result<(), PersistError> {
+        if self.keep == 0 {
+            return Ok(());
+        }
+        let rounds = self.rounds(prefix)?;
+        if rounds.len() <= self.keep {
+            return Ok(());
+        }
+        for &r in &rounds[..rounds.len() - self.keep] {
+            if r != just_wrote {
+                let _ = fs::remove_file(self.dir.join(format!("{prefix}{r:08}.ckpt")));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Write `bytes` to `path` atomically: create a fresh temp sibling,
+/// write + fsync it, then rename over the final name. The temp file
+/// uses `create_new` so a concurrent or stale temp is an error rather
+/// than a silent truncation.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<(), PersistError> {
+    let tmp = path.with_extension("ckpt.tmp");
+    // remove a stale temp from a previous crashed save, then create_new
+    // guarantees we never truncate a file another writer has open
+    let _ = fs::remove_file(&tmp);
+    let mut f = fs::OpenOptions::new().write(true).create_new(true).open(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::format::CachedReply;
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("sbc-persist-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn server_snap(round: u32) -> ServerSnapshot {
+        ServerSnapshot {
+            round,
+            master: vec![round as f32; 3],
+            comm: [1, 2, 3, 4, 5],
+            net_clients: vec![(1, 1, 1, 1, 1)],
+            net_total_time_bits: 0,
+            ledger: vec![round.wrapping_sub(1)],
+            cache: Some(CachedReply { round, bits: 8, bytes: vec![1], done: Some(42) }),
+        }
+    }
+
+    #[test]
+    fn save_load_and_retention() {
+        let dir = tmpdir("retain");
+        let store = CheckpointStore::open(&dir, 2).unwrap();
+        for r in 1..=5 {
+            store.save_server(&server_snap(r), 9).unwrap();
+        }
+        // only the 2 newest generations remain
+        let names: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names.len(), 2, "{names:?}");
+        let latest = store.load_latest_server(9).unwrap().unwrap();
+        assert_eq!(latest, server_snap(5));
+        assert_eq!(store.load_server_at(4, 9).unwrap().unwrap().round, 4);
+        assert!(store.load_server_at(1, 9).unwrap().is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn keep_zero_retains_everything() {
+        let dir = tmpdir("keepall");
+        let store = CheckpointStore::open(&dir, 0).unwrap();
+        for r in 1..=4 {
+            store.save_server(&server_snap(r), 9).unwrap();
+        }
+        assert_eq!(store.rounds("server-r").unwrap(), vec![1, 2, 3, 4]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_store_loads_none() {
+        let dir = tmpdir("empty");
+        let store = CheckpointStore::open(&dir, 1).unwrap();
+        assert!(store.load_latest_server(1).unwrap().is_none());
+        assert!(store.load_latest_client(0, 1).unwrap().is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn damaged_latest_fails_typed() {
+        let dir = tmpdir("damaged");
+        let store = CheckpointStore::open(&dir, 2).unwrap();
+        let path = store.save_server(&server_snap(3), 9).unwrap();
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        atomic_write(&path, &bytes).unwrap();
+        assert!(store.load_latest_server(9).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

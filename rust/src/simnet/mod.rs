@@ -29,6 +29,10 @@
 //!   [`check_run`](harness::check_run) classifies it against the serial
 //!   trainer oracle: bit-identical completion, typed failure, or
 //!   invariant [`Violation`](harness::Verdict::Violation).
+//!   [`run_schedule_with_recovery`](harness::run_schedule_with_recovery)
+//!   adds kill/restart supervision: scheduled `SIGKILL`-style crashes
+//!   of the server or individual clients, each restarted to resume from
+//!   its last durable [`persist`](crate::persist) barrier.
 //! - [`shrink`] — [`ddmin`](shrink::ddmin) delta-debugging that reduces
 //!   a failing fault schedule to a minimal exact plan and renders it as
 //!   a copy-pastable test case.
@@ -41,6 +45,9 @@ pub mod shrink;
 
 pub use clock::{Clock, RealClock, SimClock};
 pub use fault::{AppliedFault, Dir, FaultAction, FaultPlan, SimProfile, When};
-pub use harness::{check_run, run_schedule, SimConfig, SimRun, Verdict};
+pub use harness::{
+    check_run, run_schedule, run_schedule_with_recovery, RecoverySchedule, SimConfig, SimRun,
+    Verdict,
+};
 pub use net::SimNet;
 pub use shrink::{ddmin, shrink_schedule, Shrunk};

@@ -231,6 +231,24 @@ impl Acceptor for SimNet {
     }
 }
 
+impl SimNet {
+    /// Reverse a [`Acceptor::shutdown`]: clear the closed flag and
+    /// discard connections left pending when the previous server
+    /// generation died (their client ends observe EOF and reconnect).
+    /// This is what lets a recovery supervisor restart a server on the
+    /// *same* fabric — per-client attempt counters and the fault/jitter
+    /// streams keyed on them carry across the restart, keeping fault
+    /// decisions replay-stable through a kill.
+    pub fn reopen(&self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.closed = false;
+            st.pending.clear();
+        }
+        self.inner.clock.wake_all();
+    }
+}
+
 /// [`Connector`] for one simulated client (from [`SimNet::connector`]).
 pub struct SimConnector {
     net: Arc<NetInner>,

@@ -162,6 +162,37 @@ pub enum Event {
         /// [`FaultAction`](crate::simnet::fault::FaultAction).
         action: String,
     },
+    /// A durable checkpoint generation was persisted at a round barrier
+    /// ([`crate::persist`]).
+    Snapshot {
+        /// Which process snapshotted: `"trainer"` (in-process run),
+        /// `"server"` or `"client"`.
+        role: String,
+        /// Client id, or [`SERVER`] for the server/trainer side.
+        client: u32,
+        /// The round barrier the snapshot represents (the next round the
+        /// restored state would run).
+        round: u32,
+        /// Size of the persisted server-snapshot file in bytes.
+        bytes: u64,
+    },
+    /// State was restored from a checkpoint at process start.
+    Restore {
+        /// `"trainer"`, `"server"` or `"client"`.
+        role: String,
+        /// Client id, or [`SERVER`] for the server/trainer side.
+        client: u32,
+        /// The round barrier restored to.
+        round: u32,
+    },
+    /// A client was re-admitted at the server's resume round through the
+    /// extended Hello/HelloAck handshake.
+    Resume {
+        /// Client id.
+        client: u32,
+        /// The round the handshake resumed at.
+        round: u32,
+    },
 }
 
 // ---------------------------------------------------------------------
@@ -299,6 +330,19 @@ impl Event {
                 esc(action, &mut s);
                 s.push('"');
             }
+            Event::Snapshot { role, client, round, bytes } => {
+                let _ = write!(s, "\"snapshot\",\"role\":\"");
+                esc(role, &mut s);
+                let _ = write!(s, "\",\"client\":{client},\"round\":{round},\"bytes\":{bytes}");
+            }
+            Event::Restore { role, client, round } => {
+                let _ = write!(s, "\"restore\",\"role\":\"");
+                esc(role, &mut s);
+                let _ = write!(s, "\",\"client\":{client},\"round\":{round}");
+            }
+            Event::Resume { client, round } => {
+                let _ = write!(s, "\"resume\",\"client\":{client},\"round\":{round}");
+            }
         }
         s.push('}');
         s
@@ -354,6 +398,21 @@ impl Event {
                 seq: u64_field(line, "seq")?,
                 dir: str_field(line, "dir")?,
                 action: str_field(line, "action")?,
+            },
+            "snapshot" => Event::Snapshot {
+                role: str_field(line, "role")?,
+                client: u32_field(line, "client")?,
+                round: u32_field(line, "round")?,
+                bytes: u64_field(line, "bytes")?,
+            },
+            "restore" => Event::Restore {
+                role: str_field(line, "role")?,
+                client: u32_field(line, "client")?,
+                round: u32_field(line, "round")?,
+            },
+            "resume" => Event::Resume {
+                client: u32_field(line, "client")?,
+                round: u32_field(line, "round")?,
             },
             _ => return None,
         };
@@ -431,6 +490,10 @@ impl Recorder for JsonlRecorder {
     fn flush(&self) {
         let mut w = self.w.lock().unwrap_or_else(|p| p.into_inner());
         let _ = w.flush();
+        // push the bytes to disk, not just to the OS: a process killed
+        // right after a snapshot barrier must leave a readable trace up
+        // to and including the Snapshot event
+        let _ = w.get_ref().sync_data();
     }
 }
 
@@ -720,6 +783,9 @@ mod tests {
                 dir: "down".into(),
                 action: "delay(700ms)".into(),
             },
+            Event::Snapshot { role: "server".into(), client: SERVER, round: 7, bytes: 78_212 },
+            Event::Restore { role: "client".into(), client: 2, round: 7 },
+            Event::Resume { client: 2, round: 7 },
         ]
     }
 

@@ -310,16 +310,25 @@ pub struct HelloAck {
     pub round: u32,
     /// Wire-format version the server speaks.
     pub wire_version: u8,
+    /// Checkpoint round the server resumed from, or
+    /// [`NO_RESUME`](HelloAck::NO_RESUME) for a fresh start. A client
+    /// whose own checkpoint is newer than this fails fast (typed) rather
+    /// than silently replaying rounds the server has forgotten.
+    pub resume_round: u32,
 }
 
 impl HelloAck {
-    const LEN: usize = 5;
+    const LEN: usize = 9;
+
+    /// `resume_round` sentinel: the server started fresh (no checkpoint).
+    pub const NO_RESUME: u32 = u32::MAX;
 
     /// Serialize to the fixed-size payload.
     pub fn encode(&self) -> Vec<u8> {
         let mut b = vec![0u8; Self::LEN];
         b[0..4].copy_from_slice(&self.round.to_be_bytes());
         b[4] = self.wire_version;
+        b[5..9].copy_from_slice(&self.resume_round.to_be_bytes());
         b
     }
 
@@ -331,6 +340,7 @@ impl HelloAck {
         Ok(HelloAck {
             round: u32::from_be_bytes(b[0..4].try_into().unwrap()),
             wire_version: b[4],
+            resume_round: u32::from_be_bytes(b[5..9].try_into().unwrap()),
         })
     }
 
@@ -442,8 +452,10 @@ mod tests {
     fn handshake_payloads_roundtrip() {
         let h = Hello { client: 2, clients: 4, n_params: 9999, wire_version: 2, config_digest: 0xDEAD_BEEF };
         assert_eq!(Hello::decode(&h.encode()).unwrap(), h);
-        let a = HelloAck { round: 12, wire_version: 2 };
+        let a = HelloAck { round: 12, wire_version: 2, resume_round: HelloAck::NO_RESUME };
         assert_eq!(HelloAck::decode(&a.encode()).unwrap(), a);
+        let resumed = HelloAck { round: 12, wire_version: 2, resume_round: 12 };
+        assert_eq!(HelloAck::decode(&resumed.encode()).unwrap(), resumed);
         assert_eq!(decode_done(&encode_done(42)).unwrap(), 42);
         assert!(Hello::decode(&[0u8; 3]).is_err());
         assert!(HelloAck::decode(&[]).is_err());

@@ -70,6 +70,13 @@ pub enum TransportError {
     Closed,
     /// Waited longer than the configured round timeout for a peer.
     Timeout(String),
+    /// The process was killed at a scheduled crash point (simulation-
+    /// injected; the supervisor's cue to restart-and-resume from the
+    /// last checkpoint). Carries the round the kill fired at.
+    Killed(u32),
+    /// A durable checkpoint could not be written or restored
+    /// ([`crate::persist`]).
+    Persist(crate::persist::PersistError),
 }
 
 impl fmt::Display for TransportError {
@@ -87,6 +94,8 @@ impl fmt::Display for TransportError {
             }
             TransportError::Closed => write!(f, "endpoint closed"),
             TransportError::Timeout(m) => write!(f, "timed out: {m}"),
+            TransportError::Killed(r) => write!(f, "killed at round {r} (scheduled crash)"),
+            TransportError::Persist(e) => write!(f, "checkpoint: {e}"),
         }
     }
 }
@@ -96,6 +105,12 @@ impl std::error::Error for TransportError {}
 impl From<io::Error> for TransportError {
     fn from(e: io::Error) -> Self {
         TransportError::Io(e)
+    }
+}
+
+impl From<crate::persist::PersistError> for TransportError {
+    fn from(e: crate::persist::PersistError) -> Self {
+        TransportError::Persist(e)
     }
 }
 
@@ -272,5 +287,10 @@ mod tests {
         assert!(!TransportError::Rejected("x".into()).is_retryable());
         assert!(!TransportError::Protocol("x".into()).is_retryable());
         assert!(!TransportError::VersionMismatch { ours: 1, theirs: 2 }.is_retryable());
+        // a scheduled kill must surface to the supervisor, not be retried
+        // away inside the session
+        assert!(!TransportError::Killed(3).is_retryable());
+        // a damaged checkpoint is deterministic: retrying cannot help
+        assert!(!TransportError::Persist(crate::persist::PersistError::Truncated).is_retryable());
     }
 }

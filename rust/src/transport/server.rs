@@ -33,8 +33,9 @@ use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::trainer::TrainConfig;
 use crate::model::TensorLayout;
 use crate::netsim::NetSim;
+use crate::persist::{CachedReply, CheckpointStore, PersistError, ServerSnapshot};
 use crate::simnet::clock::{Clock, RealClock};
-use crate::trace::Event;
+use crate::trace::{Event, SERVER};
 use crate::transport::frame::{
     self, encode_done, encode_error, FrameBuf, FrameKind, Hello, HelloAck,
 };
@@ -84,6 +85,10 @@ struct Shared {
     clients: u32,
     n_params: u64,
     cfg_digest: u64,
+    /// The checkpoint round this server resumed from, or
+    /// [`HelloAck::NO_RESUME`] on a fresh start — advertised in every
+    /// handshake so resumed clients can sanity-check their own state.
+    resume_round: u32,
 }
 
 /// Accept loop + synchronous round aggregation over any [`Acceptor`].
@@ -91,6 +96,7 @@ pub struct FederatedServer {
     cfg: TrainConfig,
     layout: TensorLayout,
     initial: Vec<f32>,
+    kill_at: Option<u32>,
 }
 
 impl FederatedServer {
@@ -98,7 +104,16 @@ impl FederatedServer {
     /// clients' `init_params(cfg.seed)` for bit-identity).
     pub fn new(cfg: TrainConfig, layout: TensorLayout, initial: Vec<f32>) -> FederatedServer {
         assert_eq!(initial.len(), layout.total, "initial params length mismatch");
-        FederatedServer { cfg, layout, initial }
+        FederatedServer { cfg, layout, initial, kill_at: None }
+    }
+
+    /// Schedule a simulated crash: the round loop returns
+    /// [`TransportError::Killed`] at the top of `round`, without
+    /// snapshotting or notifying clients — exactly what a `SIGKILL` at
+    /// that point leaves behind. The supervisor restarts a fresh server
+    /// which resumes from the last durable barrier.
+    pub fn kill_at(&mut self, round: u32) {
+        self.kill_at = Some(round);
     }
 
     /// Run the full federated training: accept `cfg.clients` sessions,
@@ -122,12 +137,28 @@ impl FederatedServer {
         acceptor: Arc<dyn Acceptor>,
         clock: Arc<dyn Clock>,
     ) -> Result<FederatedResult, TransportError> {
+        // open the checkpoint store and decode the newest generation
+        // *before* admitting anyone: every handshake advertises the
+        // resume round, and a damaged snapshot must fail typed up front
+        let store = match &self.cfg.checkpoint.dir {
+            Some(d) => Some(CheckpointStore::open(d.as_str(), self.cfg.checkpoint.keep)?),
+            None => None,
+        };
+        let resumed: Option<ServerSnapshot> = if self.cfg.checkpoint.resume {
+            match &store {
+                Some(s) => s.load_latest_server(config_digest(&self.cfg))?,
+                None => None,
+            }
+        } else {
+            None
+        };
         let shared = Arc::new(Shared {
             stop: AtomicBool::new(false),
-            round: AtomicU32::new(0),
+            round: AtomicU32::new(resumed.as_ref().map(|s| s.round).unwrap_or(0)),
             clients: self.cfg.clients as u32,
             n_params: self.layout.total as u64,
             cfg_digest: config_digest(&self.cfg),
+            resume_round: resumed.as_ref().map(|s| s.round).unwrap_or(HelloAck::NO_RESUME),
         });
         let (tx, rx) = mpsc::channel::<Packet>();
 
@@ -163,7 +194,7 @@ impl FederatedServer {
             })
         };
 
-        let result = self.round_loop(&rx, &shared, &*clock);
+        let result = self.round_loop(&rx, &shared, &*clock, store.as_ref(), resumed);
         shared.stop.store(true, Ordering::SeqCst);
         acceptor.shutdown();
         let _ = accept_thread.join();
@@ -177,6 +208,8 @@ impl FederatedServer {
         rx: &mpsc::Receiver<Packet>,
         shared: &Shared,
         clock: &dyn Clock,
+        store: Option<&CheckpointStore>,
+        resumed: Option<ServerSnapshot>,
     ) -> Result<FederatedResult, TransportError> {
         let cfg = &self.cfg;
         let n = self.layout.total;
@@ -204,7 +237,48 @@ impl FederatedServer {
         let mut down_decoded = UpdateMsg::scratch();
         let mut cached: Option<Reply> = None;
 
-        for round in 0..rounds {
+        // resuming: overwrite the fresh state with the checkpointed
+        // values (weights, accounting, the cached previous broadcast for
+        // clients still waiting on it) and start at the snapshot barrier
+        let mut start_round = 0usize;
+        if let Some(snap) = resumed {
+            if snap.master.len() != n {
+                return Err(PersistError::Corrupt("snapshot parameter count mismatch").into());
+            }
+            start_round = snap.round as usize;
+            master.copy_from_slice(&snap.master);
+            comm.upstream_bits = snap.comm[0];
+            comm.messages = snap.comm[1];
+            comm.nonzeros = snap.comm[2];
+            comm.baseline_bits = snap.comm[3];
+            comm.frame_overhead_bits = snap.comm[4];
+            for (c, &(ub, db, ut, dt, ms)) in net.clients.iter_mut().zip(&snap.net_clients) {
+                c.up_bits = ub;
+                c.down_bits = db;
+                c.up_time_s = f64::from_bits(ut);
+                c.down_time_s = f64::from_bits(dt);
+                c.messages = ms;
+            }
+            net.total_comm_time_s = f64::from_bits(snap.net_total_time_bits);
+            cached = snap.cache.map(|c| Reply {
+                round: c.round,
+                bytes: Arc::new(c.bytes),
+                bits: c.bits,
+                done: c.done,
+            });
+            cfg.trace.emit(clock, || Event::Restore {
+                role: "server".into(),
+                client: SERVER,
+                round: start_round as u32,
+            });
+        }
+
+        for round in start_round..rounds {
+            if self.kill_at == Some(round as u32) {
+                // scheduled crash: drop everything on the floor like a
+                // real SIGKILL — no snapshot, no goodbye to clients
+                return Err(TransportError::Killed(round as u32));
+            }
             shared.round.store(round as u32, Ordering::SeqCst);
             cfg.trace.emit(clock, || Event::RoundStart { round: round as u32 });
 
@@ -311,6 +385,55 @@ impl FederatedServer {
             let last = round + 1 == rounds;
             let done = if last { Some(weight_digest(&master)) } else { None };
             let reply = Reply { round: round as u32, bytes, bits, done };
+            // --- durable checkpoint at the barrier, *before* any reply
+            // leaves: a crash on either side of the write is recoverable
+            // (before: clients re-send this round; after: the persisted
+            // cache answers their re-sends) ------------------------------
+            if let Some(store) = store {
+                if (round + 1) % cfg.checkpoint.every() == 0 || last {
+                    let snap = ServerSnapshot {
+                        round: (round + 1) as u32,
+                        master: master.clone(),
+                        comm: [
+                            comm.upstream_bits,
+                            comm.messages,
+                            comm.nonzeros,
+                            comm.baseline_bits,
+                            comm.frame_overhead_bits,
+                        ],
+                        net_clients: net
+                            .clients
+                            .iter()
+                            .map(|c| {
+                                (
+                                    c.up_bits,
+                                    c.down_bits,
+                                    c.up_time_s.to_bits(),
+                                    c.down_time_s.to_bits(),
+                                    c.messages,
+                                )
+                            })
+                            .collect(),
+                        net_total_time_bits: net.total_comm_time_s.to_bits(),
+                        ledger: vec![round as u32; nclients],
+                        cache: Some(CachedReply {
+                            round: reply.round,
+                            bytes: reply.bytes.as_ref().clone(),
+                            bits: reply.bits,
+                            done: reply.done,
+                        }),
+                    };
+                    let path = store.save_server(&snap, shared.cfg_digest)?;
+                    let sz = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                    cfg.trace.emit(clock, || Event::Snapshot {
+                        role: "server".into(),
+                        client: SERVER,
+                        round: (round + 1) as u32,
+                        bytes: sz,
+                    });
+                    cfg.trace.flush();
+                }
+            }
             for slot in slots.iter_mut() {
                 let pkt = slot.take().expect("slot filled above");
                 // a send failure means that handler died; its client will
@@ -378,7 +501,11 @@ fn handle_connection(
         let _ = conn.send(&buf);
         return;
     }
-    let ack = HelloAck { round: shared.round.load(Ordering::SeqCst), wire_version: WIRE_VERSION };
+    let ack = HelloAck {
+        round: shared.round.load(Ordering::SeqCst),
+        wire_version: WIRE_VERSION,
+        resume_round: shared.resume_round,
+    };
     let payload = ack.encode();
     buf.set(FrameKind::HelloAck, ack.round, hello.client, &payload, payload.len() as u64 * 8);
     if conn.send(&buf).is_err() {

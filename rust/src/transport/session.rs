@@ -31,6 +31,7 @@ use crate::coordinator::client::ClientState;
 use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::trainer::TrainConfig;
 use crate::coordinator::TrainBackend;
+use crate::persist::{CheckpointStore, PersistError};
 use crate::simnet::clock::{Clock, RealClock};
 use crate::trace::Event;
 use crate::transport::frame::{
@@ -75,6 +76,10 @@ struct Session<'a> {
     hello: Hello,
     conn: Option<Box<dyn Transport>>,
     retries: u32,
+    /// The round this client resumed from (0 = fresh start) — checked
+    /// against the server's handshake state to fail fast when the client
+    /// checkpoint is ahead of anything the server can serve.
+    resume_from: u32,
 }
 
 impl<'a> Session<'a> {
@@ -92,7 +97,7 @@ impl<'a> Session<'a> {
             wire_version: WIRE_VERSION,
             config_digest: config_digest(cfg),
         };
-        Session { connector, cfg, clock, hello, conn: None, retries: 0 }
+        Session { connector, cfg, clock, hello, conn: None, retries: 0, resume_from: 0 }
     }
 
     /// Connect + handshake if there is no live connection.
@@ -113,6 +118,22 @@ impl<'a> Session<'a> {
                         ours: WIRE_VERSION,
                         theirs: ack.wire_version,
                     });
+                }
+                // a client checkpoint ahead of the server is
+                // unrecoverable (the server would see a future round):
+                // fail fast and typed instead of burning the retry
+                // budget. `ack.round + 1` allows the benign race where
+                // the server has replied for `resume_from - 1` but not
+                // yet bumped its round counter.
+                if self.resume_from > ack.round.saturating_add(1) {
+                    return Err(TransportError::Rejected(format!(
+                        "client resumed at round {} but server is at round {}",
+                        self.resume_from, ack.round
+                    )));
+                }
+                if ack.resume_round != HelloAck::NO_RESUME {
+                    let (client, round) = (self.hello.client, ack.resume_round);
+                    self.cfg.trace.emit(self.clock, || Event::Resume { client, round });
                 }
             }
             FrameKind::Error => {
@@ -252,11 +273,55 @@ pub fn run_client_with_clock<B: TrainBackend>(
     backend: &mut B,
     clock: &dyn Clock,
 ) -> Result<ClientOutcome, TransportError> {
+    run_client_resumable(cfg, id, connector, backend, clock, None)
+}
+
+/// [`run_client_with_clock`] plus crash-recovery controls. Checkpoint
+/// persistence and resume follow `cfg.checkpoint` (each completed round
+/// snapshots the client's weights, optimizer, residual and RNG cursors;
+/// on resume the session continues from the newest generation instead of
+/// re-training from initialization). `kill_at` schedules a simulated
+/// crash — the session returns [`TransportError::Killed`] at the top of
+/// that round, leaving exactly what a `SIGKILL` would: the last durable
+/// snapshot and nothing else.
+pub fn run_client_resumable<B: TrainBackend>(
+    cfg: &TrainConfig,
+    id: usize,
+    connector: &dyn Connector,
+    backend: &mut B,
+    clock: &dyn Clock,
+    kill_at: Option<u32>,
+) -> Result<ClientOutcome, TransportError> {
     let n = backend.n_params();
     let layout = backend.layout().clone();
     let opt_size = backend.opt_size();
     let mut master = backend.init_params(cfg.seed);
     let mut c = ClientState::for_config(cfg, id, n, opt_size);
+
+    let store = match &cfg.checkpoint.dir {
+        Some(d) => Some(CheckpointStore::open(d.as_str(), cfg.checkpoint.keep)?),
+        None => None,
+    };
+    let mut start_round = 0usize;
+    if cfg.checkpoint.resume {
+        if let Some(store) = &store {
+            if let Some(snap) = store.load_latest_client(id as u32, config_digest(cfg))? {
+                if snap.weights.len() != n {
+                    return Err(
+                        PersistError::Corrupt("snapshot parameter count mismatch").into()
+                    );
+                }
+                master.copy_from_slice(&snap.weights);
+                c.restore(&snap);
+                start_round = snap.round as usize;
+                cfg.trace.emit(clock, || Event::Restore {
+                    role: "client".into(),
+                    client: id as u32,
+                    round: snap.round,
+                });
+            }
+        }
+    }
 
     let gran = cfg.method.granularity;
     let sign_scale = cfg.method.sign_scale();
@@ -270,8 +335,14 @@ pub fn run_client_with_clock<B: TrainBackend>(
     let mut update = FrameBuf::default();
     let mut reply = FrameBuf::default();
     let mut session = Session::new(cfg, id, n, connector, clock);
+    session.resume_from = start_round as u32;
 
-    for round in 0..rounds {
+    for round in start_round..rounds {
+        if kill_at == Some(round as u32) {
+            // scheduled crash: no snapshot, no goodbye — the supervisor
+            // restarts a fresh session that resumes from the last barrier
+            return Err(TransportError::Killed(round as u32));
+        }
         let lr = cfg.lr.at(round * delay);
 
         // local training + compress + wire encode: the exact in-process
@@ -332,6 +403,25 @@ pub fn run_client_with_clock<B: TrainBackend>(
             .map_err(|e| TransportError::Protocol(format!("broadcast invalid: {e}")))?;
         down_decoded.densify_into(&layout, Granularity::Global, 1.0, &mut delta_rx);
         tensor::add_assign(&mut master, &delta_rx);
+
+        // --- durable checkpoint at the round barrier -------------------
+        if let Some(store) = &store {
+            if (round + 1) % cfg.checkpoint.every() == 0 || round + 1 == rounds {
+                let barrier = (round + 1) as u32;
+                let snap = c.snapshot(barrier, &master);
+                let path = store.save_client(&snap, session.hello.config_digest)?;
+                let sz = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                cfg.trace.emit(clock, || Event::Snapshot {
+                    role: "client".into(),
+                    client: id as u32,
+                    round: barrier,
+                    bytes: sz,
+                });
+                // a kill right after the barrier must still leave a
+                // readable trace up to the snapshot event
+                cfg.trace.flush();
+            }
+        }
     }
 
     let server_digest = session.read_done(&mut reply)?;

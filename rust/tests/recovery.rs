@@ -1,0 +1,381 @@
+//! Durable checkpoint & crash-recovery tests (ARCHITECTURE.md §8).
+//!
+//! The invariant under test, end to end: a run that crashes at any
+//! snapshot barrier — in-process trainer, federated server, or a client
+//! session — and resumes from disk produces weight digests
+//! **bit-identical** to the uninterrupted run, with `CommStats`/`NetSim`
+//! accounting reconciling exactly. Damaged snapshots (every single-byte
+//! truncation, every single-bit flip, config or version mismatches) must
+//! always fail with a typed [`PersistError`] — never a panic or a silent
+//! fresh start.
+//!
+//! Environment knobs (for CI matrices):
+//! - `SBC_RECOVERY_SEED`: base seed for the kill/restart sweep (default 1)
+//! - `SBC_RECOVERY_SWEEP`: number of schedules to sweep (default 50)
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use sbc::compression::registry::MethodConfig;
+use sbc::coordinator::schedule::LrSchedule;
+use sbc::coordinator::trainer::{CheckpointCfg, TrainConfig, TrainResult, Trainer};
+use sbc::persist::{
+    decode_client, decode_server, encode_client, encode_server, CheckpointStore, PersistError,
+};
+use sbc::sgd::NativeMlpBackend;
+use sbc::simnet::{
+    check_run, run_schedule_with_recovery, RecoverySchedule, SimConfig, SimProfile, Verdict,
+};
+use sbc::transport::config_digest;
+
+fn backend() -> NativeMlpBackend {
+    NativeMlpBackend::digits_small(4, 1)
+}
+
+/// A fresh, unique checkpoint directory under the system temp dir.
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sbc-recovery-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn train_cfg(method: MethodConfig, iterations: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new("mlp-small", method, iterations, LrSchedule::constant(0.1));
+    cfg.eval_every_rounds = 50;
+    cfg.eval_batches = 2;
+    cfg.parallelism = 1;
+    cfg.transport.retry_backoff = Duration::from_millis(2);
+    cfg.transport.read_timeout = Duration::from_millis(300);
+    cfg.transport.round_timeout = Duration::from_millis(600);
+    cfg
+}
+
+fn serial_oracle(cfg: &TrainConfig) -> TrainResult {
+    let mut cfg = cfg.clone();
+    cfg.checkpoint = CheckpointCfg::default();
+    let mut be = backend();
+    Trainer::new(&mut be, cfg).run()
+}
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Server snapshot rounds present in a checkpoint dir, ascending.
+fn server_rounds(dir: &Path) -> Vec<u32> {
+    let mut rounds: Vec<u32> = std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| {
+            let name = e.unwrap().file_name().to_string_lossy().into_owned();
+            let rest = name.strip_prefix("server-r")?.strip_suffix(".ckpt")?;
+            rest.parse().ok()
+        })
+        .collect();
+    rounds.sort_unstable();
+    rounds
+}
+
+/// In-process trainer: checkpoint every 2 rounds, delete the newer
+/// generations, resume from an *earlier* barrier — the re-run rounds are
+/// deterministic, so the final weights and every accounting field must
+/// be bit-identical to the uninterrupted oracle.
+#[test]
+fn trainer_resumes_bit_identical_from_any_barrier() {
+    let dir = tmpdir("trainer-barrier");
+    let mut cfg = train_cfg(MethodConfig::sbc(0.1, 4), 40); // 10 rounds
+    let oracle = serial_oracle(&cfg);
+
+    cfg.checkpoint = CheckpointCfg {
+        dir: Some(dir.to_string_lossy().into_owned()),
+        every_rounds: 2,
+        keep: 0,
+        resume: false,
+    };
+    let full = {
+        let mut be = backend();
+        Trainer::new(&mut be, cfg.clone()).run()
+    };
+    assert_eq!(full.final_params, oracle.final_params, "checkpointing must not change bits");
+
+    let rounds = server_rounds(&dir);
+    assert!(rounds.contains(&2) && rounds.contains(&10), "barriers every 2 rounds: {rounds:?}");
+    // crash "back in time": drop every generation newer than barrier 4
+    for &r in rounds.iter().filter(|&&r| r > 4) {
+        std::fs::remove_file(dir.join(format!("server-r{r:08}.ckpt"))).unwrap();
+        for c in 0..cfg.clients {
+            std::fs::remove_file(dir.join(format!("client{c:04}-r{r:08}.ckpt"))).unwrap();
+        }
+    }
+
+    cfg.checkpoint.resume = true;
+    let resumed = {
+        let mut be = backend();
+        Trainer::new(&mut be, cfg.clone()).resume().expect("resume from barrier 4")
+    };
+    assert_eq!(resumed.final_params, oracle.final_params, "resume must be bit-identical");
+    assert_eq!(resumed.comm.upstream_bits, oracle.comm.upstream_bits);
+    assert_eq!(resumed.comm.messages, oracle.comm.messages);
+    assert_eq!(resumed.comm.nonzeros, oracle.comm.nonzeros);
+    assert_eq!(resumed.comm.baseline_bits, oracle.comm.baseline_bits);
+    assert_eq!(resumed.comm.frame_overhead_bits, oracle.comm.frame_overhead_bits);
+    assert_eq!(
+        resumed.net.total_comm_time_s.to_bits(),
+        oracle.net.total_comm_time_s.to_bits(),
+        "virtual comm time must reconcile exactly"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Every `MethodConfig` preset: run a short checkpointed training, pick
+/// a (seeded-random) barrier, and require decode→re-encode to reproduce
+/// the on-disk snapshot byte-for-byte, for the server and every client.
+#[test]
+fn every_preset_snapshot_roundtrips_bit_identical() {
+    let presets: Vec<(&str, MethodConfig)> = vec![
+        ("baseline", MethodConfig::baseline()),
+        ("fedavg", MethodConfig::fedavg(10)),
+        ("sbc1", MethodConfig::sbc1()),
+        ("sbc2", MethodConfig::sbc2()),
+        ("sbc3", MethodConfig::sbc3()),
+        ("signsgd", MethodConfig::signsgd(1e-3)),
+        ("terngrad", MethodConfig::terngrad()),
+        ("qsgd", MethodConfig::qsgd(4)),
+        ("onebit", MethodConfig::onebit()),
+    ];
+    for (i, (name, method)) in presets.into_iter().enumerate() {
+        let dir = tmpdir(&format!("roundtrip-{name}"));
+        let iterations = method.delay * 3; // three rounds for every delay
+        let mut cfg = train_cfg(method, iterations);
+        cfg.checkpoint = CheckpointCfg {
+            dir: Some(dir.to_string_lossy().into_owned()),
+            every_rounds: 1,
+            keep: 0,
+            resume: false,
+        };
+        let mut be = backend();
+        let _ = Trainer::new(&mut be, cfg.clone()).run();
+        let digest = config_digest(&cfg);
+
+        let rounds = server_rounds(&dir);
+        assert!(!rounds.is_empty(), "{name}: no snapshots written");
+        // a seeded-"random" barrier, different per preset, stable in CI
+        let r = rounds[(i * 2654435761) % rounds.len()];
+
+        let bytes = std::fs::read(dir.join(format!("server-r{r:08}.ckpt"))).unwrap();
+        let snap = decode_server(&bytes, digest).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(snap.round, r);
+        assert_eq!(encode_server(&snap, digest), bytes, "{name}: server snapshot not canonical");
+
+        for c in 0..cfg.clients {
+            let path = dir.join(format!("client{c:04}-r{r:08}.ckpt"));
+            let bytes = std::fs::read(path).unwrap();
+            let snap = decode_client(&bytes, c as u32, digest)
+                .unwrap_or_else(|e| panic!("{name} client {c}: {e}"));
+            assert_eq!((snap.client, snap.round), (c as u32, r));
+            assert_eq!(
+                encode_client(&snap, digest),
+                bytes,
+                "{name}: client snapshot not canonical"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Every single-byte truncation and every single-bit flip of real
+/// on-disk snapshots (server and client) must fail with a typed
+/// [`PersistError`] — the CRC guards every byte, the header guards the
+/// rest — and must never decode to a different snapshot.
+#[test]
+fn every_truncation_and_bitflip_fails_typed() {
+    let dir = tmpdir("damage");
+    let mut cfg = train_cfg(MethodConfig::sbc2(), 30);
+    cfg.checkpoint = CheckpointCfg {
+        dir: Some(dir.to_string_lossy().into_owned()),
+        every_rounds: 1,
+        keep: 1,
+        resume: false,
+    };
+    let mut be = backend();
+    let _ = Trainer::new(&mut be, cfg.clone()).run();
+    let digest = config_digest(&cfg);
+    let r = *server_rounds(&dir).last().unwrap();
+
+    let server_bytes = std::fs::read(dir.join(format!("server-r{r:08}.ckpt"))).unwrap();
+    let client_bytes = std::fs::read(dir.join(format!("client0000-r{r:08}.ckpt"))).unwrap();
+    assert!(decode_server(&server_bytes, digest).is_ok());
+    assert!(decode_client(&client_bytes, 0, digest).is_ok());
+
+    for len in 0..server_bytes.len() {
+        assert!(
+            decode_server(&server_bytes[..len], digest).is_err(),
+            "server snapshot truncated to {len} bytes must not decode"
+        );
+    }
+    for len in 0..client_bytes.len() {
+        assert!(
+            decode_client(&client_bytes[..len], 0, digest).is_err(),
+            "client snapshot truncated to {len} bytes must not decode"
+        );
+    }
+
+    let mut buf = server_bytes.clone();
+    for bit in 0..server_bytes.len() * 8 {
+        buf[bit / 8] ^= 1 << (bit % 8);
+        assert!(
+            decode_server(&buf, digest).is_err(),
+            "server snapshot with bit {bit} flipped must not decode"
+        );
+        buf[bit / 8] ^= 1 << (bit % 8);
+    }
+    let mut buf = client_bytes.clone();
+    for bit in 0..client_bytes.len() * 8 {
+        buf[bit / 8] ^= 1 << (bit % 8);
+        assert!(
+            decode_client(&buf, 0, digest).is_err(),
+            "client snapshot with bit {bit} flipped must not decode"
+        );
+        buf[bit / 8] ^= 1 << (bit % 8);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Config mismatches fail typed at every level: the raw decoder, the
+/// store, and `Trainer::resume` on a config whose training-relevant
+/// fields changed since the snapshot was written.
+#[test]
+fn config_mismatch_fails_typed_not_silent() {
+    let dir = tmpdir("mismatch");
+    let mut cfg = train_cfg(MethodConfig::sbc2(), 30);
+    cfg.checkpoint = CheckpointCfg {
+        dir: Some(dir.to_string_lossy().into_owned()),
+        every_rounds: 1,
+        keep: 0,
+        resume: true,
+    };
+    let mut be = backend();
+    let _ = Trainer::new(&mut be, cfg.clone()).run();
+
+    let digest = config_digest(&cfg);
+    let store = CheckpointStore::open(dir.clone(), 0).unwrap();
+    match store.load_latest_server(digest ^ 1) {
+        Err(PersistError::ConfigMismatch { expected, found }) => {
+            assert_eq!(expected, digest ^ 1);
+            assert_eq!(found, digest);
+        }
+        other => panic!("expected ConfigMismatch, got {other:?}"),
+    }
+
+    let mut other = cfg.clone();
+    other.seed ^= 1; // a training-relevant change
+    let mut be = backend();
+    match Trainer::new(&mut be, other).resume() {
+        Err(PersistError::ConfigMismatch { .. }) => {}
+        Err(e) => panic!("expected ConfigMismatch, got {e}"),
+        Ok(_) => panic!("resume with a changed config must fail typed, not run"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Clean fabric, scheduled kills: the server killed mid-run (twice),
+/// clients SIGKILLed at round boundaries, everything restarted from
+/// checkpoints — each schedule must complete **bit-identical** to the
+/// serial trainer with exact accounting, i.e. verdict `Completed`, not
+/// merely "no violation".
+#[test]
+fn clean_kill_restart_schedules_complete_bit_identical() {
+    let cfg = train_cfg(MethodConfig::sbc2(), 60); // 6 rounds
+    let serial = serial_oracle(&cfg);
+
+    let schedules: Vec<(&str, RecoverySchedule)> = vec![
+        ("no-kills", RecoverySchedule::none()),
+        ("server-mid", RecoverySchedule { server_kills: vec![3], client_kills: vec![] }),
+        ("server-twice", RecoverySchedule { server_kills: vec![2, 4], client_kills: vec![] }),
+        ("server-last", RecoverySchedule { server_kills: vec![5], client_kills: vec![] }),
+        ("client-mid", RecoverySchedule { server_kills: vec![], client_kills: vec![(1, 3)] }),
+        (
+            "clients-staggered",
+            RecoverySchedule {
+                server_kills: vec![],
+                client_kills: vec![(0, 1), (2, 3), (3, 5)],
+            },
+        ),
+        (
+            "server-and-clients",
+            RecoverySchedule { server_kills: vec![3], client_kills: vec![(0, 2), (1, 4)] },
+        ),
+    ];
+    for (name, rec) in schedules {
+        let dir = tmpdir(&format!("clean-{name}"));
+        let run = run_schedule_with_recovery(
+            &cfg,
+            &SimConfig::new(7),
+            &rec,
+            &dir.to_string_lossy(),
+            |_| backend(),
+        );
+        let verdict = check_run(&serial, &run);
+        assert_eq!(
+            verdict,
+            Verdict::Completed,
+            "schedule '{name}' must recover bit-identical; failure: {:?}\ntranscript:\n{}",
+            run.first_failure(),
+            run.transcript
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// The recovery sweep: ≥ 50 seeded schedules mixing light/harsh fault
+/// profiles *with* scheduled server and client kills. Every schedule
+/// must classify as Completed (bit-exact vs the serial trainer) or
+/// TypedFailure — never a Violation — and kills must demonstrably
+/// recover: some schedule with kills must still complete.
+#[test]
+fn kill_restart_sweep_never_violates() {
+    let cfg = train_cfg(MethodConfig::sbc2(), 30); // 3 rounds
+    let serial = serial_oracle(&cfg);
+    let base = env_u64("SBC_RECOVERY_SEED", 1);
+    let count = env_u64("SBC_RECOVERY_SWEEP", 50);
+
+    let (mut completed, mut failed) = (0u64, 0u64);
+    for i in 0..count {
+        let seed = base.wrapping_add(i);
+        let mut sim = SimConfig::new(seed);
+        sim.profile = if i % 2 == 0 { SimProfile::light() } else { SimProfile::harsh() };
+
+        let srv_round = 1 + (seed % 2) as u32;
+        let cli = (seed % 4) as usize;
+        let cli_round = 1 + ((seed / 2) % 2) as u32;
+        let rec = match seed % 3 {
+            0 => RecoverySchedule { server_kills: vec![srv_round], client_kills: vec![] },
+            1 => RecoverySchedule { server_kills: vec![], client_kills: vec![(cli, cli_round)] },
+            _ => RecoverySchedule {
+                server_kills: vec![srv_round],
+                client_kills: vec![(cli, cli_round)],
+            },
+        };
+
+        let dir = tmpdir(&format!("sweep-{seed}"));
+        let run =
+            run_schedule_with_recovery(&cfg, &sim, &rec, &dir.to_string_lossy(), |_| backend());
+        match check_run(&serial, &run) {
+            Verdict::Completed => completed += 1,
+            Verdict::TypedFailure(_) => failed += 1,
+            Verdict::Violation(why) => panic!(
+                "seed {seed}: INVARIANT VIOLATION under kill/restart: {why}\n\
+                 schedule: {rec:?}\ntranscript:\n{}",
+                run.transcript
+            ),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    eprintln!(
+        "recovery sweep: {count} schedules from seed {base}: \
+         {completed} completed despite kills, {failed} typed failures"
+    );
+    // every schedule in this sweep kills something, so any completion is
+    // a demonstrated crash-and-recover
+    assert!(completed > 0, "no killed-and-restarted schedule recovered to completion");
+}
