@@ -1,0 +1,138 @@
+//! The suppression grammar: `// sbc-lint: allow(<rule>) -- <reason>`.
+//!
+//! Suppressions are deliberately expensive to write and impossible to
+//! leave rotting: the reason is mandatory, a trailing comment suppresses
+//! only its own line, an own-line comment only the next line, and an
+//! allow that suppresses nothing is itself an error (`unused-allow`), as
+//! is a comment that invokes `sbc-lint:` but fails to parse
+//! (`bad-allow`). Neither of those two meta-findings can be suppressed.
+
+use crate::analysis::lexer::Comment;
+use crate::analysis::report::Finding;
+use crate::analysis::rules::RULE_IDS;
+
+/// One parsed suppression comment.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    /// 1-based line the comment sits on.
+    pub line: usize,
+    /// The rule id inside `allow(...)`.
+    pub rule: String,
+    /// The line whose findings this allow suppresses.
+    pub target: usize,
+}
+
+/// Extract suppressions from a file's line comments. Returns the parsed
+/// allows plus `bad-allow` findings for comments that invoke the
+/// `sbc-lint:` marker but do not match the grammar.
+pub fn collect(rel: &str, comments: &[Comment]) -> (Vec<Allow>, Vec<Finding>) {
+    let mut allows = Vec::new();
+    let mut bad = Vec::new();
+    for c in comments {
+        let Some(body) = c.text.strip_prefix("//") else { continue };
+        let Some(directive) = body.trim_start().strip_prefix("sbc-lint:") else { continue };
+        let directive = directive.trim();
+        let parsed = directive
+            .strip_prefix("allow(")
+            .and_then(|rest| rest.split_once(')'))
+            .and_then(|(rule, rest)| {
+                let rest = rest.trim_start();
+                let reason = rest.strip_prefix("--")?.trim();
+                (!reason.is_empty() && RULE_IDS.contains(&rule.trim())).then(|| rule.trim())
+            });
+        match parsed {
+            Some(rule) => allows.push(Allow {
+                line: c.line,
+                rule: rule.to_string(),
+                target: if c.own_line { c.line + 1 } else { c.line },
+            }),
+            None => bad.push(Finding {
+                file: rel.to_string(),
+                line: c.line,
+                rule: "bad-allow".to_string(),
+                message: "malformed suppression: expected \
+                          `// sbc-lint: allow(<rule>) -- <reason>`"
+                    .to_string(),
+            }),
+        }
+    }
+    (allows, bad)
+}
+
+/// Apply `allows` to `findings`: drop every finding an allow covers, and
+/// emit an `unused-allow` finding for each allow that covered nothing.
+pub fn apply(rel: &str, allows: &[Allow], findings: Vec<Finding>) -> Vec<Finding> {
+    let mut used = vec![false; allows.len()];
+    let mut out: Vec<Finding> = Vec::new();
+    for f in findings {
+        let mut suppressed = false;
+        for (k, a) in allows.iter().enumerate() {
+            if a.rule == f.rule && a.target == f.line {
+                used[k] = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            out.push(f);
+        }
+    }
+    for (k, a) in allows.iter().enumerate() {
+        if !used[k] {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: a.line,
+                rule: "unused-allow".to_string(),
+                message: format!("allow({}) suppresses nothing on line {}", a.rule, a.target),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    #[test]
+    fn own_line_targets_next_line_trailing_its_own() {
+        let src = "// sbc-lint: allow(no-panic) -- reason\nx();\n\
+                   y(); // sbc-lint: allow(determinism) -- why\n";
+        let lx = lex(src);
+        let (allows, bad) = collect("f.rs", &lx.comments);
+        assert!(bad.is_empty());
+        assert_eq!(allows.len(), 2);
+        assert_eq!((allows[0].line, allows[0].target), (1, 2));
+        assert_eq!((allows[1].line, allows[1].target), (3, 3));
+    }
+
+    #[test]
+    fn malformed_and_unknown_rule_are_bad_allow() {
+        let src = "// sbc-lint: allow(no-panic)\n\
+                   // sbc-lint: allow(nope) -- reason\n\
+                   // sbc-lint: please\n";
+        let lx = lex(src);
+        let (allows, bad) = collect("f.rs", &lx.comments);
+        assert!(allows.is_empty());
+        assert_eq!(bad.len(), 3);
+        assert!(bad.iter().all(|f| f.rule == "bad-allow"));
+    }
+
+    #[test]
+    fn unused_allow_is_flagged_used_allow_suppresses() {
+        let allows = vec![
+            Allow { line: 1, rule: "no-panic".to_string(), target: 2 },
+            Allow { line: 5, rule: "no-panic".to_string(), target: 6 },
+        ];
+        let findings = vec![Finding {
+            file: "f.rs".to_string(),
+            line: 2,
+            rule: "no-panic".to_string(),
+            message: "x".to_string(),
+        }];
+        let out = apply("f.rs", &allows, findings);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "unused-allow");
+        assert_eq!(out[0].line, 5);
+    }
+}

@@ -1,0 +1,440 @@
+//! A minimal token-level lexer for Rust source.
+//!
+//! This is not a parser: it produces a flat token stream that is just
+//! structured enough for [`crate::analysis::rules`] to pattern-match
+//! reliably. What it *must* get right — and what a grep gate cannot — is
+//! masking: string literals (plain, raw, byte, byte-raw), character
+//! literals (including the `'a'` vs `'a` lifetime ambiguity), line and
+//! nested block comments, and numeric literals are consumed as single
+//! tokens, so `"unwrap"` inside a string or a doc comment can never
+//! trigger a rule. Line comments are additionally surfaced to the caller
+//! because the suppression grammar ([`crate::analysis::allow`]) lives in
+//! them.
+
+/// Kinds of lexical tokens [`lex`] produces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword; a raw identifier `r#ident` yields `ident`.
+    Ident,
+    /// String literal: plain, raw, byte or byte-raw, quotes included.
+    Str,
+    /// Character or byte-character literal, quotes included.
+    Char,
+    /// Lifetime such as `'a` or `'static`.
+    Lifetime,
+    /// Integer or float literal, radix prefix and suffix included.
+    Num,
+    /// A single punctuation character.
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    /// What kind of token this is.
+    pub kind: TokKind,
+    /// The token's source text (see [`TokKind`] for what is included).
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: usize,
+}
+
+/// One `//` line comment. Block comments are consumed but not surfaced:
+/// the suppression grammar is line-comment only.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    /// 1-based line the comment sits on.
+    pub line: usize,
+    /// Full comment text including the leading `//`.
+    pub text: String,
+    /// True when no code token precedes the comment on its line — an
+    /// own-line comment suppresses the *next* line, a trailing comment
+    /// its own.
+    pub own_line: bool,
+}
+
+/// Lexer output: the token stream plus the line comments.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    /// All code tokens in source order.
+    pub toks: Vec<Tok>,
+    /// All line comments in source order.
+    pub comments: Vec<Comment>,
+}
+
+fn find_close(s: &[char], from: usize, pat: &[char]) -> Option<usize> {
+    if pat.is_empty() || s.len() < pat.len() {
+        return None;
+    }
+    (from..=s.len() - pat.len()).find(|&k| s[k..k + pat.len()] == *pat)
+}
+
+fn collect_text(s: &[char], a: usize, b: usize) -> String {
+    s[a.min(s.len())..b.min(s.len())].iter().collect()
+}
+
+/// Tokenize `src`. The lexer never fails: malformed input (unterminated
+/// literals, stray bytes) degrades to best-effort tokens, which is the
+/// right behavior for a linter that must not crash on the tree it lints.
+pub fn lex(src: &str) -> Lexed {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut line_has_code = false;
+    while i < n {
+        let c = s[i];
+        let peek = |k: usize| if i + k < n { s[i + k] } else { '\0' };
+        if c == '\n' {
+            line += 1;
+            line_has_code = false;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && peek(1) == '/' {
+            let mut j = i;
+            while j < n && s[j] != '\n' {
+                j += 1;
+            }
+            out.comments.push(Comment {
+                line,
+                text: collect_text(&s, i, j),
+                own_line: !line_has_code,
+            });
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && peek(1) == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if s[j] == '/' && j + 1 < n && s[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if s[j] == '*' && j + 1 < n && s[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if s[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // raw string r"..." / r#"..."# and raw identifier r#ident
+        if c == 'r' && (peek(1) == '"' || peek(1) == '#') {
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && s[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && s[j] == '"' {
+                j += 1;
+                let mut close: Vec<char> = vec!['"'];
+                close.resize(1 + hashes, '#');
+                let k = match find_close(&s, j, &close) {
+                    Some(k) => k + close.len(),
+                    None => n,
+                };
+                let start_line = line;
+                line += s[i..k].iter().filter(|&&ch| ch == '\n').count();
+                out.toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: collect_text(&s, i, k),
+                    line: start_line,
+                });
+                line_has_code = true;
+                i = k;
+                continue;
+            }
+            if hashes == 1 && j < n && (s[j].is_alphabetic() || s[j] == '_') {
+                let mut k = j;
+                while k < n && (s[k].is_alphanumeric() || s[k] == '_') {
+                    k += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: collect_text(&s, j, k),
+                    line,
+                });
+                line_has_code = true;
+                i = k;
+                continue;
+            }
+            // fall through: `r` is an ordinary identifier start
+        }
+        // byte-char literal b'x'
+        if c == 'b' && peek(1) == '\'' {
+            let mut j = if peek(2) == '\\' { i + 4 } else { i + 3 };
+            while j < n && s[j] != '\'' {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Char,
+                text: collect_text(&s, i, j + 1),
+                line,
+            });
+            line_has_code = true;
+            i = j + 1;
+            continue;
+        }
+        // byte string b"..." and byte-raw string br"..." / br#"..."#
+        if c == 'b' && (peek(1) == '"' || (peek(1) == 'r' && (peek(2) == '"' || peek(2) == '#'))) {
+            if peek(1) == '"' {
+                let start_line = line;
+                let mut j = i + 2;
+                while j < n && s[j] != '"' {
+                    if s[j] == '\\' {
+                        j += 1;
+                    }
+                    if j < n && s[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: collect_text(&s, i, j + 1),
+                    line: start_line,
+                });
+                line_has_code = true;
+                i = j + 1;
+                continue;
+            }
+            let mut j = i + 2;
+            let mut hashes = 0usize;
+            while j < n && s[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            j += 1; // opening quote
+            let mut close: Vec<char> = vec!['"'];
+            close.resize(1 + hashes, '#');
+            let k = match find_close(&s, j, &close) {
+                Some(k) => k + close.len(),
+                None => n,
+            };
+            let start_line = line;
+            line += s[i..k.min(n)].iter().filter(|&&ch| ch == '\n').count();
+            out.toks.push(Tok {
+                kind: TokKind::Str,
+                text: collect_text(&s, i, k),
+                line: start_line,
+            });
+            line_has_code = true;
+            i = k;
+            continue;
+        }
+        // plain string
+        if c == '"' {
+            let start_line = line;
+            let mut j = i + 1;
+            while j < n && s[j] != '"' {
+                if s[j] == '\\' {
+                    j += 1;
+                }
+                if j < n && s[j] == '\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Str,
+                text: collect_text(&s, i, j + 1),
+                line: start_line,
+            });
+            line_has_code = true;
+            i = j + 1;
+            continue;
+        }
+        // char literal or lifetime
+        if c == '\'' {
+            let nc = peek(1);
+            if nc == '\\' {
+                let mut j = i + 3;
+                while j < n && s[j] != '\'' {
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: collect_text(&s, i, j + 1),
+                    line,
+                });
+                line_has_code = true;
+                i = j + 1;
+                continue;
+            }
+            if nc.is_alphabetic() || nc == '_' {
+                if peek(2) == '\'' {
+                    out.toks.push(Tok {
+                        kind: TokKind::Char,
+                        text: collect_text(&s, i, i + 3),
+                        line,
+                    });
+                    line_has_code = true;
+                    i += 3;
+                    continue;
+                }
+                let mut j = i + 1;
+                while j < n && (s[j].is_alphanumeric() || s[j] == '_') {
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: collect_text(&s, i, j),
+                    line,
+                });
+                line_has_code = true;
+                i = j;
+                continue;
+            }
+            // char literal holding punctuation, e.g. '(' or ' '
+            let mut j = i + 1;
+            while j < n && s[j] != '\'' {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Char,
+                text: collect_text(&s, i, j + 1),
+                line,
+            });
+            line_has_code = true;
+            i = j + 1;
+            continue;
+        }
+        // numeric literal
+        if c.is_ascii_digit() {
+            let mut j = i;
+            let two: String = s[i..(i + 2).min(n)].iter().collect();
+            if two == "0x" || two == "0o" || two == "0b" {
+                j = i + 2;
+                while j < n && (s[j].is_alphanumeric() || s[j] == '_') {
+                    j += 1;
+                }
+            } else {
+                while j < n && (s[j].is_ascii_digit() || s[j] == '_') {
+                    j += 1;
+                }
+                if j + 1 < n && s[j] == '.' && s[j + 1].is_ascii_digit() {
+                    j += 1;
+                    while j < n && (s[j].is_ascii_digit() || s[j] == '_') {
+                        j += 1;
+                    }
+                }
+                if j + 1 < n
+                    && (s[j] == 'e' || s[j] == 'E')
+                    && (s[j + 1].is_ascii_digit() || s[j + 1] == '+' || s[j + 1] == '-')
+                {
+                    j += 2;
+                    while j < n && s[j].is_ascii_digit() {
+                        j += 1;
+                    }
+                }
+                // type suffix (u32, f64, ...)
+                while j < n && (s[j].is_alphanumeric() || s[j] == '_') {
+                    j += 1;
+                }
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Num,
+                text: collect_text(&s, i, j),
+                line,
+            });
+            line_has_code = true;
+            i = j;
+            continue;
+        }
+        // identifier / keyword
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (s[j].is_alphanumeric() || s[j] == '_') {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: collect_text(&s, i, j),
+                line,
+            });
+            line_has_code = true;
+            i = j;
+            continue;
+        }
+        out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        line_has_code = true;
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_masked() {
+        let src = r##"
+let a = "unwrap inside a string";
+// unwrap inside a comment
+/* unwrap /* nested */ still comment */
+let b = r#"unwrap in a raw string"#;
+let c = b"unwrap bytes";
+real_ident.other();
+"##;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|t| t == "unwrap"));
+        assert!(ids.iter().any(|t| t == "real_ident"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let lx = lex("fn f<'a>(x: &'a str) { let c = 'x'; let d = '\\n'; }");
+        let lifetimes: Vec<_> =
+            lx.toks.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2);
+        let chars: Vec<_> = lx.toks.iter().filter(|t| t.kind == TokKind::Char).collect();
+        assert_eq!(chars.len(), 2);
+    }
+
+    #[test]
+    fn lines_survive_multiline_strings() {
+        let src = "let a = \"x\ny\";\nafter();";
+        let lx = lex(src);
+        let after = lx.toks.iter().find(|t| t.text == "after").expect("after token");
+        assert_eq!(after.line, 3);
+    }
+
+    #[test]
+    fn line_comments_track_own_line() {
+        let src = "// own\nlet x = 1; // trailing\n";
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 2);
+        assert!(lx.comments[0].own_line);
+        assert!(!lx.comments[1].own_line);
+    }
+
+    #[test]
+    fn raw_identifiers_lex_bare() {
+        let ids = idents("let r#type = 1;");
+        assert!(ids.iter().any(|t| t == "type"));
+    }
+}

@@ -1,0 +1,104 @@
+//! `sbc-lint`: token-level static analysis for this repo's own
+//! invariants (see `ARCHITECTURE.md` §9).
+//!
+//! The repo's correctness story leans on a handful of mechanical
+//! invariants — decode paths never panic, wall clocks stay behind the
+//! [`crate::simnet::clock::Clock`] trait, digest inputs iterate
+//! deterministically, snapshots are fsynced before rename, and the
+//! frozen wire constants never drift — that `cargo test` can only probe
+//! pointwise and `grep` cannot check without false positives from
+//! strings and comments. This module walks a source tree with a real
+//! lexer ([`lexer`]), applies path-scoped rules ([`rules`]), honors
+//! explicit audited suppressions ([`allow`]), and reports
+//! `file:line rule message` diagnostics ([`report`]) — wired into CI as
+//! the `lint` job and runnable locally via `cargo run --bin sbc-lint`.
+
+pub mod allow;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+pub use report::{render_json, render_text, Finding};
+
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir)
+        .map_err(|e| format!("cannot read directory {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("cannot read entry in {}: {e}", dir.display()))?;
+        entries.push(entry.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            rust_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root`. Findings come back sorted by
+/// `(file, line, rule, message)`; an empty vector means the tree is
+/// clean. Errors are I/O-level only (unreadable root or file) — lint
+/// findings are never errors.
+pub fn lint_tree(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut files = Vec::new();
+    rust_files(root, &mut files)?;
+    let mut findings = Vec::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        findings.extend(lint_source(&rel, &src));
+    }
+    findings.sort();
+    Ok(findings)
+}
+
+/// Lint a single file's source text, `rel` being its `/`-separated path
+/// relative to the scan root (which is what rule scoping keys on).
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let lx = lexer::lex(src);
+    let raw = rules::check_file(rel, &lx);
+    let (allows, mut bad) = allow::collect(rel, &lx.comments);
+    let mut out = allow::apply(rel, &allows, raw);
+    out.append(&mut bad);
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_suppresses_and_registers_as_used() {
+        let src = "fn f() {\n\
+                   // sbc-lint: allow(no-panic) -- unit test of the suppression path\n\
+                   x.unwrap();\n\
+                   }\n";
+        assert!(lint_source("codec/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsuppressed_violation_and_unused_allow_both_surface() {
+        let src = "fn f() {\n\
+                   // sbc-lint: allow(determinism) -- wrong rule on purpose\n\
+                   x.unwrap();\n\
+                   }\n";
+        let f = lint_source("codec/x.rs", src);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert_eq!(f[0].rule, "unused-allow");
+        assert_eq!(f[1].rule, "no-panic");
+    }
+}

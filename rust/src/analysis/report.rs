@@ -1,0 +1,103 @@
+//! Diagnostic type and renderers (plain text and JSON).
+
+use std::fmt;
+
+/// One diagnostic: where, which rule, what.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    /// Path relative to the scan root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule id (one of [`crate::analysis::rules::RULE_IDS`], or the
+    /// meta-rules `bad-allow` / `unused-allow`).
+    pub rule: String,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} {} {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Render findings one per line as `file:line rule message`.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&f.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render findings as a JSON array (std-only, hand-rolled — stable field
+/// order `file`, `line`, `rule`, `message`).
+pub fn render_json(findings: &[Finding]) -> String {
+    let mut out = String::from("[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n  {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+            json_escape(&f.file),
+            f.line,
+            json_escape(&f.rule),
+            json_escape(&f.message)
+        ));
+    }
+    if !findings.is_empty() {
+        out.push('\n');
+    }
+    out.push_str("]\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Finding> {
+        vec![Finding {
+            file: "a/b.rs".to_string(),
+            line: 7,
+            rule: "no-panic".to_string(),
+            message: "`.unwrap()` in a no-panic zone".to_string(),
+        }]
+    }
+
+    #[test]
+    fn text_format_is_file_line_rule_message() {
+        assert_eq!(render_text(&sample()), "a/b.rs:7 no-panic `.unwrap()` in a no-panic zone\n");
+    }
+
+    #[test]
+    fn json_escapes_and_nests() {
+        let mut f = sample();
+        f[0].message = "say \"hi\"\\".to_string();
+        let j = render_json(&f);
+        assert!(j.contains("\\\"hi\\\""));
+        assert!(j.contains("\\\\\""));
+        assert!(j.starts_with('['));
+        assert!(j.trim_end().ends_with(']'));
+        assert_eq!(render_json(&[]), "[]\n");
+    }
+}

@@ -1,0 +1,407 @@
+//! The rule registry: what each `sbc-lint` rule checks and where.
+//!
+//! Every rule mechanizes an invariant the architecture document states
+//! in prose (`ARCHITECTURE.md` §9):
+//!
+//! * **no-panic** — inside `compression/`, `codec/`, `transport/` and
+//!   `persist/`, decode and durability paths must fail typed:
+//!   `.unwrap()` / `.expect()`, `panic!` / `todo!` / `unimplemented!`,
+//!   `partial_cmp` (NaN-propagating; use `total_cmp`) and
+//!   `get_unchecked` are forbidden. `unreachable!` is deliberately *not*
+//!   banned: the `TensorUpdate` slot accessors need a guarded impossible
+//!   arm the borrow checker cannot see through (NLL Problem Case #3),
+//!   and that is the sanctioned idiom for it.
+//! * **clock-discipline** — `Instant` / `SystemTime` / `UNIX_EPOCH` may
+//!   appear only in `simnet/clock.rs`; everything else threads a
+//!   `&dyn Clock` so simulated runs stay virtual-time-pure.
+//! * **determinism** — `HashMap` / `HashSet` are forbidden in
+//!   `persist/`, `coordinator/aggregation.rs` and `transport/mod.rs`
+//!   (the digest code): iteration order there feeds bytes or float
+//!   reductions that must be bit-identical across runs.
+//! * **durability** — in `persist/`, no bare `File::create` (snapshots
+//!   go through the create-new → write → `sync_all` → rename path) and
+//!   no `rename` without a preceding `sync_all` in the same function.
+//! * **wire-freeze** — the frozen wire constants (frame magic, format
+//!   versions, `TensorUpdate` tags) must each be defined exactly once,
+//!   in their registered file, with exactly the golden-test value.
+//!
+//! Code under `#[test]` / `#[cfg(test)]` is exempt from every rule
+//! except wire-freeze's duplicate-definition check (tests may not
+//! redefine frozen constants either — they pin them as literals in
+//! asserts instead).
+
+use crate::analysis::lexer::{Lexed, Tok, TokKind};
+use crate::analysis::report::Finding;
+
+/// Rule identifiers, in the order they are documented.
+pub const RULE_IDS: &[&str] =
+    &["no-panic", "clock-discipline", "determinism", "durability", "wire-freeze"];
+
+/// Top-level directories (relative to the scan root) where the no-panic
+/// rule applies.
+const NO_PANIC_DIRS: &[&str] = &["compression", "codec", "transport", "persist"];
+
+/// Files (relative to the scan root) where the determinism rule applies,
+/// in addition to everything under `persist/`.
+const DETERMINISM_FILES: &[&str] = &["coordinator/aggregation.rs", "transport/mod.rs"];
+
+/// The frozen wire-constant registry: `(file, const name, value)`.
+/// These are the numbers the golden-bytes tests pin; changing any of
+/// them is a wire break and must update this table, the constant and
+/// the golden test together.
+pub const WIRE_CONSTS: &[(&str, &str, u64)] = &[
+    ("codec/message.rs", "MAGIC", 0x5BC0),
+    ("codec/message.rs", "WIRE_VERSION", 2),
+    ("codec/message.rs", "TAG_DENSE", 0),
+    ("codec/message.rs", "TAG_SPARSE_F32", 1),
+    ("codec/message.rs", "TAG_SPARSE_BINARY", 2),
+    ("codec/message.rs", "TAG_SIGN", 3),
+    ("codec/message.rs", "TAG_TERNARY", 4),
+    ("codec/message.rs", "TAG_QUANTIZED", 5),
+    ("codec/message.rs", "TAG_SIGN_MEANS", 6),
+    ("transport/frame.rs", "MAGIC", 0xFE5B),
+    ("transport/frame.rs", "PROTOCOL_VERSION", 1),
+    ("persist/format.rs", "MAGIC", 0x5342_434B),
+    ("persist/format.rs", "VERSION", 1),
+];
+
+/// Token index ranges (half-open) covered by `#[test]` functions or
+/// `#[cfg(test)]` items: the attribute, any stacked attributes after it,
+/// and the following item body up to its matching close brace (or `;`).
+fn test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        if !(toks[i].kind == TokKind::Punct
+            && toks[i].text == "#"
+            && i + 1 < n
+            && toks[i + 1].text == "[")
+        {
+            i += 1;
+            continue;
+        }
+        // collect the attribute's tokens up to the matching `]`
+        let mut depth = 0usize;
+        let mut j = i + 1;
+        let mut idents: Vec<&str> = Vec::new();
+        while j < n {
+            let t = &toks[j];
+            if t.kind == TokKind::Punct && t.text == "[" {
+                depth += 1;
+            } else if t.kind == TokKind::Punct && t.text == "]" {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if t.kind == TokKind::Ident {
+                idents.push(&t.text);
+            }
+            j += 1;
+        }
+        let is_test = idents == ["test"] || idents == ["cfg", "test"];
+        if !is_test {
+            i = j + 1;
+            continue;
+        }
+        // skip stacked attributes, then consume the item body
+        let mut m = j + 1;
+        while m < n {
+            let t = &toks[m];
+            if t.kind == TokKind::Punct && t.text == "#" && m + 1 < n && toks[m + 1].text == "[" {
+                let mut d2 = 0usize;
+                m += 1;
+                while m < n {
+                    if toks[m].kind == TokKind::Punct && toks[m].text == "[" {
+                        d2 += 1;
+                    } else if toks[m].kind == TokKind::Punct && toks[m].text == "]" {
+                        d2 -= 1;
+                        if d2 == 0 {
+                            break;
+                        }
+                    }
+                    m += 1;
+                }
+                m += 1;
+                continue;
+            }
+            if t.kind == TokKind::Punct && t.text == ";" {
+                m += 1;
+                break;
+            }
+            if t.kind == TokKind::Punct && t.text == "{" {
+                let mut d2 = 1usize;
+                m += 1;
+                while m < n && d2 > 0 {
+                    if toks[m].kind == TokKind::Punct && toks[m].text == "{" {
+                        d2 += 1;
+                    } else if toks[m].kind == TokKind::Punct && toks[m].text == "}" {
+                        d2 -= 1;
+                    }
+                    m += 1;
+                }
+                break;
+            }
+            m += 1;
+        }
+        spans.push((i, m));
+        i = m;
+    }
+    spans
+}
+
+fn in_spans(spans: &[(usize, usize)], idx: usize) -> bool {
+    spans.iter().any(|&(a, b)| a <= idx && idx < b)
+}
+
+/// Parse a Rust integer literal (`23`, `0x5BC0`, `0x5342_434B`, with or
+/// without a type suffix) to its value. Returns `None` for floats or
+/// anything unparseable.
+fn parse_int(text: &str) -> Option<u64> {
+    let t: String = text.chars().filter(|&c| c != '_').collect();
+    let (radix, digits) = if let Some(rest) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X"))
+    {
+        (16, rest)
+    } else if let Some(rest) = t.strip_prefix("0o") {
+        (8, rest)
+    } else if let Some(rest) = t.strip_prefix("0b") {
+        (2, rest)
+    } else {
+        (10, t.as_str())
+    };
+    let valid: String = digits.chars().take_while(|c| c.is_digit(radix)).collect();
+    if valid.is_empty() {
+        return None;
+    }
+    u64::from_str_radix(&valid, radix).ok()
+}
+
+/// Run every rule whose scope covers `rel` (a `/`-separated path
+/// relative to the scan root) over the lexed file. Returns raw findings;
+/// the caller applies suppression comments
+/// ([`crate::analysis::allow::apply`]) afterwards.
+pub fn check_file(rel: &str, lx: &Lexed) -> Vec<Finding> {
+    let toks = &lx.toks;
+    let n = toks.len();
+    let spans = test_spans(toks);
+    let top = rel.split('/').next().unwrap_or("");
+    let no_panic = NO_PANIC_DIRS.contains(&top);
+    let determinism = top == "persist" || DETERMINISM_FILES.contains(&rel);
+    let clock = rel != "simnet/clock.rs";
+    let durability = top == "persist";
+
+    let mut out = Vec::new();
+    let mut push = |line: usize, rule: &'static str, message: String| {
+        out.push(Finding { file: rel.to_string(), line, rule: rule.to_string(), message });
+    };
+
+    let mut last_fn: isize = -1;
+    let mut last_sync: isize = -1;
+    // wire-freeze: definitions seen in this file, as (name, line, value)
+    let mut const_defs: Vec<(&str, usize, Option<u64>)> = Vec::new();
+
+    for idx in 0..n {
+        let t = &toks[idx];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let word = t.text.as_str();
+        let test = in_spans(&spans, idx);
+        let prev_is = |p: &str| {
+            idx > 0 && toks[idx - 1].kind == TokKind::Punct && toks[idx - 1].text == p
+        };
+        let next_is = |p: &str| {
+            idx + 1 < n && toks[idx + 1].kind == TokKind::Punct && toks[idx + 1].text == p
+        };
+        if word == "fn" {
+            last_fn = idx as isize;
+        }
+        if word == "sync_all" {
+            last_sync = idx as isize;
+        }
+        if word == "const" && idx + 1 < n && toks[idx + 1].kind == TokKind::Ident {
+            let name = toks[idx + 1].text.as_str();
+            if let Some(&(_, w, _)) = WIRE_CONSTS.iter().find(|&&(_, w, _)| w == name) {
+                // scan to `=` then the literal, stopping at `;`
+                let mut value = None;
+                let mut m = idx + 2;
+                while m < n && toks[m].text != ";" {
+                    if toks[m].kind == TokKind::Punct && toks[m].text == "=" {
+                        if m + 1 < n && toks[m + 1].kind == TokKind::Num {
+                            value = parse_int(&toks[m + 1].text);
+                        }
+                        break;
+                    }
+                    m += 1;
+                }
+                const_defs.push((w, toks[idx + 1].line, value));
+            }
+        }
+        if no_panic && !test {
+            if (word == "unwrap" || word == "expect") && prev_is(".") {
+                push(t.line, "no-panic", format!("`.{word}()` in a no-panic zone"));
+            }
+            if (word == "panic" || word == "todo" || word == "unimplemented") && next_is("!") {
+                push(t.line, "no-panic", format!("`{word}!` in a no-panic zone"));
+            }
+            if word == "partial_cmp" {
+                push(
+                    t.line,
+                    "no-panic",
+                    "`partial_cmp` in a no-panic zone: use `total_cmp`".to_string(),
+                );
+            }
+            if word == "get_unchecked" || word == "get_unchecked_mut" {
+                push(t.line, "no-panic", format!("`{word}` in a no-panic zone"));
+            }
+        }
+        if clock && !test && (word == "Instant" || word == "SystemTime" || word == "UNIX_EPOCH") {
+            push(
+                t.line,
+                "clock-discipline",
+                format!("`{word}` outside simnet/clock.rs: thread a `&dyn Clock`"),
+            );
+        }
+        if determinism && !test && (word == "HashMap" || word == "HashSet") {
+            push(
+                t.line,
+                "determinism",
+                format!("`{word}` in order-sensitive code: use BTreeMap/BTreeSet"),
+            );
+        }
+        if durability && !test {
+            if word == "create"
+                && prev_is(":")
+                && idx >= 3
+                && toks[idx - 3].kind == TokKind::Ident
+                && toks[idx - 3].text == "File"
+            {
+                push(
+                    t.line,
+                    "durability",
+                    "`File::create` in persist: use create-new + sync_all + rename".to_string(),
+                );
+            }
+            if word == "rename" && !(last_fn < last_sync && last_sync < idx as isize) {
+                push(
+                    t.line,
+                    "durability",
+                    "`rename` without a preceding `sync_all` in this function".to_string(),
+                );
+            }
+        }
+    }
+
+    // wire-freeze per-file verdicts
+    for &(file, name, expected) in WIRE_CONSTS {
+        if file != rel {
+            continue;
+        }
+        let defs: Vec<_> = const_defs.iter().filter(|&&(w, _, _)| w == name).collect();
+        match defs.as_slice() {
+            [] => push(
+                1,
+                "wire-freeze",
+                format!("frozen const `{name}` missing (registry expects 0x{expected:X})"),
+            ),
+            [one] => match one.2 {
+                Some(v) if v == expected => {}
+                Some(v) => push(
+                    one.1,
+                    "wire-freeze",
+                    format!("frozen const `{name}` = 0x{v:X}, registry expects 0x{expected:X}"),
+                ),
+                None => push(
+                    one.1,
+                    "wire-freeze",
+                    format!("frozen const `{name}` must be an integer literal"),
+                ),
+            },
+            many => {
+                for d in &many[1..] {
+                    push(
+                        d.1,
+                        "wire-freeze",
+                        format!("frozen const `{name}` defined more than once in this file"),
+                    );
+                }
+            }
+        }
+    }
+    // a watched name defined in a file the registry does not map it to
+    let registered_here: Vec<&str> = WIRE_CONSTS
+        .iter()
+        .filter(|&&(f, _, _)| f == rel)
+        .map(|&(_, w, _)| w)
+        .collect();
+    for &(name, line, _) in &const_defs {
+        if !registered_here.contains(&name) {
+            push(
+                line,
+                "wire-freeze",
+                format!("watched wire const `{name}` defined outside its registered home"),
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn findings(rel: &str, src: &str) -> Vec<Finding> {
+        check_file(rel, &lex(src))
+    }
+
+    #[test]
+    fn no_panic_scope_and_test_exemption() {
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n\
+                   #[cfg(test)]\nmod tests { fn g(x: Option<u8>) -> u8 { x.unwrap() } }\n";
+        let f = findings("transport/x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 1);
+        assert!(findings("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn clock_rule_spares_only_the_clock() {
+        let src = "use std::time::Instant;\n";
+        assert_eq!(findings("util/x.rs", src).len(), 1);
+        assert!(findings("simnet/clock.rs", src).is_empty());
+    }
+
+    #[test]
+    fn durability_needs_sync_before_rename() {
+        let bad = "fn save() { std::fs::rename(a, b); }\n";
+        let good = "fn save() { f.sync_all(); std::fs::rename(a, b); }\n";
+        assert_eq!(findings("persist/x.rs", bad).len(), 1);
+        assert!(findings("persist/x.rs", good).is_empty());
+        assert!(findings("codec/x.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn wire_freeze_value_mismatch_and_duplicate() {
+        let ok = "pub const MAGIC: u16 = 0xFE5B;\npub const PROTOCOL_VERSION: u8 = 1;\n";
+        assert!(findings("transport/frame.rs", ok).is_empty());
+        let wrong = "pub const MAGIC: u16 = 0xDEAD;\npub const PROTOCOL_VERSION: u8 = 1;\n";
+        let f = findings("transport/frame.rs", wrong);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("0xDEAD"));
+        let dup = format!("{ok}const MAGIC: u16 = 0xFE5B;\n");
+        let f = findings("transport/frame.rs", &dup);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("more than once"));
+    }
+
+    #[test]
+    fn wire_freeze_missing_and_unregistered() {
+        let f = findings("persist/format.rs", "pub const MAGIC: u32 = 0x5342_434B;\n");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("`VERSION` missing"));
+        let f = findings("netsim/x.rs", "const MAGIC: u8 = 3;\n");
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("outside its registered home"));
+    }
+}

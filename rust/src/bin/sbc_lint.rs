@@ -1,0 +1,61 @@
+//! `sbc-lint` — the repo's own static analyzer (see
+//! `ARCHITECTURE.md` §9 and [`sbc::analysis`]).
+//!
+//! ```text
+//! sbc-lint [--root DIR] [--json]
+//! ```
+//!
+//! Walks `DIR` (default `rust/src`) and prints one diagnostic per line
+//! as `file:line rule message`, or a JSON array with `--json`. Exit
+//! codes: 0 clean, 1 findings, 2 usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use sbc::analysis::{lint_tree, render_json, render_text};
+
+const USAGE: &str = "usage: sbc-lint [--root DIR] [--json]";
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from("rust/src");
+    let mut json = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("sbc-lint: --root needs a directory\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("sbc-lint: unknown argument `{other}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let findings = match lint_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("sbc-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if json {
+        print!("{}", render_json(&findings));
+    } else {
+        print!("{}", render_text(&findings));
+        eprintln!("sbc-lint: {} finding(s) in {}", findings.len(), root.display());
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

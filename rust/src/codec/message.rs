@@ -34,7 +34,18 @@ const MAGIC: u64 = 0x5BC0;
 /// transport handshake advertises it and the golden-bytes regression test
 /// pins the encoding against it.
 pub const WIRE_VERSION: u8 = 2;
-const VERSION: u64 = WIRE_VERSION as u64;
+
+// [`TensorUpdate`] wire tags (u4 on the wire). Frozen: the golden-bytes
+// test pins them, `sbc-lint`'s wire-freeze rule requires each to be
+// defined exactly once with exactly these values, and encode + decode
+// share these definitions so the two directions cannot drift.
+const TAG_DENSE: u64 = 0;
+const TAG_SPARSE_F32: u64 = 1;
+const TAG_SPARSE_BINARY: u64 = 2;
+const TAG_SIGN: u64 = 3;
+const TAG_TERNARY: u64 = 4;
+const TAG_QUANTIZED: u64 = 5;
+const TAG_SIGN_MEANS: u64 = 6;
 
 /// Position-list codec (ablation: ARCHITECTURE.md §Wire format).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -99,13 +110,13 @@ impl WireCodec {
 
 fn tensor_tag(t: &TensorUpdate) -> u64 {
     match t {
-        TensorUpdate::Dense(_) => 0,
-        TensorUpdate::SparseF32 { .. } => 1,
-        TensorUpdate::SparseBinary { .. } => 2,
-        TensorUpdate::Sign { .. } => 3,
-        TensorUpdate::Ternary { .. } => 4,
-        TensorUpdate::Quantized { .. } => 5,
-        TensorUpdate::SignMeans { .. } => 6,
+        TensorUpdate::Dense(_) => TAG_DENSE,
+        TensorUpdate::SparseF32 { .. } => TAG_SPARSE_F32,
+        TensorUpdate::SparseBinary { .. } => TAG_SPARSE_BINARY,
+        TensorUpdate::Sign { .. } => TAG_SIGN,
+        TensorUpdate::Ternary { .. } => TAG_TERNARY,
+        TensorUpdate::Quantized { .. } => TAG_QUANTIZED,
+        TensorUpdate::SignMeans { .. } => TAG_SIGN_MEANS,
     }
 }
 
@@ -248,7 +259,7 @@ fn bounded_count(r: &BitReader, n: u64, min_bits_per_elem: u64) -> Result<usize>
 fn decode_tensor_into(r: &mut BitReader, slot: &mut TensorUpdate) -> Result<()> {
     let tag = need(r.get_bits(4))?;
     match tag {
-        0 => {
+        TAG_DENSE => {
             let n = bounded_count(r, need(r.get_bits(32))?, 32)?;
             let v = slot.dense_slot();
             v.reserve(n);
@@ -256,7 +267,7 @@ fn decode_tensor_into(r: &mut BitReader, slot: &mut TensorUpdate) -> Result<()> 
                 v.push(need(r.get_f32())?);
             }
         }
-        1 => {
+        TAG_SPARSE_F32 => {
             let (idx, val) = slot.sparse_f32_slot();
             read_positions_with_n_into(r, idx)?;
             bounded_count(r, idx.len() as u64, 32)?;
@@ -265,13 +276,13 @@ fn decode_tensor_into(r: &mut BitReader, slot: &mut TensorUpdate) -> Result<()> 
                 val.push(need(r.get_f32())?);
             }
         }
-        2 => {
+        TAG_SPARSE_BINARY => {
             let (idx, mu, side_pos) = slot.sparse_binary_slot();
             read_positions_with_n_into(r, idx)?;
             *mu = need(r.get_f32())?;
             *side_pos = need(r.get_bit())?;
         }
-        3 => {
+        TAG_SIGN => {
             let n = bounded_count(r, need(r.get_bits(32))?, 1)?;
             let signs = slot.sign_slot();
             signs.reserve(n);
@@ -279,7 +290,7 @@ fn decode_tensor_into(r: &mut BitReader, slot: &mut TensorUpdate) -> Result<()> 
                 signs.push(need(r.get_bit())?);
             }
         }
-        4 => {
+        TAG_TERNARY => {
             let n = bounded_count(r, need(r.get_bits(32))?, 2)?;
             let (scale, vals) = slot.ternary_slot();
             *scale = need(r.get_f32())?;
@@ -293,7 +304,7 @@ fn decode_tensor_into(r: &mut BitReader, slot: &mut TensorUpdate) -> Result<()> 
                 });
             }
         }
-        5 => {
+        TAG_QUANTIZED => {
             let n = bounded_count(r, need(r.get_bits(32))?, 2)?;
             let (scale, levels, vals) = slot.quantized_slot();
             *scale = need(r.get_f32())?;
@@ -310,7 +321,7 @@ fn decode_tensor_into(r: &mut BitReader, slot: &mut TensorUpdate) -> Result<()> 
                 vals.push(if neg { (mag as i16).wrapping_neg() as i8 } else { mag as i8 });
             }
         }
-        6 => {
+        TAG_SIGN_MEANS => {
             let n = bounded_count(r, need(r.get_bits(32))?, 1)?;
             let (signs, mu_pos, mu_neg) = slot.sign_means_slot();
             *mu_pos = need(r.get_f32())?;
@@ -327,7 +338,7 @@ fn decode_tensor_into(r: &mut BitReader, slot: &mut TensorUpdate) -> Result<()> 
 
 fn write_message(w: &mut BitWriter, msg: &UpdateMsg, codec: PosCodec) {
     w.put_bits(MAGIC, 16);
-    w.put_bits(VERSION, 4);
+    w.put_bits(WIRE_VERSION as u64, 4);
     w.put_bits(msg.round as u64, 32);
     w.put_bits(msg.tensors.len() as u64, 16);
     for t in &msg.tensors {
@@ -355,10 +366,12 @@ pub fn decode_into(bytes: &[u8], bits: u64, out: &mut UpdateMsg) -> Result<()> {
         return Err(anyhow!("bad magic"));
     }
     let version = need(r.get_bits(4))?;
-    if version != VERSION {
+    if version != WIRE_VERSION as u64 {
         // v1 carried 1-bit SGD as Sign + Dense[2] pairs, which would
         // silently densify to wrong values under the v2 tensor set
-        return Err(anyhow!("unsupported wire version {version} (this build speaks {VERSION})"));
+        return Err(anyhow!(
+            "unsupported wire version {version} (this build speaks {WIRE_VERSION})"
+        ));
     }
     out.round = need(r.get_bits(32))? as u32;
     let ntensors = bounded_count(&r, need(r.get_bits(16))?, 4)?;

@@ -13,6 +13,7 @@ use crate::compression::quantize::Quantizer;
 use crate::compression::select::Selector;
 use crate::compression::{Granularity, TensorUpdate, UpdateMsg};
 use crate::model::TensorLayout;
+use crate::simnet::clock::Clock;
 
 /// A composed Select → Quantize pipeline over layout segments.
 pub struct Pipeline {
@@ -101,13 +102,15 @@ impl Pipeline {
     /// timings ([`crate::trace::Event::Stage`] vocabulary). Only the
     /// traced round path calls this; the untraced hot path keeps the
     /// timing-free [`Pipeline::compress_into`], so disabling tracing
-    /// removes every clock read.
+    /// removes every clock read. Time comes from the caller's [`Clock`]
+    /// so simulated runs observe virtual durations.
     pub fn compress_into_observed(
         &mut self,
         acc: &[f32],
         layout: &TensorLayout,
         round: u32,
         out: &mut UpdateMsg,
+        clock: &dyn Clock,
         observe: &mut dyn FnMut(&'static str, u64),
     ) {
         assert_eq!(acc.len(), layout.total, "update length must match layout");
@@ -120,12 +123,12 @@ impl Pipeline {
         let (mut select_ns, mut quantize_ns) = (0u64, 0u64);
         for i in 0..nseg {
             let x = &acc[self.granularity.segment(layout, i)];
-            let t0 = std::time::Instant::now();
+            let t0 = clock.now();
             let support = self.selector.select(x, &mut self.idx);
-            select_ns += t0.elapsed().as_nanos() as u64;
-            let t1 = std::time::Instant::now();
+            select_ns += clock.now().saturating_sub(t0).as_nanos() as u64;
+            let t1 = clock.now();
             self.quantizer.quantize(x, support, &self.idx, &mut out.tensors[i]);
-            quantize_ns += t1.elapsed().as_nanos() as u64;
+            quantize_ns += clock.now().saturating_sub(t1).as_nanos() as u64;
         }
         observe("select", select_ns);
         observe("quantize", quantize_ns);
@@ -164,12 +167,7 @@ pub fn compress_broadcast_into(delta: &[f32], round: u32, out: &mut UpdateMsg) {
     // sparse cost ≈ 48 bits/entry (32-bit value + ~16-bit position)
     let slot = &mut out.tensors[0];
     if nnz * 48 + 64 < 32 * delta.len() as u64 {
-        if !matches!(slot, TensorUpdate::SparseF32 { .. }) {
-            *slot = TensorUpdate::SparseF32 { idx: Vec::new(), val: Vec::new() };
-        }
-        let TensorUpdate::SparseF32 { idx, val } = slot else { unreachable!() };
-        idx.clear();
-        val.clear();
+        let (idx, val) = slot.sparse_f32_slot();
         for (i, &v) in delta.iter().enumerate() {
             if v != 0.0 {
                 idx.push(i as u32);
@@ -177,11 +175,7 @@ pub fn compress_broadcast_into(delta: &[f32], round: u32, out: &mut UpdateMsg) {
             }
         }
     } else {
-        if !matches!(slot, TensorUpdate::Dense(_)) {
-            *slot = TensorUpdate::Dense(Vec::new());
-        }
-        let TensorUpdate::Dense(v) = slot else { unreachable!() };
-        v.clear();
+        let v = slot.dense_slot();
         v.extend_from_slice(delta);
     }
 }
@@ -273,7 +267,8 @@ mod tests {
         let mut msg_b = UpdateMsg::scratch();
         plain.compress_into(&x, &layout, 2, &mut msg_a);
         let mut stages = Vec::new();
-        observed.compress_into_observed(&x, &layout, 2, &mut msg_b, &mut |s, _ns| {
+        let clock = crate::simnet::clock::RealClock::new();
+        observed.compress_into_observed(&x, &layout, 2, &mut msg_b, &clock, &mut |s, _ns| {
             stages.push(s)
         });
         assert_eq!(msg_a, msg_b);

@@ -99,6 +99,7 @@ impl Quantizer {
             (QuantizerCfg::Qsgd { levels }, Support::All) => self.qsgd(x, levels, out),
             (QuantizerCfg::SignMeans, Support::All) => sign_means(x, out),
             (cfg, Support::Sparse) => {
+                // sbc-lint: allow(no-panic) -- construction-time config validation
                 panic!("{cfg:?} is a dense quantizer; pair it with SelectorCfg::Dense")
             }
         }

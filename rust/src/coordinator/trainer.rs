@@ -32,7 +32,7 @@
 //! pooled path allocates one small job vector per round — worker-count
 //! entries, not parameter-sized.)
 
-use std::time::Instant;
+use std::time::Duration;
 
 use crate::codec::accounting::CommStats;
 use crate::codec::message::{self, PosCodec, WireCodec};
@@ -216,14 +216,17 @@ struct RoundCtx<'a> {
     majority_vote: bool,
     /// Whether stage timings are buffered into `ClientState::trace_buf`.
     trace_on: bool,
+    /// Time source for stage marks (always real time in-process; the
+    /// simulator drives its own [`crate::simnet::clock::SimClock`]).
+    clock: &'a dyn Clock,
 }
 
 /// Start a stage timing mark iff the round is traced — the untraced hot
 /// path never reads the clock.
 #[inline]
-fn mark(on: bool) -> Option<Instant> {
+fn mark(on: bool, clock: &dyn Clock) -> Option<Duration> {
     if on {
-        Some(Instant::now())
+        Some(clock.now())
     } else {
         None
     }
@@ -231,9 +234,14 @@ fn mark(on: bool) -> Option<Instant> {
 
 /// Close a [`mark`] into a buffered `(stage, nanos)` observation.
 #[inline]
-fn observe(buf: &mut Vec<(&'static str, u64)>, stage: &'static str, t0: Option<Instant>) {
+fn observe(
+    buf: &mut Vec<(&'static str, u64)>,
+    stage: &'static str,
+    t0: Option<Duration>,
+    clock: &dyn Clock,
+) {
     if let Some(t0) = t0 {
-        buf.push((stage, t0.elapsed().as_nanos() as u64));
+        buf.push((stage, clock.now().saturating_sub(t0).as_nanos() as u64));
     }
 }
 
@@ -245,10 +253,10 @@ fn server_stage(
     profile: &mut Option<StageProfileBuilder>,
     round: u32,
     stage: &'static str,
-    t0: Option<Instant>,
+    t0: Option<Duration>,
 ) {
     if let (Some(p), Some(t0)) = (profile.as_mut(), t0) {
-        let nanos = t0.elapsed().as_nanos() as u64;
+        let nanos = clock.now().saturating_sub(t0).as_nanos() as u64;
         p.observe(stage, nanos);
         trace.emit(clock, || Event::Stage {
             round,
@@ -299,16 +307,16 @@ fn run_client_round(
     acc: &mut [f32],
     local_steps: &mut dyn FnMut(&mut ClientState, &[f32]) -> (Vec<f32>, f32),
 ) {
-    let t_local = mark(ctx.trace_on);
+    let t_local = mark(ctx.trace_on, ctx.clock);
     let (w_new, loss) = {
         let _t = span("local_steps");
         local_steps(c, ctx.master)
     };
-    observe(&mut c.trace_buf, "local_steps", t_local);
+    observe(&mut c.trace_buf, "local_steps", t_local, ctx.clock);
     c.iterations += ctx.delay;
     {
         let _t = span("compress");
-        let t_compress = mark(ctx.trace_on);
+        let t_compress = mark(ctx.trace_on, ctx.clock);
         tensor::sub_into(acc, &w_new, ctx.master);
         c.residual.accumulate_into(acc);
         if ctx.trace_on {
@@ -317,12 +325,13 @@ fn run_client_round(
                 ctx.layout,
                 ctx.round,
                 &mut c.msg,
+                ctx.clock,
                 &mut |stage, nanos| c.trace_buf.push((stage, nanos)),
             );
         } else {
             c.pipeline.compress_into(acc, ctx.layout, ctx.round, &mut c.msg);
         }
-        observe(&mut c.trace_buf, "compress", t_compress);
+        observe(&mut c.trace_buf, "compress", t_compress, ctx.clock);
     }
     finish_client_round(ctx, c, acc, loss);
 }
@@ -336,16 +345,16 @@ fn run_client_round(
 fn finish_client_round(ctx: &RoundCtx, c: &mut ClientState, acc: &[f32], loss: f32) {
     let nnz: usize = c.msg.tensors.iter().map(|t| t.nonzeros()).sum();
     let bits = {
-        let t_encode = mark(ctx.trace_on);
+        let t_encode = mark(ctx.trace_on, ctx.clock);
         let (bytes, bits) = {
             let _t = span("encode");
             c.wire.encode(&c.msg)
         };
-        observe(&mut c.trace_buf, "encode", t_encode);
+        observe(&mut c.trace_buf, "encode", t_encode, ctx.clock);
         let _t = span("decode");
-        let t_decode = mark(ctx.trace_on);
+        let t_decode = mark(ctx.trace_on, ctx.clock);
         message::decode_into(bytes, bits, &mut c.decoded).expect("wire roundtrip failed");
-        observe(&mut c.trace_buf, "decode", t_decode);
+        observe(&mut c.trace_buf, "decode", t_decode, ctx.clock);
         bits
     };
     c.up_bits += bits;
@@ -355,9 +364,9 @@ fn finish_client_round(ctx: &RoundCtx, c: &mut ClientState, acc: &[f32], loss: f
 
     {
         let _t = span("densify");
-        let t_densify = mark(ctx.trace_on);
+        let t_densify = mark(ctx.trace_on, ctx.clock);
         c.decoded.densify_into(ctx.layout, ctx.densify_gran, ctx.sign_scale, &mut c.dense);
-        observe(&mut c.trace_buf, "densify", t_densify);
+        observe(&mut c.trace_buf, "densify", t_densify, ctx.clock);
     }
     c.residual.update(acc, &c.dense);
 
@@ -423,10 +432,11 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
         let n = self.backend.n_params();
         let layout = self.backend.layout().clone();
         let opt_size = self.backend.opt_size();
-        let started = Instant::now();
-        // monotonic timestamps for emitted events; tracing the in-process
-        // trainer always runs on wall time (simnet traces via SimClock)
+        // monotonic timestamps for emitted events and stage marks; the
+        // in-process trainer always runs on wall time (simnet traces via
+        // its own SimClock)
         let clock = RealClock::new();
+        let started = clock.now();
         let trace_on = cfg.trace.enabled();
         let mut profile = trace_on.then(StageProfileBuilder::new);
 
@@ -554,12 +564,13 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
                     momentum_masking: cfg.method.momentum_masking,
                     majority_vote,
                     trace_on,
+                    clock: &clock,
                 };
                 if workers.is_empty() && is_sbc_pjrt {
                     // serial-only: SBC through the AOT Pallas kernel
                     // graph, which is bound to the main backend
                     for c in clients.iter_mut() {
-                        let t_local = mark(trace_on);
+                        let t_local = mark(trace_on, &clock);
                         let (w_new, loss) = {
                             let _t = span("local_steps");
                             self.backend.local_steps(
@@ -572,7 +583,7 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
                                 &mut c.rng,
                             )
                         };
-                        observe(&mut c.trace_buf, "local_steps", t_local);
+                        observe(&mut c.trace_buf, "local_steps", t_local, &clock);
                         c.iterations += delay;
                         {
                             let _t = span("compress");
@@ -582,7 +593,7 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
                         let p = cfg.method.sbc_p().unwrap() as f32;
                         {
                             let _t = span("compress_pjrt");
-                            let t_pjrt = mark(trace_on);
+                            let t_pjrt = mark(trace_on, &clock);
                             let (dense, _thr, mu, side_pos) = self
                                 .backend
                                 .compress_pjrt(&acc, p)
@@ -596,7 +607,7 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
                             tensor::nonzero_indices_into(&dense, idx);
                             *mu_slot = mu.abs();
                             *side = side_pos;
-                            observe(&mut c.trace_buf, "compress_pjrt", t_pjrt);
+                            observe(&mut c.trace_buf, "compress_pjrt", t_pjrt, &clock);
                         }
                         finish_client_round(&ctx, c, &acc, loss);
                     }
@@ -679,7 +690,7 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
             // --- phase 2: sharded server aggregation --------------------
             {
                 let _t = span("aggregate");
-                let t_agg = mark(trace_on);
+                let t_agg = mark(trace_on, &clock);
                 aggregate_sharded(&ClientUpdates(&clients), agg_rule, &agg_pool, &mut delta);
                 server_stage(&cfg.trace, &clock, &mut profile, round as u32, "aggregate", t_agg);
             }
@@ -689,7 +700,7 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
             // down_bits is the measured broadcast size, not an estimate.
             let down_bits = {
                 let _t = span("encode_down");
-                let t_down = mark(trace_on);
+                let t_down = mark(trace_on, &clock);
                 compress_broadcast_into(&delta, round as u32, &mut down_msg);
                 let (bytes, bits) = down_wire.encode(&down_msg);
                 message::decode_into(bytes, bits, &mut down_decoded)
@@ -732,7 +743,7 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
             let last = round + 1 == rounds;
             if round % cfg.eval_every_rounds == 0 || last {
                 let _t = span("evaluate");
-                let t_eval = mark(trace_on);
+                let t_eval = mark(trace_on, &clock);
                 let ev = self.backend.evaluate(&master, cfg.eval_batches);
                 server_stage(&cfg.trace, &clock, &mut profile, round as u32, "evaluate", t_eval);
                 let metric = if self.backend.is_lm() { ev.loss.exp() } else { ev.metric };
@@ -817,7 +828,7 @@ impl<'a, B: TrainBackend> Trainer<'a, B> {
 
         log.compression = comm.compression_rate();
         log.final_metric = log.points.last().map(|p| p.metric).unwrap_or(f32::NAN);
-        log.wall_s = started.elapsed().as_secs_f64();
+        log.wall_s = clock.now().saturating_sub(started).as_secs_f64();
         let stage_profile = profile.map(|p| p.finish(rounds as u32));
         cfg.trace.flush();
         TrainResult { log, comm, net, final_params: master, stage_profile }

@@ -31,6 +31,7 @@
 
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod codec;
 pub mod compression;
 pub mod config;

@@ -24,6 +24,7 @@
 use std::fmt;
 
 use crate::transport::frame::crc32;
+use crate::util::bytes::{be_u16, be_u32, be_u64};
 
 /// Snapshot file magic (`b"SBCK"` big-endian).
 pub const MAGIC: u32 = 0x5342_434B;
@@ -241,11 +242,11 @@ impl<'a> Reader<'a> {
     }
 
     fn u32(&mut self) -> Result<u32, PersistError> {
-        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(be_u32(self.take(4)?, 0))
     }
 
     fn u64(&mut self) -> Result<u64, PersistError> {
-        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(be_u64(self.take(8)?, 0))
     }
 
     fn f32s(&mut self) -> Result<Vec<f32>, PersistError> {
@@ -306,19 +307,19 @@ fn check(bytes: &[u8]) -> Result<(Header, &[u8]), PersistError> {
     if bytes.len() < HEADER_BYTES {
         return Err(PersistError::Truncated);
     }
-    let magic = u32::from_be_bytes(bytes[0..4].try_into().unwrap());
+    let magic = be_u32(bytes, 0);
     if magic != MAGIC {
         return Err(PersistError::BadMagic);
     }
-    let version = u16::from_be_bytes(bytes[4..6].try_into().unwrap());
+    let version = be_u16(bytes, 4);
     if version != VERSION {
         return Err(PersistError::BadVersion(version));
     }
     let role = Role::from_tag(bytes[6]).ok_or(PersistError::Corrupt("unknown role tag"))?;
-    let client = u32::from_be_bytes(bytes[8..12].try_into().unwrap());
-    let config_digest = u64::from_be_bytes(bytes[12..20].try_into().unwrap());
-    let round = u32::from_be_bytes(bytes[20..24].try_into().unwrap());
-    let payload_len = u32::from_be_bytes(bytes[24..28].try_into().unwrap()) as usize;
+    let client = be_u32(bytes, 8);
+    let config_digest = be_u64(bytes, 12);
+    let round = be_u32(bytes, 20);
+    let payload_len = be_u32(bytes, 24) as usize;
     let total = HEADER_BYTES
         .checked_add(payload_len)
         .and_then(|t| t.checked_add(4))
@@ -329,7 +330,7 @@ fn check(bytes: &[u8]) -> Result<(Header, &[u8]), PersistError> {
     if bytes.len() > total {
         return Err(PersistError::Corrupt("trailing bytes after CRC"));
     }
-    let crc = u32::from_be_bytes(bytes[total - 4..].try_into().unwrap());
+    let crc = be_u32(bytes, total - 4);
     if crc != crc32(&[&bytes[..total - 4]]) {
         return Err(PersistError::BadCrc);
     }

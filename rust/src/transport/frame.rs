@@ -24,6 +24,7 @@
 use std::io::{Read, Write};
 
 use crate::transport::TransportError;
+use crate::util::bytes::{be_u32, be_u64};
 
 /// Frame magic (distinct from the payload codec's 0x5BC0 so a desynced
 /// stream cannot be mistaken for a frame boundary).
@@ -212,10 +213,10 @@ pub fn read_frame(r: &mut impl Read, f: &mut FrameBuf) -> Result<(), TransportEr
         return Err(TransportError::VersionMismatch { ours: PROTOCOL_VERSION, theirs: head[2] });
     }
     let kind = FrameKind::from_tag(head[3])?;
-    let round = u32::from_be_bytes(head[8 - 4..12 - 4].try_into().unwrap());
-    let client = u32::from_be_bytes(head[12 - 4..16 - 4].try_into().unwrap());
-    let payload_bits = u32::from_be_bytes(head[16 - 4..20 - 4].try_into().unwrap());
-    let crc_wire = u32::from_be_bytes(head[20 - 4..24 - 4].try_into().unwrap());
+    let round = be_u32(&head, 8 - 4);
+    let client = be_u32(&head, 12 - 4);
+    let payload_bits = be_u32(&head, 16 - 4);
+    let crc_wire = be_u32(&head, 20 - 4);
     let payload_len = len - (INNER_HEADER + CRC_BYTES) as u64;
     if payload_len != (payload_bits as u64).div_ceil(8) {
         return Err(TransportError::BadFrame(format!(
@@ -288,11 +289,11 @@ impl Hello {
             return Err(TransportError::BadFrame(format!("hello payload {} bytes", b.len())));
         }
         Ok(Hello {
-            client: u32::from_be_bytes(b[0..4].try_into().unwrap()),
-            clients: u32::from_be_bytes(b[4..8].try_into().unwrap()),
-            n_params: u64::from_be_bytes(b[8..16].try_into().unwrap()),
+            client: be_u32(b, 0),
+            clients: be_u32(b, 4),
+            n_params: be_u64(b, 8),
             wire_version: b[16],
-            config_digest: u64::from_be_bytes(b[17..25].try_into().unwrap()),
+            config_digest: be_u64(b, 17),
         })
     }
 
@@ -338,9 +339,9 @@ impl HelloAck {
             return Err(TransportError::BadFrame(format!("hello-ack payload {} bytes", b.len())));
         }
         Ok(HelloAck {
-            round: u32::from_be_bytes(b[0..4].try_into().unwrap()),
+            round: be_u32(b, 0),
             wire_version: b[4],
-            resume_round: u32::from_be_bytes(b[5..9].try_into().unwrap()),
+            resume_round: be_u32(b, 5),
         })
     }
 
@@ -360,7 +361,7 @@ pub fn decode_done(b: &[u8]) -> Result<u64, TransportError> {
     if b.len() < 8 {
         return Err(TransportError::BadFrame(format!("done payload {} bytes", b.len())));
     }
-    Ok(u64::from_be_bytes(b[0..8].try_into().unwrap()))
+    Ok(be_u64(b, 0))
 }
 
 /// On-the-wire bits of a full `Done` frame.

@@ -77,8 +77,8 @@ impl Read for LoopbackStream {
             }
         }
         let n = out.len().min(st.buf.len());
-        for slot in out.iter_mut().take(n) {
-            *slot = st.buf.pop_front().unwrap();
+        for (slot, byte) in out.iter_mut().zip(st.buf.drain(..n)) {
+            *slot = byte;
         }
         Ok(n)
     }

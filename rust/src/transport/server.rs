@@ -321,7 +321,11 @@ impl FederatedServer {
             // decode + account in client-index order, exactly like the
             // in-process read-back
             for ci in 0..nclients {
-                let pkt = slots[ci].as_ref().expect("slot filled above");
+                let Some(pkt) = slots[ci].as_ref() else {
+                    return Err(TransportError::Protocol(format!(
+                        "internal: client {ci} slot empty after barrier"
+                    )));
+                };
                 message::decode_into(&pkt.payload, pkt.bits, &mut decoded[ci]).map_err(|e| {
                     TransportError::Protocol(format!("client {ci} update undecodable: {e}"))
                 })?;
@@ -360,8 +364,9 @@ impl FederatedServer {
 
             compress_broadcast_into(&delta, round as u32, &mut down_msg);
             let (bytes, bits) = down_wire.encode(&down_msg);
-            message::decode_into(bytes, bits, &mut down_decoded)
-                .expect("downstream roundtrip failed");
+            message::decode_into(bytes, bits, &mut down_decoded).map_err(|e| {
+                TransportError::Protocol(format!("downstream self-roundtrip failed: {e}"))
+            })?;
             let bytes = Arc::new(bytes.to_vec());
             down_decoded.densify_into(&self.layout, Granularity::Global, 1.0, &mut delta_rx);
             tensor::add_assign(&mut master, &delta_rx);
@@ -435,7 +440,11 @@ impl FederatedServer {
                 }
             }
             for slot in slots.iter_mut() {
-                let pkt = slot.take().expect("slot filled above");
+                let Some(pkt) = slot.take() else {
+                    return Err(TransportError::Protocol(
+                        "internal: client slot empty after barrier".into(),
+                    ));
+                };
                 // a send failure means that handler died; its client will
                 // reconnect and be served from the cache
                 let _ = pkt.reply.send(reply.clone());

@@ -204,7 +204,7 @@ impl<'a> Session<'a> {
         reply: &mut FrameBuf,
     ) -> Result<(), TransportError> {
         self.ensure_conn(reply)?;
-        let conn = self.conn.as_mut().expect("ensure_conn succeeded");
+        let Some(conn) = self.conn.as_mut() else { return Err(TransportError::Closed) };
         conn.send(update)?;
         loop {
             conn.recv(reply)?;
@@ -355,7 +355,9 @@ pub fn run_client_resumable<B: TrainBackend>(
         c.pipeline.compress_into(&acc, &layout, round as u32, &mut c.msg);
         let (bytes, bits) = c.wire.encode(&c.msg);
         update.set(FrameKind::Update, round as u32, id as u32, bytes, bits);
-        message::decode_into(bytes, bits, &mut c.decoded).expect("wire roundtrip failed");
+        message::decode_into(bytes, bits, &mut c.decoded).map_err(|e| {
+            TransportError::Protocol(format!("client {id} self-roundtrip failed: {e}"))
+        })?;
         c.up_bits += bits;
 
         session.exchange(&update, &mut reply)?;
@@ -483,12 +485,18 @@ where
             let mut backend = make_backend(job.id);
             job.out = Some(run_client(cfg, job.id, &*job.connector, &mut backend));
         });
-        server_thread.join().expect("server thread panicked")
+        match server_thread.join() {
+            Ok(r) => r,
+            Err(_) => Err(TransportError::Protocol("server thread panicked".into())),
+        }
     });
 
     let mut outcomes = Vec::with_capacity(jobs.len());
     for job in jobs {
-        outcomes.push(job.out.expect("pool ran every job")?);
+        let Some(out) = job.out else {
+            return Err(TransportError::Protocol(format!("client {} job never ran", job.id)));
+        };
+        outcomes.push(out?);
     }
     Ok((server_result?, outcomes))
 }

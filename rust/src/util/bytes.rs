@@ -1,0 +1,54 @@
+//! Panic-free big-endian field readers for length-checked byte slices.
+//!
+//! The wire-frame and snapshot decoders read fixed-width integers out of
+//! buffers whose length was already validated. The obvious
+//! `slice.try_into().unwrap()` idiom compiles to the same code but puts a
+//! literal `unwrap` in the decode path, which `sbc-lint`'s `no-panic`
+//! rule (and the repo invariant it mechanizes: corrupt input must fail
+//! typed, never panic) forbids. These helpers centralize the pattern;
+//! callers must have bounds-checked `off + width` themselves, exactly as
+//! they had to for the `try_into` form.
+
+/// Big-endian `u16` from `b[off..off + 2]`.
+#[inline]
+pub fn be_u16(b: &[u8], off: usize) -> u16 {
+    u16::from_be_bytes([b[off], b[off + 1]])
+}
+
+/// Big-endian `u32` from `b[off..off + 4]`.
+#[inline]
+pub fn be_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_be_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// Big-endian `u64` from `b[off..off + 8]`.
+#[inline]
+pub fn be_u64(b: &[u8], off: usize) -> u64 {
+    let mut v = 0u64;
+    for i in 0..8 {
+        v = (v << 8) | b[off + i] as u64;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_against_to_be_bytes() {
+        let u = 0x0123_4567_89AB_CDEFu64;
+        let b = u.to_be_bytes();
+        assert_eq!(be_u64(&b, 0), u);
+        assert_eq!(be_u32(&b, 0), 0x0123_4567);
+        assert_eq!(be_u32(&b, 4), 0x89AB_CDEF);
+        assert_eq!(be_u16(&b, 2), 0x4567);
+    }
+
+    #[test]
+    fn offsets_in_longer_buffers() {
+        let mut b = vec![0xFFu8; 3];
+        b.extend_from_slice(&0xDEAD_BEEFu32.to_be_bytes());
+        assert_eq!(be_u32(&b, 3), 0xDEAD_BEEF);
+    }
+}

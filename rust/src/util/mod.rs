@@ -1,5 +1,6 @@
 //! Small shared substrates: deterministic RNG, flat-tensor math, timers.
 
+pub mod bytes;
 pub mod rng;
 pub mod stats;
 pub mod tensor;

@@ -1,8 +1,19 @@
 //! Lightweight scoped timing + aggregate counters for the perf pass.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
-use std::time::Instant;
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::simnet::clock::{Clock, RealClock};
+
+/// Process-wide wall clock for spans. Timers aggregate real elapsed time
+/// by design (they feed the perf report, not training results), so this
+/// is the one sanctioned consumer of [`RealClock`] outside the round
+/// loop; everything else threads a `&dyn Clock`.
+fn wall() -> &'static RealClock {
+    static WALL: OnceLock<RealClock> = OnceLock::new();
+    WALL.get_or_init(RealClock::new)
+}
 
 /// Global (process-wide) phase timer registry. Cheap enough to leave on:
 /// one mutex lock per recorded span, and spans are per-round, not per-step.
@@ -50,17 +61,17 @@ impl Timers {
 /// RAII span: `let _t = span("encode");`
 pub struct Span {
     name: &'static str,
-    start: Instant,
+    start: Duration,
 }
 
 /// Start a span that records into [`TIMERS`] when dropped.
 pub fn span(name: &'static str) -> Span {
-    Span { name, start: Instant::now() }
+    Span { name, start: wall().now() }
 }
 
 impl Drop for Span {
     fn drop(&mut self) {
-        TIMERS.record(self.name, self.start.elapsed().as_secs_f64());
+        TIMERS.record(self.name, wall().now().saturating_sub(self.start).as_secs_f64());
     }
 }
 

@@ -1,0 +1,48 @@
+//! Lint fixture: a tree that must produce ZERO findings. Every line
+//! here is a trap a grep gate would trip over — banned words inside
+//! strings, raw strings, comments, char literals — plus one real
+//! violation covered by a used suppression, and test-only code.
+
+pub fn describe() -> &'static str {
+    // unwrap() and panic! in a comment are not code
+    "corrupt input must not panic!: no .unwrap() in decode paths"
+}
+
+pub fn raw_doc() -> &'static str {
+    r#"grep would flag this .unwrap() and File::create( and partial_cmp( — the lexer must not"#
+}
+
+pub fn bytes_doc() -> &'static [u8] {
+    b"Instant::now() and HashMap inside a byte string"
+}
+
+pub fn punctuation_chars() -> (char, char, char) {
+    // a lexer that mis-parses '(' as an opening paren desyncs here
+    ('(', '"', '\'')
+}
+
+pub fn lifetime_soup<'a>(x: &'a str) -> &'a str {
+    x
+}
+
+pub fn sanctioned(v: Option<u32>) -> u32 {
+    // sbc-lint: allow(no-panic) -- fixture: exercising a *used* suppression
+    v.unwrap()
+}
+
+/* block comments can nest /* .unwrap() */ and still close cleanly */
+pub fn after_block() -> u32 {
+    0x5BC0
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap_and_panic() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+        if false {
+            panic!("tests are exempt");
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Lint fixture (clean tree): the sanctioned durability sequence —
+//! create-new, write, `sync_all`, then rename — produces no findings.
+
+use std::fs::OpenOptions;
+
+pub fn atomic_write(tmp: &str, final_path: &str, bytes: &[u8]) -> std::io::Result<()> {
+    let mut f = OpenOptions::new().write(true).create_new(true).open(tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    std::fs::rename(tmp, final_path)?;
+    Ok(())
+}

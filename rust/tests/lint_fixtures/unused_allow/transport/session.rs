@@ -1,0 +1,13 @@
+//! Lint fixture: suppressions that rot must become errors. The first
+//! allow targets a line with no finding (`unused-allow`); the second is
+//! malformed — no reason (`bad-allow`).
+
+pub fn fine() -> u32 {
+    // sbc-lint: allow(no-panic) -- stale: the unwrap below was removed
+    1 + 2
+}
+
+pub fn also_fine() -> u32 {
+    // sbc-lint: allow(no-panic)
+    3
+}

@@ -1,0 +1,20 @@
+//! Lint fixture: correct frozen wire constants, except `TAG_DENSE` is
+//! defined twice (a `wire-freeze` duplicate) — plus a stray `.expect()`.
+
+const MAGIC: u64 = 0x5BC0;
+pub const WIRE_VERSION: u8 = 2;
+const TAG_DENSE: u64 = 0;
+const TAG_SPARSE_F32: u64 = 1;
+const TAG_SPARSE_BINARY: u64 = 2;
+const TAG_SIGN: u64 = 3;
+const TAG_TERNARY: u64 = 4;
+const TAG_QUANTIZED: u64 = 5;
+const TAG_SIGN_MEANS: u64 = 6;
+
+// a second definition of a frozen constant must be flagged even though
+// the value matches: two sites can drift independently later
+const TAG_DENSE: u64 = 0;
+
+pub fn decode(b: &[u8]) -> u64 {
+    u64::from_be_bytes(b[0..8].try_into().expect("8 bytes"))
+}

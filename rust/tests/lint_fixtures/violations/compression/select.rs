@@ -1,0 +1,25 @@
+//! Lint fixture: seeded `no-panic` violations in a compression/ path.
+//! Never compiled — scanned by `sbc-lint` in `rust/tests/lint.rs`.
+
+pub fn top_k(x: &[f32], k: usize) -> f32 {
+    let mut v = x.to_vec();
+    // the exact pattern the legacy CI grep gate matched:
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[k]
+}
+
+pub fn threshold(x: &[f32]) -> f32 {
+    if x.is_empty() {
+        panic!("empty segment");
+    }
+    unsafe { *x.get_unchecked(0) }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let v = vec![1.0f32];
+        assert_eq!(v.first().unwrap(), &1.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Lint fixture: a `HashSet` in the aggregation path (`determinism` —
+//! iteration order would feed the float reduction).
+
+use std::collections::HashSet;
+
+pub fn seen_clients() -> HashSet<u32> {
+    HashSet::new()
+}

@@ -1,0 +1,5 @@
+//! Lint fixture: a watched wire-constant name defined outside its
+//! registered home (`wire-freeze`) — a second `MAGIC` elsewhere is how
+//! encode/decode drift starts.
+
+pub const MAGIC: u8 = 3;

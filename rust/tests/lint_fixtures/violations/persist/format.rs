@@ -1,0 +1,20 @@
+//! Lint fixture: `persist/` violations — missing frozen `VERSION`
+//! (`wire-freeze`), a bare `File::create` and a `rename` with no
+//! preceding `sync_all` (`durability`), a `HashMap` (`determinism`) and
+//! an `.unwrap()` (`no-panic`).
+
+use std::collections::HashMap;
+use std::fs::File;
+
+pub const MAGIC: u32 = 0x5342_434B;
+
+pub fn save(path: &str, bytes: &[u8]) {
+    // the exact pattern the legacy CI grep gate matched:
+    let mut f = File::create(path).unwrap();
+    f.write_all(bytes);
+    std::fs::rename(path, "final.bin");
+}
+
+pub fn index() -> HashMap<String, u32> {
+    HashMap::new()
+}

@@ -1,0 +1,9 @@
+//! Lint fixture: a frozen constant with the wrong value (`wire-freeze`
+//! mismatch) and an unfinished decode path (`no-panic`).
+
+pub const MAGIC: u16 = 0xDEAD;
+pub const PROTOCOL_VERSION: u8 = 1;
+
+pub fn decode_frame(_b: &[u8]) -> Frame {
+    todo!("frame decoding")
+}

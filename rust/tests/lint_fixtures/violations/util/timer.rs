@@ -1,0 +1,8 @@
+//! Lint fixture: a wall-clock read outside `simnet/clock.rs`
+//! (`clock-discipline`).
+
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    Instant::now()
+}
